@@ -1,0 +1,206 @@
+"""Counting-strategy benchmarks — one function per paper table/figure.
+
+The paper's experiment (Figs. 3-4, Table 5) measures ct-table construction
+inside a FACTORBASE structure-learning run, per caching strategy.  The search
+loop itself is strategy-independent (the same family stream is scored), so we
+benchmark each strategy against a *fixed, deterministic family workload*:
+``prepare()`` (the pre-search phase) followed by ``family_ct`` + BDeu for an
+enumerated set of (child, parents) families per lattice point.  This isolates
+exactly the quantity the paper reports — ct construction time — without the
+hill-climb's move-evaluation noise.
+
+Each (dataset x strategy) run yields all three artefacts at once:
+  * fig3_runtime  — time decomposition metadata / positive ct / negative ct
+  * fig4_memory   — peak cache footprint (resident ct bytes)
+  * table5_sizes  — summed family-ct rows vs the global PRECOUNT ct rows
+"""
+
+from __future__ import annotations
+
+import itertools
+import json
+import time
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.bdeu import family_score
+from repro.core.database import PAPER_DATASETS, RelationalDB, paper_benchmark_db
+from repro.core.strategies import STRATEGIES, make_strategy
+from repro.core.variables import build_lattice
+
+# Per-dataset scale factors: keep CPU wall-time per (dataset x strategy) run
+# in the tens of seconds while preserving the paper's size *ordering*
+# (UW < ... < VisualGenome).  --scale multiplies these.
+DEFAULT_SCALES: Dict[str, float] = {
+    "UW": 1.0, "Mondial": 1.0, "Mutagenesis": 1.0, "Hepatitis": 1.0,
+    "MovieLens": 1.0, "Financial": 0.4, "IMDb": 0.15, "VisualGenome": 0.05,
+}
+# ONDEMAND re-runs the JOINs per family; the paper reports it timing out on
+# the two largest databases.  We enforce the same behaviour with a soft
+# per-run budget (seconds) checked between families.
+TIME_BUDGET_S = 300.0
+
+
+def family_workload(db: RelationalDB, lattice, max_parents: int = 3,
+                    per_point: int = 400) -> List[Tuple]:
+    """Deterministic stream of (point, keep) families, mimicking what
+    hill-climbing generates: every child with parent sets of size 0..k,
+    round-robin over children, capped per lattice point.  The cap is sized
+    so each point sees a realistic search stream (hundreds of families) —
+    this is what makes ONDEMAND re-run its JOINs, as in the paper."""
+    out: List[Tuple] = []
+    for point in lattice:
+        nodes = list(point.all_ct_vars(db.schema, include_rind=True))
+        fams = []
+        for child in nodes:
+            others = [v for v in nodes if v != child]
+            for k in range(0, max_parents + 1):
+                for parents in itertools.combinations(others[:7], k):
+                    fams.append((point, tuple(sorted(parents)) + (child,)))
+        # interleave children so truncation keeps diversity
+        fams.sort(key=lambda f: (len(f[1]), str(f[1][-1])))
+        out.extend(fams[:per_point])
+    return out
+
+
+@dataclass
+class RunRecord:
+    dataset: str
+    strategy: str
+    rows: int
+    families: int
+    completed: bool
+    wall_s: float
+    time_metadata: float
+    time_positive: float
+    time_negative: float
+    joins: int
+    rows_scanned: int
+    peak_bytes: int
+    ct_rows: int
+
+    def as_dict(self) -> dict:
+        return self.__dict__.copy()
+
+
+def run_one(name: str, strategy_name: str, scale: Optional[float] = None,
+            budget_s: float = TIME_BUDGET_S, seed: int = 0,
+            use_kernel_mobius: bool = False) -> RunRecord:
+    scale = DEFAULT_SCALES[name] if scale is None else scale
+    db = paper_benchmark_db(name, seed=seed, scale=scale)
+    lattice = build_lattice(db.schema, max_length=2)
+    work = family_workload(db, lattice)
+
+    kw = {}
+    if use_kernel_mobius:
+        from repro.kernels.ops import mobius_nd
+        kw["mobius_fn"] = mobius_nd
+    strat = make_strategy(strategy_name, **kw)
+
+    t0 = time.perf_counter()
+    completed = True
+    strat.prepare(db, lattice)
+    done = 0
+    for point, keep in work:
+        if time.perf_counter() - t0 > budget_s:
+            completed = False            # the paper's "exceeded runtime limit"
+            break
+        tab = strat.family_ct(point, keep)
+        family_score(tab, keep[-1])
+        done += 1
+    wall = time.perf_counter() - t0
+    st = strat.stats
+    return RunRecord(
+        dataset=name, strategy=strategy_name, rows=db.total_rows,
+        families=done, completed=completed, wall_s=round(wall, 2),
+        time_metadata=round(st.time_metadata, 3),
+        time_positive=round(st.time_positive, 3),
+        time_negative=round(st.time_negative, 3),
+        joins=st.joins, rows_scanned=st.rows_scanned,
+        peak_bytes=st.peak_bytes, ct_rows=st.ct_rows)
+
+
+def run_all(datasets: Sequence[str] = PAPER_DATASETS,
+            strategies: Sequence[str] = ("PRECOUNT", "ONDEMAND", "HYBRID"),
+            scale: Optional[float] = None,
+            budget_s: float = TIME_BUDGET_S) -> List[RunRecord]:
+    recs = []
+    for name in datasets:
+        for s in strategies:
+            r = run_one(name, s, scale=scale, budget_s=budget_s)
+            flag = "" if r.completed else "  [TIMEOUT]"
+            print(f"[counting] {name:13s} {s:9s} wall={r.wall_s:7.2f}s "
+                  f"meta={r.time_metadata:6.2f} pos={r.time_positive:6.2f} "
+                  f"neg={r.time_negative:6.2f} joins={r.joins:5d} "
+                  f"peakMB={r.peak_bytes / 1e6:9.2f}{flag}", flush=True)
+            recs.append(r)
+    return recs
+
+
+# ------------------------------------------------------------- paper views --
+
+def fig3_runtime(recs: List[RunRecord]) -> List[dict]:
+    """Fig. 3: stacked time decomposition per (dataset, strategy)."""
+    return [{"dataset": r.dataset, "strategy": r.strategy,
+             "metadata_s": r.time_metadata, "positive_s": r.time_positive,
+             "negative_s": r.time_negative,
+             "total_s": round(r.time_metadata + r.time_positive
+                              + r.time_negative, 3),
+             "completed": r.completed} for r in recs]
+
+
+def fig4_memory(recs: List[RunRecord]) -> List[dict]:
+    """Fig. 4: peak resident ct-cache bytes per (dataset, strategy)."""
+    return [{"dataset": r.dataset, "strategy": r.strategy,
+             "peak_mb": round(r.peak_bytes / 1e6, 3)} for r in recs]
+
+
+def table5_sizes(recs: List[RunRecord]) -> List[dict]:
+    """Table 5: summed family-ct rows (ONDEMAND/HYBRID) vs global-ct rows
+    (PRECOUNT) per dataset."""
+    by = {(r.dataset, r.strategy): r for r in recs}
+    out = []
+    for name in dict.fromkeys(r.dataset for r in recs):
+        row = {"dataset": name}
+        h = by.get((name, "HYBRID"))
+        p = by.get((name, "PRECOUNT"))
+        if h:
+            row["ct_family_rows"] = h.ct_rows
+        if p:
+            row["ct_database_rows"] = p.ct_rows
+        out.append(row)
+    return out
+
+
+def main(out_dir: str = "results/bench", scale: Optional[float] = None,
+         datasets: Sequence[str] = PAPER_DATASETS,
+         budget_s: float = TIME_BUDGET_S, spotlight: bool = True) -> dict:
+    recs = run_all(datasets=datasets, scale=scale, budget_s=budget_s)
+    art = {
+        "runs": [r.as_dict() for r in recs],
+        "fig3_runtime": fig3_runtime(recs),
+        "fig4_memory": fig4_memory(recs),
+        "table5_sizes": table5_sizes(recs),
+    }
+    if spotlight:
+        # the paper's headline: hybrid counting scales to millions of facts.
+        # Full-scale VisualGenome (15.8M rows) / IMDb (1.06M rows), HYBRID.
+        spot = []
+        for name, sc in (("IMDb", 1.0), ("VisualGenome", 1.0)):
+            r = run_one(name, "HYBRID", scale=sc, budget_s=1200.0)
+            print(f"[spotlight] {name} rows={r.rows} HYBRID "
+                  f"wall={r.wall_s}s pos={r.time_positive} "
+                  f"neg={r.time_negative} completed={r.completed}",
+                  flush=True)
+            spot.append(r.as_dict())
+        art["spotlight_full_scale"] = spot
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "counting.json").write_text(json.dumps(art, indent=1))
+    print(f"[counting] wrote {out / 'counting.json'}")
+    return art
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Pallas-kernel micro-benchmarks: shape sweeps, correctness vs the jnp
+oracle, and us/call timings.
+
+This container is CPU-only, so timings come from two paths:
+  * ``interpret=True`` Pallas — correctness of the kernel *body* (what the
+    dry-run cannot exercise);
+  * the jnp reference — the XLA-compiled roofline stand-in on this host.
+
+Real-TPU timing is out of scope here; the kernels' VMEM/BlockSpec reasoning
+is recorded in EXPERIMENTS.md §Perf and the per-kernel headers.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Callable, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn: Callable, *args, reps: int = 5) -> float:
+    fn(*args)                              # compile / warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6   # us
+
+
+def bench_mobius() -> List[dict]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for k in (1, 2, 3, 4, 6):
+        for d in (128, 2048, 16384):
+            x = jax.random.uniform(key, (1 << k, d), jnp.float32) * 100
+            want = ref.mobius_ref(x)
+            got = ops.mobius(x, interpret=True)
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+            us_ref = _time(jax.jit(ref.mobius_ref), x)
+            us_int = _time(lambda a: ops.mobius(a, interpret=True), x)
+            rows.append({"kernel": "mobius", "k": k, "d": d,
+                         "us_ref": round(us_ref, 1),
+                         "us_interpret": round(us_int, 1)})
+    return rows
+
+
+def bench_hist() -> List[dict]:
+    rows = []
+    key = jax.random.PRNGKey(1)
+    for n, p, d in ((4096, 64, 128), (65536, 256, 128), (262144, 1024, 64)):
+        codes = jax.random.randint(key, (n,), 0, p, jnp.int32)
+        vals = jax.random.uniform(key, (n, d), jnp.float32)
+        want = ref.segment_hist_ref(codes, vals, p)
+        got = ops.segment_hist(codes, vals, p, interpret=True)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-2)
+        us_ref = _time(lambda c, v: ref.segment_hist_ref(c, v, p), codes, vals)
+        # interpret mode executes the kernel body in Python — time it only
+        # for shapes where that stays in the seconds range (the big grid is
+        # still correctness-checked above)
+        us_int = (None if n > 100_000 else round(_time(
+            lambda c, v: ops.segment_hist(c, v, p, interpret=True),
+            codes, vals, reps=1), 1))
+        rows.append({"kernel": "segment_hist", "n": n, "segments": p, "d": d,
+                     "us_ref": round(us_ref, 1),
+                     "us_interpret": us_int})
+    return rows
+
+
+def bench_bdeu() -> List[dict]:
+    rows = []
+    key = jax.random.PRNGKey(2)
+    for q, r in ((64, 8), (1024, 16), (8192, 4)):
+        nijk = jax.random.poisson(key, 3.0, (q, r)).astype(jnp.float32)
+        want = ref.bdeu_ref(nijk, 1.0, q, r)
+        got = ops.bdeu(nijk, ess=1.0, interpret=True)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)
+        us_ref = _time(jax.jit(lambda x: ref.bdeu_ref(x, 1.0, q, r)), nijk)
+        us_int = _time(lambda x: ops.bdeu(x, ess=1.0, interpret=True), nijk)
+        rows.append({"kernel": "bdeu", "q": q, "r": r,
+                     "us_ref": round(us_ref, 1),
+                     "us_interpret": round(us_int, 1)})
+    return rows
+
+
+def main(out_dir: str = "results/bench") -> List[dict]:
+    rows = bench_mobius() + bench_hist() + bench_bdeu()
+    for r in rows:
+        print("[kernels] " + ",".join(f"{k}={v}" for k, v in r.items()),
+              flush=True)
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "kernels.json").write_text(json.dumps(rows, indent=1))
+    print(f"[kernels] wrote {out / 'kernels.json'}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""The paper's technique INSIDE the training framework: monitor MoE routing
+with hybrid count-caching.
+
+A probe batch is traced through a (reduced) qwen3-MoE model; each layer's
+top-k assignments become a relational database (tokens x experts with a
+``Routed`` relationship), and the HYBRID strategy answers contingency
+questions — including *negative* relationships ("expert e did NOT see bucket
+b tokens"), which is the paper's negation problem solved by the Möbius join
+with zero extra passes over the trace.
+
+Run:  PYTHONPATH=src python examples/moe_routing_monitor.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.models.model import build_model
+from repro.train.monitor import routing_ct, routing_db, routing_trace
+
+
+def main():
+    cfg = get_reduced("qwen3-moe-30b-a3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    b, s = 4, 64
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    trace = routing_trace(model, params, {"tokens": tokens})
+    print(f"model: {cfg.name} ({cfg.n_experts} experts, top-{cfg.top_k}); "
+          f"trace shape {trace.shape}  [L, B, S, K]")
+
+    buckets = (tokens % 4).astype(jnp.int32)       # token-id buckets
+    for layer in (0, cfg.n_layers - 1):
+        db = routing_db(trace[layer], buckets, cfg.n_experts)
+        tab, stats = routing_ct(db)
+        print(f"\nlayer {layer}: Routed(token, expert) — "
+              f"{db.relations['Routed'].num_edges} edges")
+        print(f"  complete ct-table axes: "
+              f"{[str(v) for v in tab.vars]}  shape {tab.counts.shape}")
+        print(f"  routed pairs {stats['routed_pairs']:.0f} / "
+              f"possible {stats['pairs_total']:.0f} "
+              f"(fraction {stats['routed_fraction']:.4f}) — "
+              f"negative counts from the Möbius join, "
+              f"{stats['joins']} JOIN sweep(s)")
+    print("\nOK — hybrid count-caching is serving the training loop.")
+
+
+if __name__ == "__main__":
+    main()

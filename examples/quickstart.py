@@ -1,0 +1,50 @@
+"""Quickstart: the paper's technique in ~60 lines.
+
+1. Build a small relational database (university schema: students, courses,
+   profs, Registered/RA relationships) with planted dependencies.
+2. Run statistical-relational model discovery with the HYBRID counts cache
+   (the paper's contribution): positive ct-tables are pre-counted per
+   relationship-chain lattice point, negation is post-counted per family via
+   the Möbius join.
+3. Print the learned first-order Bayesian network and the counting stats.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core.database import paper_benchmark_db
+from repro.core.search import discover_model
+from repro.core.strategies import make_strategy
+
+
+def main():
+    db = paper_benchmark_db("UW", seed=0)          # 712-row university DB
+    print(f"database: UW-like, {db.total_rows} rows, "
+          f"{len(db.relations)} relationships")
+
+    strategy = make_strategy("HYBRID")
+    models, strategy = discover_model(db, strategy,
+                                      max_chain_length=2, max_parents=2)
+
+    print("\nlearned first-order Bayesian networks (per lattice point):")
+    for point, model in models.items():
+        rels = ",".join(sorted(point.rels))
+        print(f"  lattice point [{rels}]  score={model.score:.1f}")
+        for parent, child in model.edges():
+            print(f"    {parent} -> {child}")
+
+    st = strategy.stats.as_dict()
+    print("\ncounting stats (the paper's metrics):")
+    print(f"  table JOIN sweeps      : {st['joins']}")
+    print(f"  edge rows scanned      : {st['rows_scanned']}")
+    print(f"  positive-ct time       : {st['time_positive']:.2f}s  (pre-counted)")
+    print(f"  negative-ct time       : {st['time_negative']:.2f}s  (Möbius, post-counted)")
+    print(f"  peak ct-cache bytes    : {st['peak_bytes']:,}")
+
+
+if __name__ == "__main__":
+    main()

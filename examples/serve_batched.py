@@ -1,0 +1,93 @@
+"""Serve a small model with batched requests: prefill + decode loop.
+
+A toy continuous-batching server core: a batch of prompts is prefilled once
+(building the KV cache), then tokens are decoded step-by-step with greedy
+sampling against the preallocated, fixed-shape cache — the same
+``prefill`` / ``decode_step`` code paths the 512-chip dry-run lowers, here on
+the local CPU mesh with a reduced config.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py [arch] [n_new_tokens]
+      default: qwen2.5-3b (reduced), 24 new tokens, batch of 4 requests.
+"""
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.launch.mesh import make_local_mesh
+from repro.models.model import build_model
+from repro.train.step import make_decode_step, make_prefill_step
+
+
+def main():
+    arch = sys.argv[1] if len(sys.argv) > 1 else "qwen2.5-3b"
+    n_new = int(sys.argv[2]) if len(sys.argv) > 2 else 24
+    cfg = get_reduced(arch)
+    if cfg.enc_dec or cfg.embeds_input:
+        print(f"{arch} needs a frontend stub; use a decoder-only arch")
+        return
+    model = build_model(cfg)
+    mesh = make_local_mesh()
+
+    batch_size, prompt_len, max_len = 4, 16, 16 + n_new
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (batch_size, prompt_len),
+                           dtype=np.int32)
+
+    with jax.sharding.set_mesh(mesh):
+        params = model.init(jax.random.PRNGKey(0))
+
+        # ---- prefill all requests at once -------------------------------
+        prefill = jax.jit(make_prefill_step(model))
+        t0 = time.perf_counter()
+        logits, prompt_cache = prefill(params, {"tokens": jnp.asarray(prompts)})
+        logits.block_until_ready()
+        t_prefill = time.perf_counter() - t0
+        print(f"prefill: {batch_size} requests x {prompt_len} tokens "
+              f"in {t_prefill * 1e3:.0f} ms")
+
+        # ---- copy the prompt KV into the preallocated max-length cache --
+        cache = model.init_cache(batch_size, max_len)
+        for k in ("k", "v"):
+            if k in cache:
+                cache[k] = jax.lax.dynamic_update_slice(
+                    cache[k], prompt_cache[k].astype(cache[k].dtype),
+                    (0,) * cache[k].ndim)
+        for k in prompt_cache:
+            if k not in ("k", "v"):
+                cache[k] = prompt_cache[k]
+
+        # ---- decode loop (greedy) ---------------------------------------
+        decode = jax.jit(make_decode_step(model, mesh=mesh, seq_sharded=False),
+                         donate_argnums=(1,))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        out = [np.asarray(tok)]
+        t0 = time.perf_counter()
+        for i in range(n_new - 1):
+            pos = jnp.asarray(prompt_len + i, jnp.int32)
+            logits, cache = decode(params, cache, {"token": tok, "pos": pos})
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            out.append(np.asarray(tok))
+        jax.block_until_ready(tok)
+        t_decode = time.perf_counter() - t0
+        toks_per_s = batch_size * (n_new - 1) / t_decode
+        print(f"decode: {n_new - 1} steps x {batch_size} requests in "
+              f"{t_decode * 1e3:.0f} ms  ({toks_per_s:.0f} tok/s batched)")
+
+    gen = np.concatenate(out, axis=1)
+    for b in range(batch_size):
+        print(f"request {b}: prompt={prompts[b, :6].tolist()}... "
+              f"generated={gen[b, :10].tolist()}...")
+    assert gen.shape == (batch_size, n_new)
+    print("OK — batched serving path works end-to-end.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""End-to-end driver: train a ~100M-parameter dense LM for a few hundred
+steps on the local mesh, with the full substrate — sharded parameters,
+microbatch gradient accumulation, AdamW with warmup+cosine, deterministic
+sharded data pipeline with prefetch, and atomic checkpoint/resume.
+
+Fault tolerance demo: the run checkpoints every ``--ckpt-every`` steps; kill
+it at any point and re-run with the same command — it resumes from the last
+checkpoint (the data pipeline is keyed by step, so the token stream continues
+exactly where it left off).
+
+Run:   PYTHONPATH=src python examples/train_100m.py --steps 300
+Quick: PYTHONPATH=src python examples/train_100m.py --steps 30 --tiny
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.models.config import ModelConfig
+
+
+def config_100m() -> ModelConfig:
+    # ~110M params: granite/llama-style dense decoder
+    return ModelConfig(
+        name="demo-100m", family="dense", n_layers=12, d_model=768,
+        n_heads=12, n_kv_heads=4, d_ff=2048, vocab=32768,
+        block="attn", mlp="swiglu", rope="rope",
+        attn_chunk=256, remat=False, scan_layers=True)
+
+
+def config_tiny() -> ModelConfig:
+    return config_100m().replace(name="demo-tiny", n_layers=2, d_model=128,
+                                 n_heads=4, n_kv_heads=2, d_ff=512,
+                                 vocab=2048)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--microbatch", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--tiny", action="store_true",
+                    help="2-layer stand-in for a fast smoke run")
+    args = ap.parse_args()
+
+    cfg = config_tiny() if args.tiny else config_100m()
+    print(f"model: {cfg.name}, {cfg.param_count() / 1e6:.1f}M params")
+
+    # reuse the production launcher end-to-end (this is the public API)
+    from repro.configs import register_config
+    from repro.launch import train as train_launcher
+    register_config(cfg.name, cfg)
+    losses = train_launcher.run([
+        "--arch", cfg.name, "--steps", str(args.steps),
+        "--batch", str(args.batch), "--seq", str(args.seq),
+        "--microbatch", str(args.microbatch),
+        "--ckpt-dir", args.ckpt_dir, "--ckpt-every", str(args.ckpt_every),
+        "--resume",
+    ])
+    if losses:
+        k = max(1, len(losses) // 10)
+        first, last = sum(losses[:k]) / k, sum(losses[-k:]) / k
+        print(f"\nloss: first-{k}-avg {first:.3f} -> last-{k}-avg {last:.3f}")
+        assert last < first, "loss did not decrease"
+        print("training makes progress — loss decreased.")
+
+
+if __name__ == "__main__":
+    main()

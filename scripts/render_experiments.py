@@ -1,0 +1,126 @@
+"""Render the generated tables of EXPERIMENTS.md from results/*.
+
+Replaces the blocks between <!-- BEGIN:<name> --> / <!-- END:<name> -->
+markers with freshly generated markdown.  Run after a dry-run sweep or
+benchmark run:  PYTHONPATH=src python scripts/render_experiments.py
+"""
+
+import json
+import re
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def load(dirname):
+    recs = []
+    for f in sorted((ROOT / dirname).glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("ok") and not r.get("tag"):
+            recs.append(r)
+    return recs
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 0.001:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def dryrun_table():
+    recs = load("results/dryrun")
+    rows = ["| arch | shape | mesh | chips | temp GB/chip | HLO TF/chip | "
+            "coll GB/chip | status |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        mem = (r["memory"]["temp_bytes"] or 0) / 1e9
+        tf = r["hlo_totals"]["flops"] / 1e12
+        cb = r["hlo_totals"]["coll_link_bytes"] / 1e9
+        rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                    f"{r['chips']} | {mem:.1f} | {tf:.1f} | {cb:.1f} | OK |")
+    return "\n".join(rows)
+
+
+def roofline_table():
+    recs = [r for r in load("results/dryrun") if r["mesh"] == "pod16x16"]
+    rows = ["| arch | shape | compute | memory | collective | bottleneck | "
+            "roofline frac | 6ND/HLO | one-line next lever |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    LEVER = {
+        "memory": "cut fusion-boundary traffic (Pallas flash/SSD kernels keep blocks in VMEM)",
+        "collective": "reshape collective schedule (EP/SP shard_map, smaller psum payloads)",
+        "compute": "raise MXU utilisation (larger blocks, fewer remat passes)",
+    }
+    for r in recs:
+        t = r["roofline"]
+        c, m, cl = t["t_compute_s"], t["t_memory_s"], t["t_collective_s"]
+        bound = max(c, m, cl)
+        frac = c / bound if bound else 0.0
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(c)} | {fmt_s(m)} | "
+            f"{fmt_s(cl)} | {t['bottleneck']} | {frac:.3f} | "
+            f"{r['useful_flops_ratio']:.2f} | {LEVER[t['bottleneck']]} |")
+    return "\n".join(rows)
+
+
+def counting_tables():
+    art = json.loads((ROOT / "results/bench/counting.json").read_text())
+    walls = {(r["dataset"], r["strategy"]): r["wall_s"] for r in art["runs"]}
+    out = ["**Fig. 3 analogue — ct-construction time decomposition "
+           "(seconds; fixed 400-family/point workload).**  `wall` includes "
+           "family scoring; PRECOUNT's per-family projections land there "
+           "(outside the paper's 3-component split), which is exactly its "
+           "search-time cost in the dense-tensor adaptation:", "",
+           "| dataset | strategy | metadata | positive ct | negative ct | "
+           "3-part total | wall | completed |", "|---|---|---|---|---|---|---|---|"]
+    for r in art["fig3_runtime"]:
+        w = walls.get((r["dataset"], r["strategy"]), "-")
+        out.append(f"| {r['dataset']} | {r['strategy']} | {r['metadata_s']} |"
+                   f" {r['positive_s']} | {r['negative_s']} | {r['total_s']} |"
+                   f" {w} |"
+                   f" {'yes' if r['completed'] else '**TIMEOUT**'} |")
+    out += ["", "**Fig. 4 analogue — peak resident ct-cache (MB):**", "",
+            "| dataset | PRECOUNT | ONDEMAND | HYBRID |", "|---|---|---|---|"]
+    mem = {}
+    for r in art["fig4_memory"]:
+        mem.setdefault(r["dataset"], {})[r["strategy"]] = r["peak_mb"]
+    for ds, m in mem.items():
+        out.append(f"| {ds} | {m.get('PRECOUNT','-')} | "
+                   f"{m.get('ONDEMAND','-')} | {m.get('HYBRID','-')} |")
+    out += ["", "**Table 5 analogue — ct rows, family-level vs global:**", "",
+            "| dataset | ct(family) rows (HYBRID) | ct(database) rows "
+            "(PRECOUNT) |", "|---|---|---|"]
+    for r in art["table5_sizes"]:
+        out.append(f"| {r['dataset']} | {r.get('ct_family_rows','-')} | "
+                   f"{r.get('ct_database_rows','-')} |")
+    if "spotlight_full_scale" in art:
+        out += ["", "**Full-scale spotlight (paper's headline — millions of "
+                "facts, HYBRID):**", ""]
+        for r in art["spotlight_full_scale"]:
+            out.append(f"* {r['dataset']}: {r['rows']:,} rows, "
+                       f"{r['families']} families scored in {r['wall_s']}s "
+                       f"(positive {r['time_positive']}s / Möbius "
+                       f"{r['time_negative']}s)")
+    return "\n".join(out)
+
+
+def main():
+    p = ROOT / "EXPERIMENTS.md"
+    text = p.read_text()
+    for name, gen in (("DRYRUN", dryrun_table), ("ROOFLINE", roofline_table),
+                      ("COUNTING", counting_tables)):
+        begin, end = f"<!-- BEGIN:{name} -->", f"<!-- END:{name} -->"
+        if begin in text:
+            block = f"{begin}\n{gen()}\n{end}"
+            text = re.sub(re.escape(begin) + ".*?" + re.escape(end), block,
+                          text, flags=re.S)
+    p.write_text(text)
+    print("EXPERIMENTS.md tables rendered")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Core library: the paper's contribution — pre/post/hybrid counts caching
+for scalable statistical-relational model discovery — as composable JAX
+modules."""
+
+from .schema import Attribute, EntityType, Relationship, Schema
+from .database import RelationalDB, synth_db, paper_benchmark_db, PAPER_DATASETS
+from .variables import (Var, Atom, CtVar, LatticePoint, attr_var, edge_var,
+                        rind_var, build_lattice, point_from_rels)
+from .ct import CtTable
+from .contract import CostStats, positive_ct, entity_hist
+from .mobius import complete_ct, superset_mobius
+from .strategies import Strategy, Precount, OnDemand, Hybrid, make_strategy, STRATEGIES
+from .bdeu import bdeu_score_2d, family_score
+from .search import StructureSearch, discover_model, BNModel
+
+__all__ = [
+    "Attribute", "EntityType", "Relationship", "Schema",
+    "RelationalDB", "synth_db", "paper_benchmark_db", "PAPER_DATASETS",
+    "Var", "Atom", "CtVar", "LatticePoint", "attr_var", "edge_var", "rind_var",
+    "build_lattice", "point_from_rels", "CtTable",
+    "CostStats", "positive_ct", "entity_hist",
+    "complete_ct", "superset_mobius",
+    "Strategy", "Precount", "OnDemand", "Hybrid", "make_strategy", "STRATEGIES",
+    "bdeu_score_2d", "family_score",
+    "StructureSearch", "discover_model", "BNModel",
+]

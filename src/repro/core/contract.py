@@ -1,0 +1,258 @@
+"""Positive ct-tables via tree tensor contraction (the JOIN problem on MXU).
+
+The SQL ``INNER JOIN + GROUP BY + COUNT(*)`` of FACTORBASE becomes a single
+message-passing sweep over the lattice point's variable tree:
+
+* per-variable one-hot attribute encodings,
+* per-relationship edge gathers + segment-sums (the join),
+* elementwise products at shared variables (the group-by combine).
+
+Each hop is ``gather → (outer) multiply → segment_sum`` — on TPU the one-hot
+multiply/accumulate maps onto the MXU (see ``kernels/hist_kernel.py``); here we
+express it with ``jax.ops.segment_sum`` so XLA can fuse it on any backend.
+
+Complexity: O(edges × D) per hop where D is the flattened value-space of the
+subtree — the paper's Eq. (3) growth, paid once per lattice point in
+PRECOUNT/HYBRID and once per family in ONDEMAND.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .ct import CtTable
+from .database import RelationalDB
+from .schema import Schema
+from .variables import Atom, CtVar, LatticePoint, Var, attr_var, edge_var
+
+
+@dataclass
+class CostStats:
+    """Instrumentation mirroring the paper's reported metrics."""
+    joins: int = 0                # number of edge-table join sweeps
+    rows_scanned: int = 0         # edge rows touched by joins
+    ct_cells: int = 0             # dense ct cells materialised
+    ct_rows: int = 0              # sparse-equivalent rows materialised
+    cache_bytes: int = 0          # live cache footprint (Fig. 4 proxy)
+    peak_bytes: int = 0
+    time_metadata: float = 0.0    # Fig. 3 decomposition
+    time_positive: float = 0.0
+    time_negative: float = 0.0
+
+    def bump_cache(self, delta: int) -> None:
+        self.cache_bytes += delta
+        self.peak_bytes = max(self.peak_bytes, self.cache_bytes)
+
+    class _Timer:
+        def __init__(self, stats: "CostStats", which: str) -> None:
+            self.stats, self.which = stats, which
+
+        def __enter__(self):
+            self.t0 = time.perf_counter()
+            return self
+
+        def __exit__(self, *exc):
+            dt = time.perf_counter() - self.t0
+            setattr(self.stats, f"time_{self.which}",
+                    getattr(self.stats, f"time_{self.which}") + dt)
+
+    def timer(self, which: str) -> "CostStats._Timer":
+        return CostStats._Timer(self, which)
+
+    def as_dict(self) -> Dict[str, float]:
+        return dict(joins=self.joins, rows_scanned=self.rows_scanned,
+                    ct_cells=self.ct_cells, ct_rows=self.ct_rows,
+                    cache_bytes=self.cache_bytes, peak_bytes=self.peak_bytes,
+                    time_metadata=self.time_metadata,
+                    time_positive=self.time_positive,
+                    time_negative=self.time_negative,
+                    time_total=self.time_metadata + self.time_positive
+                    + self.time_negative)
+
+
+# --------------------------------------------------------------------------
+# one-hot helpers
+# --------------------------------------------------------------------------
+
+def _onehot(codes: jnp.ndarray, card: int, dtype) -> jnp.ndarray:
+    return jax.nn.one_hot(codes, card, dtype=dtype)
+
+
+def _expand(msg: jnp.ndarray, mvars: List[CtVar],
+            hot: jnp.ndarray, hvar: CtVar) -> Tuple[jnp.ndarray, List[CtVar]]:
+    """(n, D) x (n, V) -> (n, D*V); track flattened axis order (row-major)."""
+    n, d = msg.shape
+    out = (msg[:, :, None] * hot[:, None, :]).reshape(n, d * hot.shape[1])
+    return out, mvars + [hvar]
+
+
+def entity_onehot(db: RelationalDB, var: Var, keep: Sequence[CtVar],
+                  dtype=jnp.float32) -> Tuple[jnp.ndarray, List[CtVar]]:
+    """(n_var, D) one-hot product over the kept attributes of ``var``."""
+    tab = db.entities[var.etype]
+    msg = jnp.ones((tab.size, 1), dtype=dtype)
+    mvars: List[CtVar] = []
+    for a in tab.type.attrs:
+        cv = attr_var(var, a.name, a.card)
+        if cv in keep:
+            msg, mvars = _expand(msg, mvars, _onehot(jnp.asarray(tab.attrs[a.name]), a.card, dtype), cv)
+    return msg, mvars
+
+
+def entity_hist(db: RelationalDB, var: Var, keep: Sequence[CtVar],
+                dtype=jnp.float32) -> CtTable:
+    """Histogram over kept attributes of one variable (metadata stage).
+
+    With no kept attributes this degenerates to the population size — the
+    Cartesian factor for an unconstrained variable."""
+    msg, mvars = entity_onehot(db, var, keep, dtype)
+    flat = jnp.sum(msg, axis=0)
+    counts = flat.reshape(tuple(v.card for v in mvars)) if mvars else flat[0]
+    return CtTable(tuple(mvars), counts)
+
+
+# --------------------------------------------------------------------------
+# tree contraction
+# --------------------------------------------------------------------------
+
+def positive_ct(db: RelationalDB, point: LatticePoint,
+                keep: Optional[Sequence[CtVar]] = None,
+                dtype=jnp.float32,
+                stats: Optional[CostStats] = None) -> CtTable:
+    """Positive ct-table ``ct_+`` of a lattice point: counts over value
+    combinations of ``keep`` among groundings where every relationship of the
+    point holds.  ``keep`` may contain entity-attr and edge-attr CtVars of the
+    point; defaults to all of them.  Indicator axes are *not* present (they
+    are all implicitly T) — the Möbius join adds them.
+    """
+    schema = db.schema
+    if keep is None:
+        keep = [v for v in point.all_ct_vars(schema, include_rind=False)]
+    keep = list(keep)
+
+    if not point.atoms:
+        raise ValueError("positive_ct needs at least one atom")
+
+    # var tree: adjacency var -> [(atom, other_var)]
+    adj: Dict[Var, List[Tuple[Atom, Var]]] = {}
+    for a in point.atoms:
+        adj.setdefault(a.src, []).append((a, a.dst))
+        adj.setdefault(a.dst, []).append((a, a.src))
+    # root at the tree centre (max degree): interior per-row messages stay
+    # one-hop wide, and the root-level product is deferred to the chunked
+    # Khatri-Rao contraction below instead of a full (n, prod D) expansion.
+    root = max(point.vars, key=lambda v: len(adj.get(v, ())))
+
+    def visit(v: Var, parent_atom: Optional[Atom]) -> Tuple[jnp.ndarray, List[CtVar]]:
+        msg, mvars = entity_onehot(db, v, keep, dtype)
+        for atom, u in adj.get(v, ()):  # children
+            if atom is parent_atom:
+                continue
+            child_msg, child_vars = visit(u, atom)
+            hop, hop_vars = _join_hop(db, atom, child=u, parent=v,
+                                      child_msg=child_msg, child_vars=child_vars,
+                                      keep=keep, dtype=dtype, stats=stats)
+            n, d1 = msg.shape
+            msg = (msg[:, :, None] * hop[:, None, :]).reshape(n, d1 * hop.shape[1])
+            mvars = mvars + hop_vars
+        return msg, mvars
+
+    # collect the root's factors WITHOUT expanding them against each other
+    factors: List[Tuple[jnp.ndarray, List[CtVar]]] = []
+    own_msg, own_vars = entity_onehot(db, root, keep, dtype)
+    factors.append((own_msg, own_vars))
+    for atom, u in adj.get(root, ()):
+        child_msg, child_vars = visit(u, atom)
+        hop, hop_vars = _join_hop(db, atom, child=u, parent=root,
+                                  child_msg=child_msg, child_vars=child_vars,
+                                  keep=keep, dtype=dtype, stats=stats)
+        factors.append((hop, hop_vars))
+
+    flat, mvars = _khatri_rao_reduce(factors)
+    counts = flat.reshape(tuple(v.card for v in mvars)) if mvars else flat.reshape(())
+    tab = CtTable(tuple(mvars), counts)
+    # canonical order: as in `keep`
+    order = tuple(v for v in keep if v in tab.vars)
+    tab = tab.transpose_to(order) if order != tab.vars else tab
+    if stats is not None:
+        stats.ct_cells += tab.size
+    return tab
+
+
+def _khatri_rao_reduce(factors: List[Tuple[jnp.ndarray, List[CtVar]]],
+                       max_chunk_cells: int = 32_000_000
+                       ) -> Tuple[jnp.ndarray, List[CtVar]]:
+    """``sum_n  f1[n,:] ⊗ f2[n,:] ⊗ ...`` without materialising the full
+    (n, prod D) expansion: the widest factor becomes the right operand of a
+    per-chunk matmul (MXU-friendly), the rest are Khatri-Rao'd per chunk.
+
+    Memory is bounded by ``chunk × prod(D_but_widest)`` + the output."""
+    factors = [f for f in factors]
+    mvars: List[CtVar] = []
+    # move the widest factor last; record the resulting axis order
+    widest = max(range(len(factors)), key=lambda i: factors[i][0].shape[1])
+    order = [i for i in range(len(factors)) if i != widest] + [widest]
+    mats = [factors[i][0] for i in order]
+    for i in order:
+        mvars.extend(factors[i][1])
+    n = mats[0].shape[0]
+    d_left = int(np.prod([m.shape[1] for m in mats[:-1]], dtype=np.int64))
+    d_last = mats[-1].shape[1]
+    if len(mats) == 1:
+        return jnp.sum(mats[0], axis=0), mvars
+    chunk = max(64, min(n, max_chunk_cells // max(d_left, 1)))
+    out = jnp.zeros((d_left, d_last), mats[0].dtype)
+    for s in range(0, n, chunk):
+        kr = mats[0][s:s + chunk]
+        for m in mats[1:-1]:
+            blk = m[s:s + chunk]
+            kr = (kr[:, :, None] * blk[:, None, :]).reshape(kr.shape[0], -1)
+        out = out + kr.T @ mats[-1][s:s + chunk]
+    return out.reshape(-1), mvars
+
+
+def _join_hop(db: RelationalDB, atom: Atom, child: Var, parent: Var,
+              child_msg: jnp.ndarray, child_vars: List[CtVar],
+              keep: Sequence[CtVar], dtype, stats: Optional[CostStats]
+              ) -> Tuple[jnp.ndarray, List[CtVar]]:
+    """Push a child-subtree message through one relationship: the join.
+
+    (n_child, D) -> (n_parent, D * E) where E covers kept edge attributes.
+    Edge-attr axes are sized ``card + 1`` (N/A slot last, empty here) so they
+    line up with complete tables without re-indexing.
+    """
+    rt = db.relations[atom.rel]
+    if child == atom.src and parent == atom.dst:
+        gather_idx, scatter_idx = jnp.asarray(rt.src), jnp.asarray(rt.dst)
+        n_parent = db.entities[atom.dst.etype].size
+    elif child == atom.dst and parent == atom.src:
+        gather_idx, scatter_idx = jnp.asarray(rt.dst), jnp.asarray(rt.src)
+        n_parent = db.entities[atom.src.etype].size
+    else:
+        raise AssertionError("atom does not connect child/parent")
+
+    m = child_msg[gather_idx]                     # (edges, D)
+    mvars = list(child_vars)
+    for a in rt.type.attrs:
+        cv = edge_var(rt.type.name, a.name, a.card)
+        if cv in keep:
+            hot = _onehot(jnp.asarray(rt.attrs[a.name]), cv.card, dtype)  # card+1, NA empty
+            m, mvars = _expand(m, mvars, hot, cv)
+    out = jax.ops.segment_sum(m, scatter_idx, num_segments=n_parent)
+    if stats is not None:
+        stats.joins += 1
+        stats.rows_scanned += int(gather_idx.shape[0])
+    return out, mvars
+
+
+def cartesian_size(db: RelationalDB, vars: Sequence[Var]) -> float:
+    out = 1.0
+    for v in vars:
+        out *= float(db.entities[v.etype].size)
+    return out

@@ -1,0 +1,96 @@
+"""Contingency tables (ct-tables).
+
+The paper stores ct-tables as sparse SQL rows; on TPU we store them as dense
+count tensors over the attribute value space, one axis per :class:`CtVar`.
+Dense tensors keep projection (the PRECOUNT/HYBRID family-extraction
+primitive) a pure ``sum`` over axes — a VPU-friendly reduction — and keep the
+Möbius transform a strided butterfly.
+
+``nnz_rows`` reports the sparse-equivalent row count so benchmarks can be
+compared against the paper's Table 5 numbers.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Iterable, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .variables import CtVar
+
+
+@dataclass
+class CtTable:
+    vars: Tuple[CtVar, ...]
+    counts: jnp.ndarray               # shape == tuple(v.card for v in vars)
+
+    def __post_init__(self) -> None:
+        expect = tuple(v.card for v in self.vars)
+        if tuple(self.counts.shape) != expect:
+            raise ValueError(f"ct shape {self.counts.shape} != vars {expect}")
+
+    # -- bookkeeping --------------------------------------------------------
+    @property
+    def size(self) -> int:
+        """Dense cell count (memory proxy)."""
+        return int(np.prod([v.card for v in self.vars], dtype=np.int64)) if self.vars else 1
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.counts.nbytes)
+
+    def nnz_rows(self) -> int:
+        """Sparse-equivalent number of ct-table rows (paper Table 5)."""
+        return int(jnp.count_nonzero(self.counts))
+
+    def total(self) -> float:
+        return float(jnp.sum(self.counts))
+
+    # -- algebra ------------------------------------------------------------
+    def axis_of(self, var: CtVar) -> int:
+        return self.vars.index(var)
+
+    def project(self, keep: Sequence[CtVar]) -> "CtTable":
+        """Marginalise onto ``keep`` (paper: *projection*), preserving the
+        order given in ``keep``."""
+        keep = tuple(keep)
+        missing = [v for v in keep if v not in self.vars]
+        if missing:
+            raise KeyError(f"project: vars not in table: {missing}")
+        drop = tuple(i for i, v in enumerate(self.vars) if v not in keep)
+        counts = jnp.sum(self.counts, axis=drop) if drop else self.counts
+        cur = tuple(v for v in self.vars if v in keep)
+        # permute to requested order
+        perm = tuple(cur.index(v) for v in keep)
+        counts = jnp.transpose(counts, perm) if perm != tuple(range(len(perm))) else counts
+        return CtTable(keep, counts)
+
+    def transpose_to(self, order: Sequence[CtVar]) -> "CtTable":
+        order = tuple(order)
+        if set(order) != set(self.vars):
+            raise ValueError("transpose_to needs the same var set")
+        perm = tuple(self.vars.index(v) for v in order)
+        return CtTable(order, jnp.transpose(self.counts, perm))
+
+    def outer(self, other: "CtTable") -> "CtTable":
+        """Tensor (Cartesian) product — used to extend a component ct over
+        unconstrained variables."""
+        a = self.counts.reshape(self.counts.shape + (1,) * other.counts.ndim)
+        return CtTable(self.vars + other.vars, a * other.counts)
+
+    def scale(self, c) -> "CtTable":
+        return CtTable(self.vars, self.counts * c)
+
+    def __sub__(self, other: "CtTable") -> "CtTable":
+        other = other.transpose_to(self.vars)
+        return CtTable(self.vars, self.counts - other.counts)
+
+    def __add__(self, other: "CtTable") -> "CtTable":
+        other = other.transpose_to(self.vars)
+        return CtTable(self.vars, self.counts + other.counts)
+
+
+def scalar_table(value: float, dtype=jnp.float32) -> CtTable:
+    return CtTable((), jnp.asarray(value, dtype=dtype))

@@ -1,0 +1,154 @@
+"""Distributed relational counting over a device mesh.
+
+Counting is linear in edge rows, so the JOIN sweep data-parallelises
+perfectly: shard every relationship's edge list over the ``data`` mesh axis,
+run the gather -> one-hot multiply -> segment-sum hop on local rows, and
+``psum`` the per-entity partials.  Entity-indexed messages stay replicated
+(they are small: n_entities x value-space); the ct value space itself can be
+sharded over ``model`` for the Möbius/projection phase, which is elementwise
+across the attribute axes.
+
+This is the scale-out path for the paper's technique: the 15.8M-row Visual
+Genome sweep becomes 15.8M / (pods x data) rows per chip with one all-reduce
+per hop.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+from .contract import CostStats, entity_onehot, _onehot, _expand
+from .ct import CtTable
+from .database import RelationalDB
+from .variables import Atom, CtVar, LatticePoint, Var, edge_var
+
+
+def _pad_to(arr: np.ndarray, mult: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Pad axis 0 to a multiple of ``mult``; returns (padded, weight_mask)."""
+    n = arr.shape[0]
+    target = ((n + mult - 1) // mult) * mult
+    pad = target - n
+    w = np.ones(target, dtype=np.float32)
+    if pad:
+        arr = np.concatenate([arr, np.zeros((pad,) + arr.shape[1:], arr.dtype)])
+        w[n:] = 0.0
+    return arr, w
+
+
+def _sharded_hop(mesh: Mesh, axis: str, n_parent: int, n_hot: int, dtype,
+                 value_axis: Optional[str] = None):
+    """Build the shard_map'd join hop for a given arity.
+
+    ``value_axis``: mesh axis to shard the child value-space (column) axis
+    over.  The flattened output value axis is child-D-major, so a contiguous
+    child-D shard stays a contiguous output shard — each ``value_axis`` rank
+    computes its slice of columns for all rows, and the psum runs over
+    ``axis`` only.  This puts the otherwise-idle TP ranks to work on the
+    JOIN sweep (memory + collective terms drop by the TP degree — §Perf H3)."""
+
+    def hop(child_msg, gidx, sidx, w, *hots):
+        m = child_msg[gidx] * w[:, None].astype(dtype)       # (rows_l, D_l)
+        for hot in hots:
+            rl, d = m.shape
+            m = (m[:, :, None] * hot[:, None, :]).reshape(rl, d * hot.shape[1])
+        out = jax.ops.segment_sum(m, sidx, num_segments=n_parent)
+        return jax.lax.psum(out, axis)
+
+    vspec = value_axis
+    in_specs = (P(None, vspec), P(axis), P(axis), P(axis)) + (P(axis),) * n_hot
+    return shard_map(hop, mesh=mesh, in_specs=in_specs,
+                     out_specs=P(None, vspec), check_vma=False)
+
+
+def sharded_positive_ct(db: RelationalDB, point: LatticePoint,
+                        keep: Optional[Sequence[CtVar]] = None,
+                        *, mesh: Mesh, axis: str = "data",
+                        dtype=jnp.float32,
+                        stats: Optional[CostStats] = None) -> CtTable:
+    """Positive ct-table with edge tables sharded over ``axis`` of ``mesh``.
+
+    Semantically identical to :func:`repro.core.contract.positive_ct` (tested
+    against it); each tree hop performs local partial counts followed by one
+    ``psum``."""
+    schema = db.schema
+    if keep is None:
+        keep = [v for v in point.all_ct_vars(schema, include_rind=False)]
+    keep = list(keep)
+    nsh = int(np.prod([mesh.shape[a] for a in (axis,)]))
+
+    adj: Dict[Var, List[Tuple[Atom, Var]]] = {}
+    for a in point.atoms:
+        adj.setdefault(a.src, []).append((a, a.dst))
+        adj.setdefault(a.dst, []).append((a, a.src))
+    root = point.vars[0]
+
+    def visit(v: Var, parent_atom: Optional[Atom]):
+        msg, mvars = entity_onehot(db, v, keep, dtype)
+        for atom, u in adj.get(v, ()):
+            if atom is parent_atom:
+                continue
+            child_msg, child_vars = visit(u, atom)
+            rt = db.relations[atom.rel]
+            if u == atom.src:
+                gidx_np, sidx_np = rt.src, rt.dst
+                n_parent = db.entities[atom.dst.etype].size
+            else:
+                gidx_np, sidx_np = rt.dst, rt.src
+                n_parent = db.entities[atom.src.etype].size
+            gidx, w = _pad_to(gidx_np, nsh)
+            sidx, _ = _pad_to(sidx_np, nsh)
+            hots, hvars = [], list(child_vars)
+            for a_ in rt.type.attrs:
+                cv = edge_var(rt.type.name, a_.name, a_.card)
+                if cv in keep:
+                    col, _ = _pad_to(rt.attrs[a_.name], nsh)
+                    hots.append(_onehot(jnp.asarray(col), cv.card, dtype))
+                    hvars.append(cv)
+            d_child = int(child_msg.shape[1])
+            v_axis = ("model" if "model" in mesh.axis_names
+                      and d_child % mesh.shape["model"] == 0
+                      and mesh.shape["model"] > 1 else None)
+            fn = _sharded_hop(mesh, axis, n_parent, len(hots), dtype,
+                              value_axis=v_axis)
+            hop_out = fn(child_msg, jnp.asarray(gidx), jnp.asarray(sidx),
+                         jnp.asarray(w), *hots)
+            if stats is not None:
+                stats.joins += 1
+                stats.rows_scanned += int(gidx.shape[0])
+            n, d1 = msg.shape
+            msg = (msg[:, :, None] * hop_out[:, None, :]).reshape(
+                n, d1 * hop_out.shape[1])
+            mvars = mvars + hvars
+        return msg, mvars
+
+    msg, mvars = visit(root, None)
+    flat = jnp.sum(msg, axis=0)
+    counts = flat.reshape(tuple(v.card for v in mvars)) if mvars else flat.reshape(())
+    tab = CtTable(tuple(mvars), counts)
+    order = tuple(v for v in keep if v in tab.vars)
+    return tab.transpose_to(order) if order != tab.vars else tab
+
+
+def superset_mobius_sharded(stack: jnp.ndarray, k: int, *, mesh: Mesh,
+                            axis: str = "model") -> jnp.ndarray:
+    """Möbius butterfly with the flattened attribute axis sharded over
+    ``axis``: the transform is elementwise across attributes, so no
+    communication is needed — only the layout constraint."""
+    lead = stack.shape[:k]
+    d = int(np.prod(stack.shape[k:])) if stack.ndim > k else 1
+    x = stack.reshape(lead + (d,))
+    spec = P(*([None] * k + [axis]))
+    x = jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))
+    for i in range(k):
+        x0 = jnp.take(x, 0, axis=i) - jnp.take(x, 1, axis=i)
+        x1 = jnp.take(x, 1, axis=i)
+        x = jnp.stack([x0, x1], axis=i)
+    return x.reshape(stack.shape)

@@ -1,0 +1,207 @@
+"""The Möbius Join: extend positive ct-tables to complete ct-tables.
+
+Inclusion–exclusion over relationship indicators (Qian, Schulte & Sun 2014):
+for a final configuration with relation set ``A`` true and ``B`` false,
+
+    N[A=T, B=F, attrs] = sum_{S subseteq B} (-1)^|S| ct_+[A u S true, attrs]
+
+No access to the original data is needed: every term is a positive ct-table of
+a *sub-pattern*, available from the lattice cache (PRECOUNT/HYBRID) or
+contracted on demand (ONDEMAND), with disconnected sub-patterns factorising
+into outer products of component tables and per-variable histograms.
+
+Two equivalent evaluation orders are implemented:
+
+* ``blockwise`` — explicit 3^k-term sum, handles kept edge attributes (whose
+  axes only exist while their relation is true; when false they collapse to
+  the N/A slot).
+* ``butterfly`` — the superset Möbius transform as k in-place passes
+  ``F-slice = *-slice − T-slice`` over a [2^k, D] stack; this is the
+  memory-bound transform the Pallas kernel (kernels/mobius_kernel.py)
+  implements.  Used when no edge-attr axes are kept.
+
+The transform output is integral and non-negative (counts); property tests
+assert both.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Callable, Dict, List, Optional, Protocol, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .contract import CostStats
+from .ct import CtTable, scalar_table
+from .variables import (Atom, CtVar, LatticePoint, Var, connected_components,
+                        rind_var)
+
+
+class PositiveProvider(Protocol):
+    """Source of positive ct-tables and variable histograms."""
+
+    def positive(self, point: LatticePoint, keep: Tuple[CtVar, ...]) -> CtTable: ...
+
+    def hist(self, var: Var, keep: Tuple[CtVar, ...]) -> CtTable: ...
+
+
+# --------------------------------------------------------------------------
+# superset Möbius transform (pure-jnp reference; Pallas kernel mirrors this)
+# --------------------------------------------------------------------------
+
+def superset_mobius(stack: jnp.ndarray, k: int) -> jnp.ndarray:
+    """In the leading ``k`` axes (each of size 2, index 1 = "relation true",
+    index 0 = "unconstrained"), replace index 0 with "relation false" by
+    applying ``x0 <- x0 - x1`` per axis.  Equivalent to
+    ``N[A] = sum_{S >= A} (-1)^{|S|-|A|} Y[S]``."""
+    x = stack
+    for i in range(k):
+        x0 = jnp.take(x, 0, axis=i) - jnp.take(x, 1, axis=i)
+        x1 = jnp.take(x, 1, axis=i)
+        x = jnp.stack([x0, x1], axis=i)
+    return x
+
+
+# --------------------------------------------------------------------------
+# pattern tables: positive count of a relation subset over the point's vars
+# --------------------------------------------------------------------------
+
+def _pattern_table(point: LatticePoint, rels: Set[str],
+                   keep_axes: Tuple[CtVar, ...],
+                   provider: PositiveProvider) -> CtTable:
+    """ct_+ of the sub-pattern with ``rels`` true, over all vars of ``point``,
+    projected onto ``keep_axes`` (entity attrs + edge attrs of rels)."""
+    atoms = tuple(a for a in point.atoms if a.rel in rels)
+    out: Optional[CtTable] = None
+    covered: Set[Var] = set()
+    for comp in connected_components(atoms):
+        cp = LatticePoint(comp)
+        comp_rels = {a.rel for a in comp}
+        ckeep = tuple(v for v in keep_axes
+                      if (v.kind == "attr" and v.owner[0] in cp.vars)
+                      or (v.kind == "edge" and v.owner[0] in comp_rels))
+        t = provider.positive(cp, ckeep)
+        out = t if out is None else out.outer(t)
+        covered.update(cp.vars)
+    for var in point.vars:
+        if var in covered:
+            continue
+        vkeep = tuple(v for v in keep_axes
+                      if v.kind == "attr" and v.owner[0] == var)
+        h = provider.hist(var, vkeep)
+        out = h if out is None else out.outer(h)
+    assert out is not None
+    return out.transpose_to(tuple(v for v in keep_axes if v in out.vars)) \
+        if set(out.vars) == set(keep_axes) else out.project(keep_axes)
+
+
+# --------------------------------------------------------------------------
+# complete ct-table
+# --------------------------------------------------------------------------
+
+def complete_ct(point: LatticePoint, keep: Sequence[CtVar],
+                provider: PositiveProvider,
+                stats: Optional[CostStats] = None,
+                use_butterfly: bool = True,
+                mobius_fn: Optional[Callable[[jnp.ndarray, int], jnp.ndarray]] = None
+                ) -> CtTable:
+    """Complete ct-table over ``keep`` — the Möbius Join.
+
+    ``keep`` may contain entity-attr axes, edge-attr axes, and relationship
+    indicator axes of the point.  Relations with neither a kept indicator nor
+    a kept edge attribute impose no constraint once their indicator is summed
+    out, so they are dropped from the pattern up front (this is what makes
+    HYBRID's per-family tables small).
+    """
+    keep = tuple(keep)
+    kept_attrs = tuple(v for v in keep if v.kind == "attr")
+    kept_edges: Dict[str, List[CtVar]] = {}
+    for v in keep:
+        if v.kind == "edge":
+            kept_edges.setdefault(v.owner[0], []).append(v)
+    kept_rinds = {v.owner[0] for v in keep if v.kind == "rind"}
+
+    effective = sorted(set(kept_edges) | kept_rinds)
+    k = len(effective)
+
+    # final tensor
+    shape = tuple(v.card for v in keep)
+    final = jnp.zeros(shape, dtype=jnp.result_type(jnp.float32))
+
+    kept_rinds_pre = {v.owner[0] for v in keep if v.kind == "rind"}
+    # blocks for distinct A are disjoint iff every rel with a kept edge axis
+    # also has its indicator kept (then the rind bits separate all blocks);
+    # a kept edge axis WITHOUT its rind spans the N/A slot that the A-less
+    # block writes, so those must accumulate.
+    disjoint_blocks = all(r in kept_rinds_pre for v in keep if v.kind == "edge"
+                          for r in [v.owner[0]])
+
+    def embed(A: Set[str], table: CtTable) -> None:
+        """Write block-A into `final`.  When blocks are disjoint a
+        dynamic_update_slice (one cheap primitive) replaces the generic
+        scatter-add that ``.at[idx].add`` lowers to (§Perf H3 it.2)."""
+        nonlocal final
+        starts: List[int] = []
+        block_axes: List[CtVar] = []
+        for v in keep:
+            if v.kind == "rind":
+                starts.append(1 if v.owner[0] in A else 0)
+            elif v.kind == "edge" and v.owner[0] not in A:
+                starts.append(v.card - 1)       # N/A slot
+            else:
+                starts.append(0)
+                block_axes.append(v)
+        aligned = table.transpose_to(tuple(block_axes))
+        block = aligned.counts.astype(final.dtype)
+        # expand pinned axes to size 1 for the slice write
+        shape = tuple(v.card if v in block_axes else 1 for v in keep)
+        block = block.reshape(shape)
+        if disjoint_blocks:
+            final = jax.lax.dynamic_update_slice(final, block, tuple(starts))
+        else:
+            idx = tuple(slice(st, st + sh) for st, sh in zip(starts, shape))
+            final = final.at[idx].add(block)
+
+    no_edge_axes = not kept_edges
+    if use_butterfly and no_edge_axes and k > 0:
+        # stack Y[c in {*,T}^k] = ct_+(T-set of c), butterfly to {F,T}^k
+        fn = mobius_fn or superset_mobius
+        blocks = []
+        for bits in itertools.product((0, 1), repeat=k):
+            X = {r for r, b in zip(effective, bits) if b == 1}
+            t = _pattern_table(point, X, kept_attrs, provider)
+            blocks.append(t.transpose_to(kept_attrs).counts)
+        attr_shape = tuple(v.card for v in kept_attrs)
+        stack = jnp.stack(blocks).reshape((2,) * k + attr_shape)
+        out = fn(stack, k)
+        # with no edge axes the complete table IS the transform output, up
+        # to axis order: rind axis i = effective[i] ({0:F, 1:T} matches the
+        # rind_var convention), attr axis k+j = kept_attrs[j].  One
+        # transpose replaces 2^k scatter dispatches (§Perf H3 it.1).
+        src_axis = ({rind_var(r).owner: i for i, r in enumerate(effective)}
+                    | {v.owner: k + j for j, v in enumerate(kept_attrs)})
+        perm = tuple(src_axis[v.owner] for v in keep)
+        final = jnp.transpose(out, perm) \
+            if perm != tuple(range(len(perm))) else out
+    else:
+        for r_bits in itertools.product((0, 1), repeat=k):
+            A = {r for r, b in zip(effective, r_bits) if b == 1}
+            B = [r for r in effective if r not in A]
+            axes_A = kept_attrs + tuple(
+                v for r in sorted(A) for v in kept_edges.get(r, ()))
+            acc: Optional[jnp.ndarray] = None
+            for j in range(len(B) + 1):
+                for S in itertools.combinations(B, j):
+                    t = _pattern_table(point, A | set(S), axes_A, provider)
+                    contrib = t.transpose_to(axes_A).counts
+                    sign = -1.0 if j % 2 else 1.0
+                    acc = contrib * sign if acc is None else acc + sign * contrib
+            assert acc is not None
+            embed(A, CtTable(axes_A, acc))
+
+    tab = CtTable(keep, final)
+    if stats is not None:
+        stats.ct_cells += tab.size
+    return tab

@@ -1,0 +1,148 @@
+"""First-order Bayesian-network structure search (learn-and-join style).
+
+Greedy hill-climbing over predicate dependencies per relationship lattice
+point, bottom-up through the lattice with edge inheritance from sub-points
+(Schulte & Khosravi 2012, simplified).  Every family evaluation goes through
+the pluggable counting :class:`~repro.core.strategies.Strategy` — this module
+is deliberately strategy-agnostic: it is the *workload generator* whose
+pattern stream the pre/post/hybrid caches serve.
+
+Family scores are memoised globally by (child, parents): the same family is
+generated repeatedly during search (and across lattice points), which is
+exactly what makes counts caching pay off.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+
+from .bdeu import family_score
+from .database import RelationalDB
+from .strategies import Strategy
+from .variables import CtVar, LatticePoint, build_lattice
+
+
+@dataclass
+class BNModel:
+    nodes: Tuple[CtVar, ...]
+    parents: Dict[CtVar, FrozenSet[CtVar]]
+    score: float
+
+    def edges(self) -> List[Tuple[CtVar, CtVar]]:
+        return [(p, c) for c, ps in self.parents.items() for p in ps]
+
+
+class StructureSearch:
+    def __init__(self, db: RelationalDB, strategy: Strategy,
+                 max_parents: int = 3, ess: float = 1.0,
+                 max_moves: int = 200):
+        self.db = db
+        self.strategy = strategy
+        self.max_parents = max_parents
+        self.ess = ess
+        self.max_moves = max_moves
+        self._score_cache: Dict[Tuple[CtVar, FrozenSet[CtVar]], float] = {}
+        self.families_scored = 0
+
+    # -- family scoring (through the counting strategy) ---------------------
+    def local_score(self, point: LatticePoint, child: CtVar,
+                    parents: FrozenSet[CtVar]) -> float:
+        key = (child, parents)
+        if key not in self._score_cache:
+            keep = tuple(sorted(parents)) + (child,)
+            tab = self.strategy.family_ct(point, keep)
+            self._score_cache[key] = family_score(tab, child, self.ess)
+            self.families_scored += 1
+        return self._score_cache[key]
+
+    # -- acyclicity ----------------------------------------------------------
+    @staticmethod
+    def _creates_cycle(parents: Dict[CtVar, Set[CtVar]],
+                       src: CtVar, dst: CtVar) -> bool:
+        """Would edge src->dst close a cycle? (is dst an ancestor of src?)"""
+        stack, seen = [src], set()
+        while stack:
+            n = stack.pop()
+            if n == dst:
+                return True
+            if n in seen:
+                continue
+            seen.add(n)
+            stack.extend(parents[n])
+        return False
+
+    # -- hill climbing per lattice point -------------------------------------
+    def climb_point(self, point: LatticePoint,
+                    init_parents: Optional[Dict[CtVar, Set[CtVar]]] = None
+                    ) -> BNModel:
+        nodes = list(point.all_ct_vars(self.db.schema, include_rind=True))
+        parents: Dict[CtVar, Set[CtVar]] = {n: set() for n in nodes}
+        if init_parents:
+            for c, ps in init_parents.items():
+                if c in parents:
+                    parents[c] = {p for p in ps if p in parents}
+
+        def sc(child: CtVar) -> float:
+            return self.local_score(point, child, frozenset(parents[child]))
+
+        total = sum(sc(n) for n in nodes)
+        for _ in range(self.max_moves):
+            best_delta, best_apply = 0.0, None
+            for src, dst in itertools.permutations(nodes, 2):
+                if src in parents[dst]:
+                    # removal
+                    old = sc(dst)
+                    new = self.local_score(point, dst,
+                                           frozenset(parents[dst] - {src}))
+                    if new - old > best_delta:
+                        best_delta = new - old
+                        best_apply = ("del", src, dst)
+                else:
+                    if len(parents[dst]) >= self.max_parents:
+                        continue
+                    if self._creates_cycle(parents, src, dst):
+                        continue
+                    old = sc(dst)
+                    new = self.local_score(point, dst,
+                                           frozenset(parents[dst] | {src}))
+                    if new - old > best_delta:
+                        best_delta = new - old
+                        best_apply = ("add", src, dst)
+            if best_apply is None:
+                break
+            op, src, dst = best_apply
+            if op == "add":
+                parents[dst].add(src)
+            else:
+                parents[dst].remove(src)
+            total += best_delta
+        return BNModel(tuple(nodes),
+                       {n: frozenset(ps) for n, ps in parents.items()},
+                       total)
+
+    # -- learn-and-join over the lattice --------------------------------------
+    def run(self, lattice: Sequence[LatticePoint]) -> Dict[LatticePoint, BNModel]:
+        models: Dict[LatticePoint, BNModel] = {}
+        for point in lattice:          # lattice is bottom-up ordered
+            init: Dict[CtVar, Set[CtVar]] = {}
+            for sub, m in models.items():
+                if sub.rels < point.rels:      # inherit sub-point edges
+                    for c, ps in m.parents.items():
+                        init.setdefault(c, set()).update(ps)
+            models[point] = self.climb_point(point, init)
+        return models
+
+
+def discover_model(db: RelationalDB, strategy: Strategy,
+                   max_chain_length: int = 2, max_parents: int = 3,
+                   ess: float = 1.0) -> Tuple[Dict[LatticePoint, BNModel], Strategy]:
+    """End-to-end model discovery: build lattice, run the strategy's
+    pre-search phase, hill-climb bottom-up.  Returns per-point models and the
+    strategy (whose ``stats`` carry the paper's metrics)."""
+    lattice = build_lattice(db.schema, max_chain_length)
+    strategy.prepare(db, lattice)
+    search = StructureSearch(db, strategy, max_parents=max_parents, ess=ess)
+    models = search.run(lattice)
+    return models, strategy

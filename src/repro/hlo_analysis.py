@@ -1,0 +1,347 @@
+"""Trip-count-aware static analysis of optimized (post-SPMD) HLO.
+
+XLA's ``cost_analysis`` visits each ``while`` body **once**, so for
+scan-over-layers models it undercounts FLOPs/bytes/collectives by the layer
+count.  This module re-derives the three roofline inputs from the HLO text
+with loop multipliers:
+
+* computations are parsed into per-op records with a local symbol table
+  (every %name's shape is known at its definition);
+* FLOPs: ``dot`` ops -> 2 x |output| x |contracting dims| (from the printed
+  ``lhs_contracting_dims`` and the lhs operand's shape);
+* HBM bytes: operand+output bytes of every materialising op at fusion
+  boundaries (ops inside ``fused_computation``s are not double counted);
+* collective link bytes: output bytes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute with standard per-chip
+  link factors (all-reduce = 2x);
+* call graph: fusion/call/while/conditional/sort edges; a while's trip count
+  is the max integer constant found in its condition computation (falling
+  back to constants in its init tuple) — exactly the bound jax's
+  ``lax.scan`` lowers to.
+
+Shapes in the per-device SPMD module are per-chip, so all results are
+per-chip quantities.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "c64": 8, "s64": 8, "u64": 8, "f64": 8,
+    "s1": 1, "u1": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_LINK_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+_NO_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                 "bitcast", "while", "conditional", "call", "custom-call",
+                 "after-all", "partition-id", "replica-id"}
+
+# Ops that materialise buffers on TPU (fusion boundaries).  The CPU backend
+# fuses far less than TPU, so counting operand+output bytes of *every* op
+# would overstate HBM traffic several-fold; elementwise/convert/compare ops
+# are assumed fused into these anchors (documented in EXPERIMENTS.md).
+_BYTES_OPS = {"dot", "convolution", "fusion", "reduce", "reduce-window",
+              "scatter", "gather", "sort", "transpose", "copy", "concatenate",
+              "dynamic-slice", "dynamic-update-slice", "select-and-scatter",
+              "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+              "collective-permute", "all-gather-start", "all-reduce-start",
+              "pad", "reverse", "cholesky", "triangular-solve", "fft",
+              "rng", "rng-bit-generator", "iota"}
+
+
+def _shapes_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        b = _DTYPE_BYTES.get(dt)
+        if b is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def _shape_elems(dt: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+@dataclass
+class OpRec:
+    name: str
+    kind: str
+    out_bytes: int
+    operand_names: List[str]
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: Dict[str, OpRec] = field(default_factory=dict)
+    order: List[str] = field(default_factory=list)
+    flops: float = 0.0
+    bytes_hbm: float = 0.0
+    coll_link_bytes: float = 0.0
+    coll_counts: Dict[str, int] = field(default_factory=dict)
+    calls: List[Tuple[str, str]] = field(default_factory=list)  # (kind, callee)
+    while_info: List[Tuple[str, str, str]] = field(default_factory=list)
+    int_constants: List[int] = field(default_factory=list)
+    has_slice: bool = False       # body contains dynamic-slice / gather
+    has_dus: bool = False         # body contains dynamic-update-slice
+    pending_bytes: List[Tuple[str, int, List[int], Optional[str]]] = \
+        field(default_factory=list)   # (kind, out_bytes, operand_bytes, callee)
+
+
+def _first_shape(text: str) -> Optional[Tuple[str, str]]:
+    m = _SHAPE_RE.search(text)
+    return (m.group(1), m.group(2)) if m else None
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s or s.startswith("//"):
+            continue
+        is_def = _DEF_RE.match(s) is not None
+        header = (re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$", s)
+                  if (s.endswith("{") and not is_def) else None)
+        if header and cur is None:
+            cur = Computation(header.group(2))
+            comps[cur.name] = cur
+            if header.group(1):
+                comps["__entry__"] = cur
+            continue
+        if s == "}" or s.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(s)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # output shape(s) = everything before the op token; op token = first
+        # lowercase identifier directly followed by '('
+        opm = re.match(r"^(\(?.*?)\s([a-z][\w\-]*)\(", rhs)
+        kind = opm.group(2) if opm else ""
+        head = opm.group(1) if opm else rhs
+        out_bytes = _shapes_bytes(head)
+        # operand names
+        args_m = re.search(rf"{re.escape(kind)}\((.*?)\)(,|$)", rhs) if kind else None
+        operands = []
+        if args_m:
+            operands = re.findall(r"%([\w.\-]+)", args_m.group(1))
+        rec = OpRec(name, kind, out_bytes, operands, s)
+        cur.ops[name] = rec
+        cur.order.append(name)
+        if kind in ("dynamic-slice", "gather"):
+            cur.has_slice = True
+        if kind == "dynamic-update-slice":
+            cur.has_dus = True
+
+        if kind == "constant":
+            cm = re.search(r"constant\((\d+)\)", rhs)
+            if cm and ("s32[]" in head or "u32[]" in head):
+                cur.int_constants.append(int(cm.group(1)))
+
+        # ---- flops: dot ----
+        if kind == "dot":
+            lhs_dims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+            out_sh = _first_shape(head)
+            lhs_name = operands[0] if operands else None
+            lhs_rec = cur.ops.get(lhs_name) if lhs_name else None
+            contract = 1
+            if lhs_dims and lhs_rec:
+                lsh = _first_shape(lhs_rec.line.split("=", 1)[1])
+                if lsh and lhs_dims.group(1):
+                    ldims = lsh[1].split(",") if lsh[1] else []
+                    for di in lhs_dims.group(1).split(","):
+                        if di and int(di) < len(ldims):
+                            contract *= int(ldims[int(di)])
+            if out_sh:
+                cur.flops += 2.0 * _shape_elems(*out_sh) * contract
+
+        # ---- collectives ----
+        for ck in _COLLECTIVES:
+            if kind in (ck, ck + "-start"):
+                nb = out_bytes
+                cur.coll_link_bytes += nb * _LINK_FACTOR[ck]
+                cur.coll_counts[ck] = cur.coll_counts.get(ck, 0) + 1
+                break
+
+        # ---- call edges ----
+        if kind == "fusion":
+            cm = re.search(r"calls=%?([\w.\-]+)", rhs)
+            if cm:
+                cur.calls.append(("fusion", cm.group(1)))
+        elif kind == "call":
+            cm = re.search(r"to_apply=%?([\w.\-]+)", rhs)
+            if cm:
+                cur.calls.append(("call", cm.group(1)))
+        elif kind == "while":
+            bm = re.search(r"body=%?([\w.\-]+)", rhs)
+            cm = re.search(r"condition=%?([\w.\-]+)", rhs)
+            init = operands[0] if operands else ""
+            if bm and cm:
+                cur.while_info.append((bm.group(1), cm.group(1), init))
+        elif kind == "conditional":
+            for cm in re.finditer(r"(?:branch_computations=\{([^}]*)\}|"
+                                  r"(?:true|false)_computation=%?([\w.\-]+))", rhs):
+                blob = cm.group(1) or cm.group(2) or ""
+                for nm in re.findall(r"%?([\w.\-]+)", blob):
+                    if nm:
+                        cur.calls.append(("cond", nm))
+        elif kind == "sort":
+            cm = re.search(r"to_apply=%?([\w.\-]+)", rhs)
+            if cm:
+                cur.calls.append(("sort", cm.group(1)))
+
+        # ---- hbm bytes: defer to a second pass (fusion bodies may appear
+        # later in the text; slice/dus-aware accounting needs them) ----
+        if kind in _BYTES_OPS:
+            opsz = []
+            for on in operands:
+                orc = cur.ops.get(on)
+                if orc is not None:
+                    m2 = re.match(r"^(\(?.*?)\s[a-z][\w\-]*\(",
+                                  orc.line.split("=", 1)[1].strip())
+                    ohead = m2.group(1) if m2 else orc.line.split("=", 1)[1]
+                    opsz.append(_shapes_bytes(ohead))
+            callee = None
+            if kind == "fusion":
+                cm = re.search(r"calls=%?([\w.\-]+)", rhs)
+                callee = cm.group(1) if cm else None
+            if kind == "fusion" and "dynamic-update-slice" in name:
+                callee = (callee or "") + ".dynamic-update-slice"
+            cur.pending_bytes.append((kind, out_bytes, opsz, callee))
+
+    _resolve_bytes(comps)
+    return comps
+
+
+def _resolve_bytes(comps: Dict[str, Computation]) -> None:
+    """Second pass: charge HBM traffic per op with slice/in-place awareness.
+
+    * dynamic-update-slice (incl. fusions rooted on one): the big aliased
+      buffer is updated in place — traffic = 2 x slice bytes.
+    * dynamic-slice / gather (incl. fusions containing one): a large operand
+      is only *read at slice granularity* — cap each operand at the fusion's
+      output size.  Without this, reading one layer's [B,S,D] activation
+      slice from a [L,B,S,D] residual stack is billed L times too much.
+    """
+    for c in comps.values():
+        if c.name == "__entry__":
+            continue
+        for kind, out_bytes, opsz, callee in c.pending_bytes:
+            body = comps.get((callee or "").removesuffix(".dynamic-update-slice")) \
+                if callee else None
+            is_dus = (kind == "dynamic-update-slice"
+                      or (kind == "fusion"
+                          and (("dynamic-update-slice" in (callee or ""))
+                               or (body is not None and body.has_dus))))
+            slice_like = (kind in ("dynamic-slice", "gather")
+                          or (body is not None and body.has_slice))
+            if is_dus and opsz:
+                c.bytes_hbm += 2 * (sum(opsz) - max(opsz))
+            elif kind == "dynamic-slice":
+                c.bytes_hbm += 2 * out_bytes
+            elif slice_like and opsz:
+                capped = [min(o, max(out_bytes, 1)) for o in opsz]
+                c.bytes_hbm += out_bytes + sum(capped)
+            else:
+                c.bytes_hbm += out_bytes + sum(opsz)
+
+
+def _trip_count(comp: Computation, body: str, cond: str, init: str,
+                comps: Dict[str, Computation]) -> int:
+    cond_comp = comps.get(cond)
+    cands: List[int] = []
+    if cond_comp is not None:
+        cands += [c for c in cond_comp.int_constants if c > 0]
+        # conditions may call helper comparators — look one level deep
+        for _, callee in cond_comp.calls:
+            sub = comps.get(callee)
+            if sub:
+                cands += [c for c in sub.int_constants if c > 0]
+    if not cands:
+        init_rec = comp.ops.get(init)
+        if init_rec is not None:
+            for on in init_rec.operand_names:
+                orc = comp.ops.get(on)
+                if orc is not None and orc.kind == "constant":
+                    cm = re.search(r"constant\((\d+)\)", orc.line)
+                    if cm and int(cm.group(1)) > 0:
+                        cands.append(int(cm.group(1)))
+    return max(cands) if cands else 1
+
+
+def analyze(text: str) -> Dict[str, float]:
+    comps = parse_hlo(text)
+    entry = comps.pop("__entry__", None)
+    if entry is not None:
+        roots = [entry]
+    else:
+        # fallback: computations never called by others
+        called = {callee for c in comps.values() for _, callee in c.calls}
+        called |= {b for c in comps.values() for b, cnd, _ in c.while_info}
+        called |= {cnd for c in comps.values() for b, cnd, _ in c.while_info}
+        roots = [c for c in comps.values() if c.name not in called]
+    totals = {"flops": 0.0, "bytes": 0.0, "coll_link_bytes": 0.0}
+    counts: Dict[str, int] = {}
+    fused: Dict[str, bool] = {}
+
+    import functools
+
+    @functools.lru_cache(maxsize=None)
+    def cost(name: str, in_fusion: bool) -> Tuple[float, float, float]:
+        c = comps.get(name)
+        if c is None:
+            return (0.0, 0.0, 0.0)
+        f = c.flops
+        b = 0.0 if in_fusion else c.bytes_hbm
+        cl = c.coll_link_bytes
+        for kind, callee in c.calls:
+            cf, cb, ccl = cost(callee, in_fusion or kind == "fusion")
+            f += cf
+            b += cb
+            cl += ccl
+        for body, cond, init in c.while_info:
+            t = _trip_count(c, body, cond, init, comps)
+            bf, bb, bcl = cost(body, in_fusion)
+            f += t * bf
+            b += t * bb
+            cl += t * bcl
+        return (f, b, cl)
+
+    for r in roots:
+        f, b, cl = cost(r.name, False)
+        totals["flops"] += f
+        totals["bytes"] += b
+        totals["coll_link_bytes"] += cl
+
+    # collective op counts (with multipliers is overkill — report static)
+    for c in comps.values():
+        for k, v in c.coll_counts.items():
+            counts[k] = counts.get(k, 0) + v
+    totals["collective_op_sites"] = counts
+    return totals

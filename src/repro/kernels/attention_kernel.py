@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: flash-attention forward (the LM-stack hot spot).
+
+Online-softmax formulation: the grid walks (batch*kv-head, q-block, kv-block)
+with the kv axis innermost/sequential; running max ``m``, normaliser ``l``
+and the unnormalised accumulator live in VMEM scratch across kv iterations,
+so the [Sq, Skv] score matrix never touches HBM — exactly the traffic the
+HLO-level remat path (models/attention.py one_block + jax.checkpoint) still
+pays at fusion boundaries; see EXPERIMENTS.md §Perf H1 it.2.
+
+Layout: q is presented per (b, kv-head) as [G*hd] fused rows (G = grouped
+query heads) so GQA reuses one kv tile across its query group inside the
+same kernel instance.  Block shapes are MXU-aligned: q rows x d and kv rows
+x d tiles with d = head_dim (<= 128 for all assigned archs; padded to 128).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, block_q: int, block_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                   # [Bq, d]
+    k = k_ref[0]                                   # [Bk, d]
+    v = v_ref[0]                                   # [Bk, d]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_scr[...]                            # [Bq, 1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                         # [Bq, Bk]
+    corr = jnp.exp(m_prev - m_new)                 # [Bq, 1]
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, -1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           *, causal: bool = True, block_q: int = 256,
+                           block_k: int = 256,
+                           interpret: bool = True) -> jnp.ndarray:
+    """q [B, Sq, H, hd], k/v [B, Skv, H, hd] (kv heads already broadcast to
+    H — GQA callers repeat or reshape groups).  Returns [B, Sq, H, hd]."""
+    b, sq, h, hd = q.shape
+    _, skv, _, _ = k.shape
+    scale = hd ** -0.5
+
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    sq_p = ((sq + bq - 1) // bq) * bq
+    skv_p = ((skv + bk - 1) // bk) * bk
+    hd_p = max(128, ((hd + 127) // 128) * 128) if not interpret else hd
+
+    def prep(x, s_p):
+        x = jnp.moveaxis(x, 2, 1).reshape(b * h, x.shape[1], hd)
+        return jnp.pad(x, ((0, 0), (0, s_p - x.shape[1]), (0, hd_p - hd)))
+
+    qf = prep(q, sq_p)
+    kf = prep(k, skv_p)
+    vf = prep(v, skv_p)
+    # padded kv rows must never win the softmax: rely on causal mask for
+    # causal; for non-causal, bias padded keys to NEG_INF via k = -inf trick
+    if not causal and skv_p != skv:
+        pad_mask = jnp.arange(skv_p) >= skv
+        kf = jnp.where(pad_mask[None, :, None], 0.0, kf)
+        vf = jnp.where(pad_mask[None, :, None], 0.0, vf)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          block_q=bq, block_k=bk),
+        grid=(b * h, sq_p // bq, skv_p // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd_p), lambda g, qi, ki: (g, qi, 0)),
+            pl.BlockSpec((1, bk, hd_p), lambda g, qi, ki: (g, ki, 0)),
+            pl.BlockSpec((1, bk, hd_p), lambda g, qi, ki: (g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd_p), lambda g, qi, ki: (g, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq_p, hd_p), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),      # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),      # normaliser l
+            pltpu.VMEM((bq, hd_p), jnp.float32),   # unnormalised accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out[:, :sq, :hd].reshape(b, h, sq, hd)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,58 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True (this container is CPU-only; Mosaic lowering
+needs a real TPU).  On TPU deployments pass ``interpret=False`` — the
+call sites in ``repro.core`` select the kernel path via the strategy's
+``mobius_fn`` / config flags.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .mobius_kernel import mobius_pallas
+from .hist_kernel import segment_hist_pallas
+from .bdeu_kernel import bdeu_pallas
+from .ref import mobius_ref, segment_hist_ref, bdeu_ref
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mobius(stack: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    return mobius_pallas(stack, interpret=interpret)
+
+
+def mobius_nd(stack: jnp.ndarray, k: int, interpret: bool = True) -> jnp.ndarray:
+    """Adapter matching `repro.core.mobius.superset_mobius`'s (2,)*k + attrs
+    signature, so the kernel can be plugged in as ``Strategy.mobius_fn``."""
+    lead = stack.shape[:k]
+    tail = stack.shape[k:]
+    import numpy as np
+    d = int(np.prod(tail)) if tail else 1
+    flat = stack.reshape((1 << k), d)
+    out = mobius(flat, interpret=interpret)
+    return out.reshape(lead + tail)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "interpret"))
+def segment_hist(codes: jnp.ndarray, values: jnp.ndarray, num_segments: int,
+                 interpret: bool = True) -> jnp.ndarray:
+    return segment_hist_pallas(codes, values, num_segments,
+                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("ess", "interpret"))
+def bdeu(nijk: jnp.ndarray, ess: float = 1.0,
+         interpret: bool = True) -> jnp.ndarray:
+    return bdeu_pallas(nijk, ess=ess, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 256,
+                    block_k: int = 256, interpret: bool = True):
+    from .attention_kernel import flash_attention_pallas
+    return flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
+                                  block_k=block_k, interpret=interpret)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import gammaln
+
+
+def mobius_ref(stack: jnp.ndarray) -> jnp.ndarray:
+    """Superset Möbius transform on a [R=2^k, D] stack: replace the
+    "unconstrained" slot (bit=0) with "false" via x0 <- x0 - x1 per bit."""
+    r, d = stack.shape
+    k = r.bit_length() - 1
+    assert 1 << k == r, "leading dim must be a power of two"
+    x = stack.reshape((2,) * k + (d,))
+    for i in range(k):
+        x0 = jnp.take(x, 0, axis=i) - jnp.take(x, 1, axis=i)
+        x1 = jnp.take(x, 1, axis=i)
+        x = jnp.stack([x0, x1], axis=i)
+    return x.reshape(r, d)
+
+
+def segment_hist_ref(codes: jnp.ndarray, values: jnp.ndarray,
+                     num_segments: int) -> jnp.ndarray:
+    """Weighted histogram / segment-sum: out[p, d] = sum_{n: codes[n]=p} values[n, d]."""
+    return jax.ops.segment_sum(values, codes, num_segments=num_segments)
+
+
+def bdeu_ref(nijk: jnp.ndarray, ess: float, q: int, r: int) -> jnp.ndarray:
+    """BDeu log marginal likelihood over N_ijk [Q, R] (Q may be padded with
+    zero rows and R with zero columns — both contribute exactly 0)."""
+    a_j = ess / q
+    a_jk = ess / (q * r)
+    nij = jnp.sum(nijk, axis=1)
+    per_j = (gammaln(a_j) - gammaln(nij + a_j)
+             + jnp.sum(gammaln(nijk + a_jk) - gammaln(a_jk), axis=1))
+    return jnp.sum(per_j)
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """Oracle for the flash-attention kernel: q/k/v [B,S,H,hd], H already
+    broadcast (GQA groups expanded by the caller)."""
+    b, sq, h, hd = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    if causal:
+        m = jnp.tril(jnp.ones((sq, k.shape[1]), bool))
+        s = jnp.where(m[None, None], s, -1e30)
+    w = jax.nn.softmax(s, -1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,186 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape) cell on
+the production meshes and extract memory / cost / collective statistics.
+
+The two lines above MUST stay the first statements in this file: jax locks
+the device count at first initialisation (see the brief).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+        --shape train_4k --mesh single --out results/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+One cell per process is recommended (the driver script does this) — XLA's
+compile arena for 512 fake devices is only reclaimed at process exit."""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCHS, all_cells, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import decode_batch, prefill_batch, train_batch
+from repro.models.config import SHAPES, shape_cells
+from repro.models.model import build_model
+from repro.optim.adamw import OptConfig, make_optimizer
+from repro.hlo_analysis import analyze as analyze_hlo
+from repro.roofline import model_flops, parse_collectives, roofline_terms
+from repro.train.sharding import (batch_shardings, cache_shardings,
+                                  logits_sharding, param_shardings)
+from repro.train.step import (init_train_state, make_decode_step,
+                              make_prefill_step, make_train_step)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides: dict | None = None):
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+
+    with jax.sharding.set_mesh(mesh):
+        if shape.kind == "train":
+            opt = make_optimizer(OptConfig(state_dtype=cfg.opt_state_dtype))
+            step = make_train_step(model, opt)
+            state = jax.eval_shape(
+                lambda: init_train_state(model, opt, jax.random.PRNGKey(0)))
+            state_sh = param_shardings(state, mesh)
+            batch = train_batch(cfg, shape)
+            b_sh = batch_shardings(batch, mesh)
+            jitted = jax.jit(step, in_shardings=(state_sh, b_sh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state, batch)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(model)
+            params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+            p_sh = param_shardings(params, mesh)
+            batch = prefill_batch(cfg, shape)
+            b_sh = batch_shardings(batch, mesh)
+            cache_abs = jax.eval_shape(step, params, batch)[1]
+            c_sh = cache_shardings(cache_abs, mesh)
+            out_sh = (logits_sharding(mesh, shape.global_batch, cfg.vocab), c_sh)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh),
+                             out_shardings=out_sh)
+            lowered = jitted.lower(params, batch)
+        else:  # decode
+            step = make_decode_step(model, mesh=mesh, seq_sharded=True)
+            params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+            p_sh = param_shardings(params, mesh)
+            batch, cache = decode_batch(cfg, shape)
+            b_sh = batch_shardings(batch, mesh)
+            c_sh = cache_shardings(cache, mesh)
+            out_sh = (logits_sharding(mesh, shape.global_batch, cfg.vocab), c_sh)
+            jitted = jax.jit(step, in_shardings=(p_sh, c_sh, b_sh),
+                             out_shardings=out_sh, donate_argnums=(1,))
+            lowered = jitted.lower(params, cache, batch)
+
+        compiled = lowered.compile()
+    return cfg, shape, mesh, lowered, compiled
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: Path | None, overrides: dict | None = None,
+             tag: str = "") -> dict:
+    t0 = time.time()
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "ok": False,
+           "tag": tag}
+    try:
+        cfg, shape, mesh, lowered, compiled = lower_cell(
+            arch, shape_name, multi_pod, overrides)
+        chips = mesh.size
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        coll = parse_collectives(hlo)          # static op sites (reference)
+        # trip-count-aware totals (XLA cost_analysis visits while bodies once)
+        hlo_totals = analyze_hlo(hlo)
+        terms = roofline_terms(
+            {"flops": hlo_totals["flops"],
+             "bytes accessed": hlo_totals["bytes"]},
+            {"all": {"link_bytes": hlo_totals["coll_link_bytes"],
+                     "count": 0, "bytes": hlo_totals["coll_link_bytes"]}},
+            chips)
+        mf = model_flops(cfg, shape, chips)
+        useful = (mf["model_flops_per_chip"]
+                  / max(terms["flops_per_chip"], 1.0))
+        rec.update(
+            ok=True,
+            chips=chips,
+            compile_s=round(time.time() - t0, 1),
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", None),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            },
+            cost={k: cost.get(k) for k in ("flops", "bytes accessed")},
+            hlo_totals={k: v for k, v in hlo_totals.items()},
+            collectives=coll,
+            roofline=terms,
+            model_flops=mf,
+            useful_flops_ratio=useful,
+        )
+        print(f"[dryrun] OK   {arch} x {shape_name} x {mesh_name} "
+              f"({rec['compile_s']}s) bottleneck={terms['bottleneck']}",
+              flush=True)
+    except Exception as e:  # record failures — they are bugs to fix
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] FAIL {arch} x {shape_name} x {mesh_name}: "
+              f"{rec['error'][:200]}", flush=True)
+    if out_dir is not None:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        suffix = f"-{tag}" if tag else ""
+        fn = out_dir / f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+        fn.write_text(json.dumps(rec, indent=1, default=str))
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--override", default="",
+                    help="comma k=v model-config overrides (perf experiments)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in filter(None, args.override.split(",")):
+        k, v = kv.split("=")
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    out = Path(args.out)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    cells = all_cells() if args.all else [(args.arch, args.shape)]
+    n_fail = 0
+    for arch, shp in cells:
+        for mp in meshes:
+            rec = run_cell(arch, shp, mp, out, overrides or None, args.tag)
+            n_fail += 0 if rec["ok"] else 1
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,78 @@
+"""Input specifications per (architecture x shape) cell.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins (weak-type
+correct, shardable, no device allocation) for the dry-run; ``concrete=True``
+materialises small real arrays for smoke tests.  Modality frontends are
+stubs per the brief: VLM cells receive patch embeddings + M-RoPE ids, audio
+cells receive precomputed frame embeddings."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.model import build_model
+
+
+def _mk(shape, dtype, concrete: bool, kind: str = "zeros", vocab: int = 0):
+    if not concrete:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    if kind == "tokens":
+        rng = np.random.default_rng(0)
+        return jnp.asarray(rng.integers(0, vocab, size=shape, dtype=np.int32))
+    if kind == "normal":
+        rng = np.random.default_rng(1)
+        return jnp.asarray(rng.normal(0, 1, size=shape).astype(np.float32),
+                           dtype=dtype)
+    return jnp.zeros(shape, dtype)
+
+
+def train_batch(cfg: ModelConfig, shape: ShapeConfig,
+                concrete: bool = False) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    bt: Dict[str, Any] = {}
+    if cfg.enc_dec:
+        bt["frames"] = _mk((b, cfg.enc_frames, cfg.d_model), jnp.bfloat16,
+                           concrete, "normal")
+        bt["tokens"] = _mk((b, s), jnp.int32, concrete, "tokens", cfg.vocab)
+    elif cfg.embeds_input:
+        bt["embeds"] = _mk((b, s, cfg.d_model), jnp.bfloat16, concrete, "normal")
+        if cfg.rope == "mrope":
+            # stub M-RoPE ids: sequential text positions on all three streams
+            bt["positions"] = (
+                jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (3, b, s))
+                if concrete else jax.ShapeDtypeStruct((3, b, s), jnp.int32))
+    else:
+        bt["tokens"] = _mk((b, s), jnp.int32, concrete, "tokens", cfg.vocab)
+    bt["labels"] = _mk((b, s), jnp.int32, concrete, "tokens", cfg.vocab)
+    return bt
+
+
+def prefill_batch(cfg: ModelConfig, shape: ShapeConfig,
+                  concrete: bool = False) -> Dict[str, Any]:
+    bt = train_batch(cfg, shape, concrete)
+    bt.pop("labels")
+    return bt
+
+
+def decode_batch(cfg: ModelConfig, shape: ShapeConfig,
+                 concrete: bool = False) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """(one-token batch, full-length KV cache) for decode cells."""
+    b, s = shape.global_batch, shape.seq_len
+    bt: Dict[str, Any] = {
+        "token": _mk((b, 1), jnp.int32, concrete, "tokens", cfg.vocab),
+        "pos": (jnp.asarray(s - 1, jnp.int32) if concrete
+                else jax.ShapeDtypeStruct((), jnp.int32)),
+    }
+    if cfg.embeds_input:
+        bt["embed1"] = _mk((b, 1, cfg.d_model), jnp.bfloat16, concrete, "normal")
+    model = build_model(cfg)
+    if concrete:
+        cache = model.init_cache(b, s)
+    else:
+        cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    return bt, cache

@@ -1,0 +1,5 @@
+from .config import ModelConfig, ShapeConfig, SHAPES, shape_cells, SUBQUADRATIC
+from .model import LM, EncDecLM, build_model
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "shape_cells",
+           "SUBQUADRATIC", "LM", "EncDecLM", "build_model"]

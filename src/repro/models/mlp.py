@@ -1,0 +1,41 @@
+"""Feed-forward variants: SwiGLU (llama-family), squared-ReLU (nemotron,
+rwkv channel-mix), GELU (whisper)."""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+
+
+class MlpParams(NamedTuple):
+    wi: jnp.ndarray                 # [D, F]
+    wo: jnp.ndarray                 # [F, D]
+    wg: Optional[jnp.ndarray] = None  # [D, F] (swiglu gate)
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> MlpParams:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = cfg.p_dtype()
+    k1, k2, k3 = jax.random.split(key, 3)
+    wg = dense_init(k3, d, f, dt) if cfg.mlp == "swiglu" else None
+    return MlpParams(wi=dense_init(k1, d, f, dt),
+                     wo=dense_init(k2, f, d, dt, scale=f ** -0.5), wg=wg)
+
+
+def mlp_apply(p: MlpParams, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    h = jnp.einsum("bsd,df->bsf", x, p.wi.astype(x.dtype))
+    if kind == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p.wg.astype(x.dtype))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * h
+    elif kind == "sq_relu":
+        h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+    elif kind == "gelu":
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    else:
+        raise ValueError(kind)
+    return jnp.einsum("bsf,fd->bsd", h, p.wo.astype(x.dtype))

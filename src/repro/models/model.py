@@ -1,0 +1,291 @@
+"""Top-level models: decoder LMs (dense/MoE/RWKV/Hymba/VLM) and the whisper
+encoder-decoder, with a uniform functional API:
+
+    lm = build_model(cfg)
+    params = lm.init(key)
+    loss, metrics = lm.loss(params, batch)
+    logits, cache = lm.prefill(params, batch)
+    logits, cache = lm.decode_step(params, cache, batch)
+
+``batch`` layouts are produced by ``repro.launch.specs.input_specs`` (real
+arrays or ShapeDtypeStructs — the same code lowers for the dry-run)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import qkv_project, block_attention, sharded_attention
+from .config import ModelConfig
+from .layers import embed_init, embed_lookup, rms_norm, sinusoidal_positions, tied_logits
+from .mlp import mlp_apply
+from .moe import moe_apply
+from .pspec import constrain
+from .rwkv import rwkv_channel_mix, rwkv_token_mix
+from .ssm import ssm_apply
+from .transformer import (block_apply, block_decode, block_init,
+                          cross_block_apply, cross_block_init, cross_kv,
+                          init_cache)
+
+AUX_COEF = 0.01
+
+
+def _positions_for(cfg: ModelConfig, batch: Dict[str, Any], seq: int):
+    if cfg.rope == "none":
+        return None
+    if cfg.rope == "mrope":
+        return batch["positions"]                    # [3, B, S]
+    lead = (batch.get("tokens", batch.get("embeds"))).shape[0]
+    return jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (lead, seq))
+
+
+class LM:
+    """Decoder-only language model with scan-over-layers."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ---------------------------------------------------------------- init
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        k_emb, k_blocks, k_out = jax.random.split(key, 3)
+        block_keys = jax.random.split(k_blocks, cfg.n_layers)
+        blocks = jax.vmap(lambda k: block_init(k, cfg))(block_keys)
+        return {
+            "embed": embed_init(k_emb, cfg.vocab, cfg.d_model, cfg.p_dtype()),
+            "blocks": blocks,
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+
+    # ------------------------------------------------------------- forward
+    def _embed_in(self, params, batch) -> jnp.ndarray:
+        cfg = self.cfg
+        if cfg.embeds_input:
+            x = batch["embeds"].astype(cfg.act_dtype())
+        else:
+            x = embed_lookup(params["embed"], batch["tokens"]
+                             ).astype(cfg.act_dtype())
+        return constrain(x, "B", None, None)
+
+    def _stack(self, params, x, positions):
+        cfg = self.cfg
+
+        def body(carry, layer_params):
+            h, aux = carry
+            h, a = block_apply(layer_params, h, cfg, positions)
+            return (h, aux + a), None
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        if cfg.scan_layers:
+            (x, aux), _ = jax.lax.scan(fn, (x, jnp.zeros((), jnp.float32)),
+                                       params["blocks"])
+        else:
+            aux = jnp.zeros((), jnp.float32)
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda a: a[i], params["blocks"])
+                (x, aux), _ = fn((x, aux), lp)
+        return x, aux
+
+    def forward(self, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        cfg = self.cfg
+        x = self._embed_in(params, batch)
+        positions = _positions_for(cfg, batch, x.shape[1])
+        x, aux = self._stack(params, x, positions)
+        x = rms_norm(x, params["final_norm"])
+        logits = tied_logits(params["embed"], x, fp32=cfg.logits_fp32)
+        return constrain(logits, "B", None, "T"), aux
+
+    # ---------------------------------------------------------------- loss
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        logits, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+        ce = jnp.mean(nll)
+        total = ce + AUX_COEF * aux
+        return total, {"ce": ce, "aux": aux,
+                       "ppl_proxy": jnp.exp(jnp.minimum(ce, 20.0))}
+
+    # ------------------------------------------------------------- prefill
+    def prefill(self, params, batch) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+        """Returns (last-position logits [B, V], cache)."""
+        cfg = self.cfg
+        x = self._embed_in(params, batch)
+        b, s, _ = x.shape
+        positions = _positions_for(cfg, batch, s)
+
+        def body(carry, layer_params):
+            h, aux = carry
+            h, kv, a = self._block_prefill(layer_params, h, positions)
+            return (h, aux + a), kv
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        (x, _), kvs = jax.lax.scan(fn, (x, jnp.zeros((), jnp.float32)),
+                                   params["blocks"])
+        x = rms_norm(x, params["final_norm"])
+        logits = tied_logits(params["embed"], x[:, -1:], fp32=cfg.logits_fp32)
+        return logits[:, 0], kvs
+
+    def _block_prefill(self, p, x, positions):
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.block == "rwkv":
+            n1 = rms_norm(x, p["norm1"])
+            h, (tm_x, wkv) = rwkv_token_mix(p["rwkv"], n1, cfg)
+            x = x + h
+            h, cm_x = rwkv_channel_mix(p["rwkv"], rms_norm(x, p["norm2"]))
+            return x + h, {"tm_x": tm_x, "cm_x": cm_x, "wkv": wkv}, aux
+        n1 = rms_norm(x, p["norm1"])
+        q, k, v = qkv_project(p["attn"], n1, cfg, positions)
+        ao = sharded_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+        b, s, hq, hd = ao.shape
+        ao = jnp.einsum("bsh,hd->bsd", ao.reshape(b, s, hq * hd),
+                        p["attn"].wo.astype(x.dtype))
+        kv = {"k": k, "v": v}
+        if cfg.block == "hymba":
+            so, s1 = ssm_apply(p["ssm"], n1, cfg)
+            kv["ssm"] = s1
+            ao = (ao + so) * 0.5
+        x = x + ao
+        n2 = rms_norm(x, p["norm2"])
+        if cfg.block == "moe":
+            mo, aux = moe_apply(p["moe"], n2, cfg)
+            if cfg.dense_residual:
+                mo = mo + mlp_apply(p["dense"], n2, cfg.mlp)
+        else:
+            mo = mlp_apply(p["mlp"], n2, cfg.mlp)
+        return x + mo, kv, aux
+
+    # ---------------------------------------------------------- decode step
+    def decode_step(self, params, cache, batch, *, dp_axes=None,
+                    seq_axis=None, mesh=None):
+        """One token for the whole batch.  batch: {"token": [B,1], "pos": i32
+        scalar (position being written)}.  Returns (logits [B, V], cache)."""
+        cfg = self.cfg
+        pos = batch["pos"]
+        if cfg.embeds_input and "embed1" in batch:
+            x1 = batch["embed1"].astype(cfg.act_dtype())[:, 0]
+        else:
+            x1 = embed_lookup(params["embed"], batch["token"][:, 0]
+                              ).astype(cfg.act_dtype())
+        if cfg.rope == "mrope":
+            positions = jnp.broadcast_to(
+                pos.astype(jnp.int32), (3, x1.shape[0], 1))
+        elif cfg.rope == "rope":
+            positions = jnp.broadcast_to(pos.astype(jnp.int32), (x1.shape[0], 1))
+        else:
+            positions = None
+
+        def body(x1, layer_in):
+            layer_params, layer_cache = layer_in
+            x1, new_cache = block_decode(layer_params, x1, layer_cache, cfg,
+                                         pos, positions, dp_axes=dp_axes,
+                                         seq_axis=seq_axis, mesh=mesh)
+            return x1, new_cache
+
+        x1, new_cache = jax.lax.scan(body, x1, (params["blocks"], cache))
+        x1 = rms_norm(x1, params["final_norm"])
+        logits = tied_logits(params["embed"], x1, fp32=cfg.logits_fp32)
+        return logits, new_cache
+
+    def init_cache(self, batch: int, seq: int):
+        return init_cache(self.cfg, batch, seq)
+
+
+class EncDecLM(LM):
+    """Whisper-style encoder-decoder (few layers: unrolled, no scan)."""
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        k_emb, k_enc, k_dec = jax.random.split(key, 3)
+        enc_keys = jax.random.split(k_enc, cfg.enc_layers)
+        dec_keys = jax.random.split(k_dec, cfg.n_layers)
+        return {
+            "embed": embed_init(k_emb, cfg.vocab, cfg.d_model, cfg.p_dtype()),
+            "enc": [block_init(k, cfg) for k in enc_keys],
+            "dec": [cross_block_init(k, cfg) for k in dec_keys],
+            "enc_norm": jnp.ones((cfg.d_model,), jnp.float32),
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+
+    def encode(self, params, frames: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        x = frames.astype(cfg.act_dtype())
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+        for p in params["enc"]:
+            x, _ = block_apply(p, x, cfg, None, causal=False)
+        return rms_norm(x, params["enc_norm"])
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        x = embed_lookup(params["embed"], batch["tokens"]).astype(cfg.act_dtype())
+        s = x.shape[1]
+        x = x + sinusoidal_positions(s, cfg.d_model).astype(x.dtype)
+        for p in params["dec"]:
+            ekv = cross_kv(p, enc_out, cfg)
+            x, _ = cross_block_apply(p, x, ekv, cfg, None)
+        x = rms_norm(x, params["final_norm"])
+        return tied_logits(params["embed"], x, fp32=cfg.logits_fp32), jnp.zeros((), jnp.float32)
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        x = embed_lookup(params["embed"], batch["tokens"]).astype(cfg.act_dtype())
+        b, s = x.shape[:2]
+        x = x + sinusoidal_positions(s, cfg.d_model).astype(x.dtype)
+        cache: Dict[str, Any] = {"k": [], "v": [], "xk": [], "xv": []}
+        for p in params["dec"]:
+            ekv = cross_kv(p, enc_out, cfg)
+            n1 = rms_norm(x, p["norm1"])
+            q, k, v = qkv_project(p["attn"], n1, cfg, None)
+            cache["k"].append(k)
+            cache["v"].append(v)
+            cache["xk"].append(ekv[0])
+            cache["xv"].append(ekv[1])
+            x, _ = cross_block_apply(p, x, ekv, cfg, None)
+        x = rms_norm(x, params["final_norm"])
+        logits = tied_logits(params["embed"], x[:, -1:], fp32=cfg.logits_fp32)
+        cache = {k2: jnp.stack(v2) for k2, v2 in cache.items()}
+        return logits[:, 0], cache
+
+    def decode_step(self, params, cache, batch, *, dp_axes=None,
+                    seq_axis=None, mesh=None):
+        cfg = self.cfg
+        pos = batch["pos"]
+        x1 = embed_lookup(params["embed"], batch["token"][:, 0]
+                          ).astype(cfg.act_dtype())
+        s_max = cache["k"].shape[2]
+        postab = sinusoidal_positions(s_max, cfg.d_model)
+        x1 = x1 + jax.lax.dynamic_index_in_dim(
+            postab, pos, 0, keepdims=False).astype(x1.dtype)
+        new_cache = {k: [] for k in cache}
+        from .transformer import decode_attention
+        for i, p in enumerate(params["dec"]):
+            lc = {k: cache[k][i] for k in cache}
+            n1 = rms_norm(x1, p["norm1"])
+            q, k, v = qkv_project(p["attn"], n1[:, None], cfg, None)
+            o, ck, cv = decode_attention(q[:, 0], lc["k"], lc["v"], k[:, 0],
+                                         v[:, 0], pos, dp_axes, seq_axis, mesh)
+            b = x1.shape[0]
+            x1 = x1 + o.reshape(b, -1) @ p["attn"].wo.astype(x1.dtype)
+            nx = rms_norm(x1, p["norm_x"])
+            qx = (nx @ p["xattn"].wq.astype(x1.dtype)).reshape(
+                b, 1, cfg.n_heads, cfg.hd)
+            xo = block_attention(qx, lc["xk"], lc["xv"], causal=False,
+                                 chunk=cfg.attn_chunk)
+            x1 = x1 + xo.reshape(b, -1) @ p["xattn"].wo.astype(x1.dtype)
+            n2 = rms_norm(x1, p["norm2"])
+            x1 = x1 + mlp_apply(p["mlp"], n2[:, None], cfg.mlp)[:, 0]
+            for kk, vv in (("k", ck), ("v", cv), ("xk", lc["xk"]), ("xv", lc["xv"])):
+                new_cache[kk].append(vv)
+        x1 = rms_norm(x1, params["final_norm"])
+        logits = tied_logits(params["embed"], x1, fp32=cfg.logits_fp32)
+        return logits, {k: jnp.stack(v) for k, v in new_cache.items()}
+
+
+def build_model(cfg: ModelConfig) -> LM:
+    return EncDecLM(cfg) if cfg.enc_dec else LM(cfg)

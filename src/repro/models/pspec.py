@@ -1,0 +1,33 @@
+"""Activation sharding constraints that respect the ambient mesh.
+
+``constrain(x, "B", "T", None, ...)`` applies with_sharding_constraint using
+the current abstract mesh: "B" -> the FSDP/batch axes present in the mesh
+(('pod','data') or ('data',)), "T" -> the tensor axis 'model'.  Outside any
+mesh context (CPU smoke tests) it is a no-op, so model code stays portable.
+Dims that do not divide the axis size are left unconstrained."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def constrain(x, *dims):
+    am = jax.sharding.get_abstract_mesh()
+    if am is None or am.empty:
+        return x
+    names = set(am.axis_names)
+    fsdp = tuple(a for a in ("pod", "data") if a in names)
+    spec = []
+    for sym, size in zip(dims, x.shape):
+        if sym == "B" and fsdp:
+            n = int(np.prod([am.shape[a] for a in fsdp]))
+            spec.append(fsdp if size % n == 0 else None)
+        elif sym == "T" and "model" in names:
+            spec.append("model" if size % am.shape["model"] == 0 else None)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,144 @@
+"""RWKV-6 (Finch) block: token-mix with data-dependent vector decay +
+squared-ReLU channel-mix, both with token shift.
+
+Decode state per layer: (prev token for the two shifts, the [H, dk, dv] wkv
+state) — O(1) in sequence length, which is why rwkv6 runs the ``long_500k``
+cell."""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+from .linear_attn import chunked_linear_attention, linear_attention_decode
+
+
+class RwkvParams(NamedTuple):
+    # token mix
+    mu_r: jnp.ndarray; mu_k: jnp.ndarray; mu_v: jnp.ndarray
+    mu_w: jnp.ndarray; mu_g: jnp.ndarray            # [D] lerp coefficients
+    wr: jnp.ndarray; wk: jnp.ndarray; wv: jnp.ndarray
+    wg: jnp.ndarray; wo: jnp.ndarray                # [D, D]
+    w_decay: jnp.ndarray                            # [D, D] data-dependent decay
+    decay_base: jnp.ndarray                         # [D]
+    u_bonus: jnp.ndarray                            # [H, hd]
+    ln_x: jnp.ndarray                               # [D] group-norm-ish scale
+    # channel mix
+    mu_ck: jnp.ndarray; mu_cr: jnp.ndarray          # [D]
+    ck: jnp.ndarray                                 # [D, F]
+    cv: jnp.ndarray                                 # [F, D]
+    cr: jnp.ndarray                                 # [D, D]
+
+
+def rwkv_init(key, cfg: ModelConfig) -> RwkvParams:
+    d, f = cfg.d_model, cfg.d_ff
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    dt = cfg.p_dtype()
+    ks = jax.random.split(key, 10)
+    mk = lambda i, di, do, s=None: dense_init(ks[i], di, do, dt, scale=s)
+    half = jnp.full((d,), 0.5, dt)
+    return RwkvParams(
+        mu_r=half, mu_k=half, mu_v=half, mu_w=half, mu_g=half,
+        wr=mk(0, d, d), wk=mk(1, d, d), wv=mk(2, d, d),
+        wg=mk(3, d, d), wo=mk(4, d, d),
+        w_decay=mk(5, d, d, 0.01), decay_base=jnp.full((d,), -2.0, jnp.float32),
+        u_bonus=jnp.zeros((h, hd), jnp.float32),
+        ln_x=jnp.ones((d,), jnp.float32),
+        mu_ck=half, mu_cr=half,
+        ck=mk(6, d, f), cv=mk(7, f, d, f ** -0.5), cr=mk(8, d, d),
+    )
+
+
+def _shift(x: jnp.ndarray, prev: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Token shift: x_{t-1} (zeros/prev-carry at t=0).  x [B,S,D]."""
+    pad = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def _decay_logw(p: RwkvParams, xw: jnp.ndarray) -> jnp.ndarray:
+    """Data-dependent log-decay in (-inf, 0): -exp(base + proj(x))."""
+    raw = p.decay_base + jnp.einsum(
+        "bsd,de->bse", xw.astype(jnp.float32), p.w_decay.astype(jnp.float32))
+    return -jnp.exp(jnp.clip(raw, -8.0, 4.0))
+
+
+def rwkv_token_mix(p: RwkvParams, x: jnp.ndarray, cfg: ModelConfig,
+                   state: Optional[Tuple] = None):
+    """x [B,S,D] -> (out [B,S,D], new_state).  state = (prev_x, S)."""
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    prev_x, S0 = (None, None) if state is None else state
+    xs = _shift(x, prev_x)
+    r = jnp.einsum("bsd,de->bse", _mix(x, xs, p.mu_r), p.wr.astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", _mix(x, xs, p.mu_k), p.wk.astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", _mix(x, xs, p.mu_v), p.wv.astype(x.dtype))
+    g = jnp.einsum("bsd,de->bse", _mix(x, xs, p.mu_g), p.wg.astype(x.dtype))
+    logw = _decay_logw(p, _mix(x, xs, p.mu_w))
+    rh = r.reshape(b, s, h, hd)
+    kh = k.reshape(b, s, h, hd)
+    vh = v.reshape(b, s, h, hd)
+    wh = logw.reshape(b, s, h, hd)
+    o, S1 = chunked_linear_attention(rh, kh, vh, wh, u=p.u_bonus,
+                                     chunk=64, state0=S0)
+    o = o.reshape(b, s, d)
+    # simple rms "ln_x" normalisation per head-dim then gate
+    o32 = o.astype(jnp.float32)
+    o32 = o32 * jax.lax.rsqrt(jnp.mean(o32 * o32, -1, keepdims=True) + 1e-6)
+    o = (o32 * p.ln_x).astype(x.dtype) * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", o, p.wo.astype(x.dtype))
+    return out, (x[:, -1], S1)
+
+
+def rwkv_channel_mix(p: RwkvParams, x: jnp.ndarray,
+                     prev_x: Optional[jnp.ndarray] = None):
+    xs = _shift(x, prev_x)
+    k = jnp.einsum("bsd,df->bsf", _mix(x, xs, p.mu_ck), p.ck.astype(x.dtype))
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    kv = jnp.einsum("bsf,fd->bsd", k, p.cv.astype(x.dtype))
+    rgate = jax.nn.sigmoid(jnp.einsum(
+        "bsd,de->bse", _mix(x, xs, p.mu_cr), p.cr.astype(x.dtype)).astype(jnp.float32))
+    return (rgate.astype(x.dtype) * kv), x[:, -1]
+
+
+def rwkv_token_mix_decode(p: RwkvParams, x1: jnp.ndarray, cfg: ModelConfig,
+                          state: Tuple):
+    """Single-token token-mix.  x1 [B, D]; state = (prev_x [B,D], S)."""
+    b, d = x1.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    prev_x, S0 = state
+    xs = prev_x
+    mixn = lambda mu: x1 + (xs - x1) * mu.astype(x1.dtype)
+    r = mixn(p.mu_r) @ p.wr.astype(x1.dtype)
+    k = mixn(p.mu_k) @ p.wk.astype(x1.dtype)
+    v = mixn(p.mu_v) @ p.wv.astype(x1.dtype)
+    g = mixn(p.mu_g) @ p.wg.astype(x1.dtype)
+    raw = p.decay_base + mixn(p.mu_w).astype(jnp.float32) @ p.w_decay.astype(jnp.float32)
+    logw = -jnp.exp(jnp.clip(raw, -8.0, 4.0))
+    o, S1 = linear_attention_decode(
+        r.reshape(b, h, hd), k.reshape(b, h, hd), v.reshape(b, h, hd),
+        logw.reshape(b, h, hd), S0, u=p.u_bonus)
+    o = o.reshape(b, d)
+    o32 = o.astype(jnp.float32)
+    o32 = o32 * jax.lax.rsqrt(jnp.mean(o32 * o32, -1, keepdims=True) + 1e-6)
+    o = (o32 * p.ln_x).astype(x1.dtype) * jax.nn.silu(g.astype(jnp.float32)).astype(x1.dtype)
+    return o @ p.wo.astype(x1.dtype), (x1, S1)
+
+
+def rwkv_channel_mix_decode(p: RwkvParams, x1: jnp.ndarray, prev_x: jnp.ndarray):
+    mixn = lambda mu: x1 + (prev_x - x1) * mu.astype(x1.dtype)
+    k = mixn(p.mu_ck) @ p.ck.astype(x1.dtype)
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x1.dtype)
+    kv = k @ p.cv.astype(x1.dtype)
+    rg = jax.nn.sigmoid((mixn(p.mu_cr) @ p.cr.astype(x1.dtype)).astype(jnp.float32))
+    return rg.astype(x1.dtype) * kv, x1

@@ -1,0 +1,98 @@
+"""Mamba-2/SSD-style selective-state-space heads for Hymba.
+
+Hardware-adaptation note (DESIGN.md): Hymba's Mamba heads use a per-channel
+Mamba-1 scan; we use the SSD formulation (scalar decay per head, state
+``N = ssm_state``) so the sequence mix shares the chunked linear-attention
+core with RWKV — identical TPU dataflow, O(1)-state decode.  The depthwise
+conv of Mamba is folded into the stub frontend (noted as a simplification).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+from .linear_attn import chunked_linear_attention, linear_attention_decode
+
+
+class SsmParams(NamedTuple):
+    w_in: jnp.ndarray        # [D, dI]   value path
+    w_gate: jnp.ndarray      # [D, dI]   silu gate
+    w_bc: jnp.ndarray        # [D, 2N*H] B and C projections (per head)
+    w_dt: jnp.ndarray        # [D, H]    per-head time step
+    a_log: jnp.ndarray       # [H]       decay magnitude
+    d_skip: jnp.ndarray      # [dI]
+    w_out: jnp.ndarray       # [dI, D]
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    h = cfg.ssm_heads
+    hd = cfg.hd
+    return h, hd, h * hd     # heads, head value dim, inner dim
+
+
+def ssm_init(key, cfg: ModelConfig) -> SsmParams:
+    d = cfg.d_model
+    n = cfg.ssm_state
+    h, hd, di = _dims(cfg)
+    dt = cfg.p_dtype()
+    ks = jax.random.split(key, 5)
+    return SsmParams(
+        w_in=dense_init(ks[0], d, di, dt),
+        w_gate=dense_init(ks[1], d, di, dt),
+        w_bc=dense_init(ks[2], d, 2 * n * h, dt),
+        w_dt=dense_init(ks[3], d, h, jnp.float32),
+        a_log=jnp.zeros((h,), jnp.float32),
+        d_skip=jnp.ones((di,), jnp.float32),
+        w_out=dense_init(ks[4], di, d, dt, scale=di ** -0.5),
+    )
+
+
+def _project(p: SsmParams, x: jnp.ndarray, cfg: ModelConfig):
+    b = x.shape[0]
+    lead = x.shape[:-1]
+    n = cfg.ssm_state
+    h, hd, di = _dims(cfg)
+    xv = jnp.einsum("...d,de->...e", x, p.w_in.astype(x.dtype))
+    gate = jnp.einsum("...d,de->...e", x, p.w_gate.astype(x.dtype))
+    bc = jnp.einsum("...d,de->...e", x, p.w_bc.astype(x.dtype)).astype(jnp.float32)
+    bmat, cmat = jnp.split(bc.reshape(lead + (h, 2 * n)), 2, axis=-1)
+    dt_raw = jnp.einsum("...d,dh->...h", x.astype(jnp.float32), p.w_dt)
+    dt = jax.nn.softplus(dt_raw)                              # [.., H]
+    loga = -jnp.exp(p.a_log)                                  # [H] < 0
+    logw = dt * loga[(None,) * len(lead)]                     # [.., H]
+    v = xv.reshape(lead + (h, hd)).astype(jnp.float32) * dt[..., None]
+    return v, bmat, cmat, logw, xv, gate
+
+
+def ssm_apply(p: SsmParams, x: jnp.ndarray, cfg: ModelConfig,
+              state: Optional[jnp.ndarray] = None):
+    """x [B,S,D] -> (y [B,S,D], state [B,H,N,hd])."""
+    b, s, d = x.shape
+    n = cfg.ssm_state
+    h, hd, di = _dims(cfg)
+    v, bmat, cmat, logw, xv, gate = _project(p, x, cfg)
+    logw_k = jnp.broadcast_to(logw[..., None], (b, s, h, n))
+    o, S1 = chunked_linear_attention(cmat, bmat, v, logw_k, u=None,
+                                     chunk=64, state0=state)
+    y = o.reshape(b, s, di) + xv.astype(jnp.float32).reshape(b, s, di) * p.d_skip
+    y = y.astype(x.dtype) * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", y, p.w_out.astype(x.dtype)), S1
+
+
+def ssm_decode(p: SsmParams, x1: jnp.ndarray, cfg: ModelConfig,
+               state: jnp.ndarray):
+    """x1 [B,D]; state [B,H,N,hd]."""
+    b, d = x1.shape
+    h, hd, di = _dims(cfg)
+    v, bmat, cmat, logw, xv, gate = _project(p, x1, cfg)
+    n = cfg.ssm_state
+    logw_k = jnp.broadcast_to(logw[..., None], (b, h, n))
+    o, S1 = linear_attention_decode(cmat, bmat, v, logw_k, state, u=None)
+    y = o.reshape(b, di) + xv.astype(jnp.float32).reshape(b, di) * p.d_skip
+    y = y.astype(x1.dtype) * jax.nn.silu(gate.astype(jnp.float32)).astype(x1.dtype)
+    return y @ p.w_out.astype(x1.dtype), S1

@@ -1,0 +1,154 @@
+"""Optimizers built from scratch (no optax in this environment).
+
+AdamW with configurable moment dtype (bf16 moments keep the 340B/480B cells
+inside v5e HBM; the update math runs in f32) and Adafactor for
+memory-starved deployments.  Global-norm clipping and warmup-cosine schedule
+included.  Optimizer state inherits the parameter sharding (ZeRO-style:
+states live wherever the param shard lives).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    state_dtype: str = "float32"
+    kind: str = "adamw"            # adamw | adafactor
+
+
+def schedule(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, step / jnp.maximum(1.0, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(1.0, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def _decay_mask(path) -> bool:
+    """Apply weight decay only to matrices (not norms/biases/scalars)."""
+    name = ""
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            name = str(entry.key)
+            break
+        if hasattr(entry, "name"):
+            name = str(entry.name)
+            break
+    return not any(t in name for t in ("norm", "mu_", "bias", "b_", "ln_",
+                                       "a_log", "d_skip", "decay_base", "u_bonus"))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+class AdamW:
+    def __init__(self, cfg: OptConfig):
+        self.cfg = cfg
+
+    def init(self, params) -> Dict[str, Any]:
+        dt = jnp.dtype(self.cfg.state_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, params, grads, state):
+        cfg = self.cfg
+        step = state["step"] + 1
+        lr = schedule(cfg, step)
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        b1, b2 = cfg.betas
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        sdt = jnp.dtype(cfg.state_dtype)
+
+        def upd(path, p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+            upd32 = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+            if _decay_mask(path):
+                upd32 = upd32 + cfg.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * upd32).astype(p.dtype)
+            return {"p": new_p, "m": m32.astype(sdt), "v": v32.astype(sdt)}
+
+        out = jax.tree_util.tree_map_with_path(
+            upd, params, grads, state["m"], state["v"])
+        is_cell = lambda t: isinstance(t, dict) and set(t) == {"p", "m", "v"}
+        new_params = jax.tree.map(lambda t: t["p"], out, is_leaf=is_cell)
+        new_m = jax.tree.map(lambda t: t["m"], out, is_leaf=is_cell)
+        new_v = jax.tree.map(lambda t: t["v"], out, is_leaf=is_cell)
+        return new_params, {"m": new_m, "v": new_v, "step": step}, \
+            {"lr": lr, "grad_norm": gnorm}
+
+
+class Adafactor:
+    """Factored second moment (row/col) — O(n+m) state for matrices."""
+
+    def __init__(self, cfg: OptConfig):
+        self.cfg = cfg
+
+    def init(self, params):
+        def factored(p):
+            if p.ndim >= 2:
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(factored, params,
+                                  is_leaf=lambda x: hasattr(x, "shape")),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, params, grads, state):
+        cfg = self.cfg
+        step = state["step"] + 1
+        lr = schedule(cfg, step)
+        d = 1.0 - 0.8 ** step.astype(jnp.float32)   # beta2 ramp
+
+        def upd(p, g, f):
+            g32 = g.astype(jnp.float32)
+            sq = g32 * g32 + 1e-30
+            if p.ndim >= 2:
+                r = d * f["r"] + (1 - d) * jnp.mean(sq, axis=-1)
+                c = d * f["c"] + (1 - d) * jnp.mean(sq, axis=-2)
+                denom = jnp.sqrt(r[..., None] * c[..., None, :]
+                                 / jnp.maximum(jnp.mean(r, -1, keepdims=True)[..., None], 1e-30))
+                newf = {"r": r, "c": c}
+            else:
+                v = d * f["v"] + (1 - d) * sq
+                denom = jnp.sqrt(v)
+                newf = {"v": v}
+            upd32 = g32 / jnp.maximum(denom, 1e-30)
+            # relative update clipping
+            rms = jnp.sqrt(jnp.mean(upd32 * upd32) + 1e-30)
+            upd32 = upd32 / jnp.maximum(1.0, rms)
+            new_p = (p.astype(jnp.float32) - lr * upd32).astype(p.dtype)
+            return {"p": new_p, "f2": newf}
+
+        out = jax.tree.map(upd, params, grads, state["f"])
+        is_cell = lambda t: isinstance(t, dict) and set(t) == {"p", "f2"}
+        new_params = jax.tree.map(lambda t: t["p"], out, is_leaf=is_cell)
+        new_f = jax.tree.map(lambda t: t["f2"], out, is_leaf=is_cell)
+        return new_params, {"f": new_f, "step": step}, {"lr": lr}
+
+
+def make_optimizer(cfg: OptConfig):
+    return Adafactor(cfg) if cfg.kind == "adafactor" else AdamW(cfg)

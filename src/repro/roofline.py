@@ -1,0 +1,116 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+    compute    = HLO_FLOPs        / (chips x 197 TF/s bf16)
+    memory     = HLO_bytes        / (chips x 819 GB/s HBM)
+    collective = collective_bytes / (chips x 50 GB/s ICI)
+
+``cost_analysis`` supplies FLOPs and bytes.  Collective traffic is not in
+cost_analysis: we parse the (post-SPMD, per-device) optimized HLO and sum the
+moved bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, with the standard per-chip link-traffic factors
+(all-reduce counts ~2x its payload: reduce-scatter + all-gather phases).
+Shapes in the per-device module are already per-chip.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "c64": 8, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_LINK_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    bsz = _DTYPE_BYTES.get(dtype)
+    if bsz is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * bsz
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum per-op-kind output bytes (per-device) weighted by link factor."""
+    out: Dict[str, Dict[str, float]] = {
+        k: {"count": 0, "bytes": 0.0, "link_bytes": 0.0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        lhs, rhs = ls.split("=", 1)
+        rhs = rhs.strip()
+        m = re.match(r"(?:\(?)\s*(\w+)\[([\d,]*)\]", rhs)
+        if m is None:
+            continue
+        kind = None
+        for k in _COLLECTIVES:
+            if re.search(rf"\b{k}(-start|-done)?\(", rhs):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if f"{kind}-done(" in rhs:
+            continue  # counted at -start
+        # output may be a tuple: sum all shapes on the rhs head
+        shapes = _SHAPE_RE.findall(rhs.split("(", 1)[0])
+        nbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += nbytes
+        out[kind]["link_bytes"] += nbytes * _LINK_FACTOR[kind]
+    return out
+
+
+def roofline_terms(cost: Dict[str, float], collectives: Dict[str, Dict],
+                   chips: int, *, per_device_cost: bool = True,
+                   peak_flops: float = 197e12, hbm_bw: float = 819e9,
+                   ici_bw: float = 50e9) -> Dict[str, float]:
+    flops = float(cost.get("flops", 0.0) or 0.0)
+    nbytes = float(cost.get("bytes accessed", 0.0) or 0.0)
+    if not per_device_cost:
+        flops /= chips
+        nbytes /= chips
+    coll_bytes = sum(v["link_bytes"] for v in collectives.values())
+    t_compute = flops / peak_flops
+    t_memory = nbytes / hbm_bw
+    t_coll = coll_bytes / ici_bw
+    dom = max((t_compute, "compute"), (t_memory, "memory"),
+              (t_coll, "collective"))
+    return {
+        "flops_per_chip": flops, "bytes_per_chip": nbytes,
+        "collective_bytes_per_chip": coll_bytes,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": dom[1],
+        "t_bound_s": dom[0],
+    }
+
+
+def model_flops(cfg, shape, chips: int) -> Dict[str, float]:
+    """MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D; D = tokens processed.
+
+    For decode shapes, one token per sequence is processed per step."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.tokens
+        flops = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.tokens
+        flops = 2.0 * n_active * tokens       # forward only
+    else:
+        tokens = shape.global_batch           # one new token per sequence
+        flops = 2.0 * n_active * tokens
+    return {"model_flops_total": flops, "model_flops_per_chip": flops / chips,
+            "tokens": tokens}

@@ -1,0 +1,136 @@
+"""Hybrid count-cache routing monitor (DESIGN.md §5).
+
+The paper's machinery applied *inside* the training framework: MoE routing
+assignments form a relational database — tokens are entities (with bucket /
+position attributes), experts are entities, and ``Routed(token, expert)`` is
+a relationship table.  The monitor builds that database from a probe batch
+and answers contingency questions with the HYBRID strategy, including
+*negative* relationships ("how many high-position tokens did expert e NOT
+see?") via the Möbius join — the negation problem, on live training state.
+
+Usage (see examples/moe_routing_monitor.py):
+
+    trace = routing_trace(model, params, batch)          # [L, B, S, K] ids
+    db    = routing_db(trace[layer], buckets, cfg.n_experts)
+    tab, stats = routing_ct(db)                          # complete ct-table
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.database import EntityTable, RelationTable, RelationalDB
+from repro.core.schema import Attribute, EntityType, Relationship, Schema
+from repro.core.strategies import Hybrid
+from repro.core.variables import build_lattice
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.model import LM
+
+
+def routing_trace(model: LM, params, batch) -> jnp.ndarray:
+    """Per-layer top-k expert assignments for a probe batch.
+
+    Runs the stack unrolled (monitoring path — not the jitted train step)
+    and reads the router at each layer's MoE input.  Returns int32
+    [L, B, S, K]."""
+    cfg = model.cfg
+    assert cfg.is_moe, "routing_trace requires an MoE config"
+    x = model._embed_in(params, batch)
+    from repro.models.model import _positions_for
+    positions = _positions_for(cfg, batch, x.shape[1])
+    from repro.models.transformer import block_apply
+    traces: List[jnp.ndarray] = []
+    for i in range(cfg.n_layers):
+        p = jax.tree.map(lambda a: a[i], params["blocks"])
+        n2_in = rms_norm(x, p["norm2"])  # what moe_apply will see *after* attn
+        # recompute the block to advance the stream
+        x, _ = block_apply(p, x, cfg, positions)
+        logits = jnp.einsum("bsd,de->bse", n2_in,
+                            p["moe"].router.astype(n2_in.dtype),
+                            preferred_element_type=jnp.float32)
+        _, eidx = jax.lax.top_k(jax.nn.softmax(logits, -1), cfg.top_k)
+        traces.append(eidx.astype(jnp.int32))
+    return jnp.stack(traces)
+
+
+def routing_db(eidx: jnp.ndarray, buckets: jnp.ndarray,
+               n_experts: int, n_buckets: int = 4,
+               n_pos_buckets: int = 4) -> RelationalDB:
+    """Relational view of one layer's routing.
+
+    eidx [B, S, K] int32 expert ids; buckets [B, S] int32 in [0, n_buckets).
+    Entities: token(bucket, posq), expert(group).  Relationship:
+    Routed(token, expert)."""
+    b, s, k = eidx.shape
+    n_tok = b * s
+    tok_bucket = np.asarray(buckets, np.int32).reshape(n_tok)
+    posq = np.broadcast_to(
+        (np.arange(s, dtype=np.int32) * n_pos_buckets) // s, (b, s)
+    ).reshape(n_tok).copy()
+    e_group = (np.arange(n_experts, dtype=np.int32) * 4) // n_experts
+
+    schema = Schema(
+        entities=(
+            EntityType("token", n_tok, (Attribute("bucket", n_buckets),
+                                        Attribute("posq", n_pos_buckets))),
+            EntityType("expert", n_experts, (Attribute("group", 4),)),
+        ),
+        relationships=(
+            Relationship("Routed", "token", "expert", ()),
+        ),
+    )
+    src = np.repeat(np.arange(n_tok, dtype=np.int32), k)
+    dst = np.asarray(eidx, np.int32).reshape(n_tok * k)
+    # unique (token, expert) pairs — the relationship is a set
+    pairs = np.unique(src.astype(np.int64) * n_experts + dst)
+    src = (pairs // n_experts).astype(np.int32)
+    dst = (pairs % n_experts).astype(np.int32)
+
+    db = RelationalDB(
+        schema,
+        {"token": EntityTable(schema.entity("token"),
+                              {"bucket": tok_bucket, "posq": posq}),
+         "expert": EntityTable(schema.entity("expert"),
+                               {"group": e_group})},
+        {"Routed": RelationTable(schema.relationship("Routed"), src, dst, {})},
+    )
+    db.validate()
+    return db
+
+
+def routing_ct(db: RelationalDB) -> Tuple[object, Dict[str, float]]:
+    """Complete ct-table over (Routed?, bucket, group) via HYBRID counting,
+    plus summary stats.  The Routed=F rows are the negation problem answered
+    by the Möbius join — no second pass over the assignments."""
+    lattice = build_lattice(db.schema, 1)
+    strat = Hybrid()
+    strat.prepare(db, lattice)
+    point = lattice[0]
+    keep = point.all_ct_vars(db.schema, include_rind=True)
+    # project to (bucket, group, rind)
+    keep = tuple(v for v in keep
+                 if v.kind == "rind" or v.owner[-1] in ("bucket", "group"))
+    tab = strat.family_ct(point, keep)
+
+    rind_ax = next(i for i, v in enumerate(tab.vars) if v.kind == "rind")
+    counts = np.asarray(tab.counts)
+    pos = np.take(counts, 1, axis=rind_ax)
+    neg = np.take(counts, 0, axis=rind_ax)
+    total = pos.sum() + neg.sum()
+    load = pos.sum(axis=tuple(i for i, v in enumerate(tab.vars)
+                              if i != rind_ax and v.owner[-1] != "group"
+                              ) if pos.ndim > 1 else None)
+    stats = {
+        "pairs_total": float(total),
+        "routed_pairs": float(pos.sum()),
+        "unrouted_pairs": float(neg.sum()),
+        "routed_fraction": float(pos.sum() / max(total, 1.0)),
+        "joins": strat.stats.joins,
+        "peak_cache_bytes": strat.stats.peak_bytes,
+    }
+    return tab, stats

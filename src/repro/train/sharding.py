@@ -1,0 +1,164 @@
+"""Sharding rules: parameter and activation PartitionSpecs.
+
+2-D scheme (DESIGN.md §4): tensor-parallel over ``model`` on heads/ffn/vocab
+dims, FSDP over ``fsdp_axes`` (``('data',)`` single-pod, ``('pod','data')``
+multi-pod) on the d_model/embed dim.  Dims that do not divide the mesh axis
+are replicated (e.g. hymba's 25 heads, whisper's 8 heads on a 16-way TP
+axis) — the rule checks divisibility against the actual mesh.
+
+Parameter leaf names are the contract with ``models/*``: rules key on the
+trailing-dims semantics of each named leaf; leading scan (L) axes get None.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def mesh_axes(mesh: Mesh) -> Tuple[Tuple[str, ...], str]:
+    """(fsdp_axes, tp_axis) for a production mesh."""
+    names = mesh.axis_names
+    if "pod" in names:
+        return ("pod", "data"), "model"
+    return ("data",), "model"
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+        if hasattr(entry, "name"):
+            return str(entry.name)
+    return ""
+
+
+# trailing-dim spec templates per leaf name: "F" = fsdp, "T" = tp, "-" = none
+_RULES: Dict[str, Tuple[str, ...]] = {
+    # embeddings
+    "embed": ("T", "F"),
+    # attention
+    "wq": ("F", "T"), "wk": ("F", "T"), "wv": ("F", "T"), "wo": ("T", "F"),
+    "bq": ("T",), "bk": ("T",), "bv": ("T",),
+    # mlp
+    "wi": ("F", "T"), "wg": ("F", "T"),
+    # moe (leading E dim -> expert parallel over tp)
+    "router": ("F", "-"),
+    "moe_wi": ("T", "F", "-"), "moe_wg": ("T", "F", "-"),
+    "moe_wo": ("T", "-", "F"),
+    # rwkv
+    "wr": ("F", "T"), "w_decay": ("F", "T"),
+    "ck": ("F", "T"), "cv": ("T", "F"), "cr": ("F", "T"),
+    # ssm
+    "w_in": ("F", "T"), "w_gate": ("F", "T"), "w_bc": ("F", "T"),
+    "w_dt": ("F", "-"), "w_out": ("T", "F"),
+}
+# wk/wv of rwkv are [D, D] like wr; wo appears in attn [H,D], mlp [F,D],
+# rwkv [D,D] — all ("T","F")-compatible; moe wi/wg/wo are disambiguated by a
+# 3-trailing-dim check below.
+
+
+def spec_for_param(path, shape, mesh: Mesh) -> P:
+    fsdp, tp = mesh_axes(mesh)
+    name = _leaf_name(path)
+    path_str = jax.tree_util.keystr(path)
+    ndim = len(shape)
+    if ndim == 0:
+        return P()
+    rule: Optional[Tuple[str, ...]] = None
+    if "moe" in path_str and name in ("wi", "wg", "wo"):
+        rule = _RULES["moe_" + name]
+    elif name in _RULES:
+        rule = _RULES[name]
+    if rule is None or ndim < len(rule):
+        return P(*([None] * ndim))          # norms, biases, mus, scalars
+    lead = ndim - len(rule)
+    spec = [None] * lead
+    for sym, dim in zip(rule, shape[lead:]):
+        if sym == "F":
+            spec.append(fsdp if dim % _axis_size(mesh, fsdp) == 0 else None)
+        elif sym == "T":
+            spec.append(tp if dim % _axis_size(mesh, tp) == 0 else None)
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def param_shardings(abstract_params, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, spec_for_param(path, leaf.shape, mesh)),
+        abstract_params)
+
+
+# ----------------------------------------------------------- activations ---
+
+def batch_spec(name: str, shape, mesh: Mesh, decode: bool = False) -> P:
+    """PartitionSpec for one input-batch leaf."""
+    fsdp, tp = mesh_axes(mesh)
+    bdiv = lambda d: fsdp if d % _axis_size(mesh, fsdp) == 0 else None
+    nd = len(shape)
+    if name == "positions":                       # [3, B, S]
+        return P(None, bdiv(shape[1]), None)
+    if name == "pos" or nd == 0:
+        return P()
+    if name in ("tokens", "labels", "token"):     # [B, S]
+        return P(bdiv(shape[0]), None)
+    if name in ("embeds", "frames", "embed1"):    # [B, S, D]
+        return P(bdiv(shape[0]), None, None)
+    return P(*([None] * nd))
+
+
+def batch_shardings(batch, mesh: Mesh):
+    return {
+        k: NamedSharding(mesh, batch_spec(k, getattr(v, "shape", ()), mesh))
+        for k, v in batch.items()
+    }
+
+
+def cache_spec(name: str, shape, mesh: Mesh) -> P:
+    """Decode-cache leaf specs: KV sequence axis sharded over ``model``
+    (flash-decoding), recurrent states sharded over heads when divisible."""
+    fsdp, tp = mesh_axes(mesh)
+    bdiv = lambda d: fsdp if d % _axis_size(mesh, fsdp) == 0 else None
+    tdiv = lambda d: tp if d % _axis_size(mesh, tp) == 0 else None
+    if name in ("k", "v"):          # [L, B, S, Hkv, hd]
+        return P(None, bdiv(shape[1]), tp, None, None)
+    if name in ("xk", "xv"):        # [L, B, F, Hkv, hd] cross-attn (static)
+        return P(None, bdiv(shape[1]), None, None, None)
+    if name == "wkv":               # [L, B, H, dk, dv]
+        return P(None, bdiv(shape[1]), tdiv(shape[2]), None, None)
+    if name == "ssm":               # [L, B, H, N, hd]
+        return P(None, bdiv(shape[1]), tdiv(shape[2]), None, None)
+    if name in ("tm_x", "cm_x"):    # [L, B, D]
+        return P(None, bdiv(shape[1]), None)
+    return P(*([None] * len(shape)))
+
+
+def cache_shardings(cache, mesh: Mesh):
+    return {
+        k: NamedSharding(mesh, cache_spec(k, v.shape, mesh))
+        for k, v in cache.items()
+    }
+
+
+def logits_sharding(mesh: Mesh, batch_dim: int,
+                    vocab: Optional[int] = None) -> NamedSharding:
+    """[B, V] logits: batch over fsdp, vocab over tp — each only when the
+    dim divides the axis (hymba's 32,001 / whisper's 51,865 vocabs do not
+    divide a 16-way TP axis and are replicated; see cfg.pad_vocab for the
+    padded fast path)."""
+    fsdp, tp = mesh_axes(mesh)
+    b_ax = fsdp if batch_dim % _axis_size(mesh, fsdp) == 0 else None
+    v_ax = tp if vocab is None or vocab % _axis_size(mesh, tp) == 0 else None
+    return NamedSharding(mesh, P(b_ax, v_ax))

@@ -1,0 +1,122 @@
+"""Train and serve step factories.
+
+``make_train_step`` builds the jit-able (state, batch) -> (state, metrics)
+function with microbatch gradient accumulation (``cfg.microbatch`` scans over
+batch slices, f32 grad accumulator carrying the parameter sharding) and the
+optimizer update.  ``make_prefill_step`` / ``make_decode_step`` build the
+serving steps; decode threads the mesh through so the KV-sequence-sharded
+flash-decoding shard_map can run inside the jitted step.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import LM
+from repro.optim.adamw import AdamW, OptConfig, make_optimizer
+from .sharding import mesh_axes, spec_for_param
+
+
+def constrain_like_params(tree):
+    """Pin a param-shaped tree (grad accumulator, compressed grads) to the
+    parameter sharding.  Without this XLA all-gathers FSDP-sharded gradient
+    slices into the f32 accumulator — measured at 5.8 TB/chip/step on
+    arctic-480b (EXPERIMENTS.md §Perf beyond-cells note)."""
+    am = jax.sharding.get_abstract_mesh()
+    if am is None or am.empty:
+        return tree
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: jax.lax.with_sharding_constraint(
+            x, spec_for_param(path, x.shape, am)), tree)
+
+
+def init_train_state(model: LM, opt, key) -> Dict[str, Any]:
+    params = model.init(key)
+    return {"params": params, "opt": opt.init(params)}
+
+
+def make_train_step(model: LM, opt, compress=None) -> Callable:
+    cfg = model.cfg
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(params, mb)
+        return loss, metrics
+
+    def train_step(state, batch):
+        params = state["params"]
+        if cfg.microbatch > 1:
+            m = cfg.microbatch
+
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((m, b // m) + x.shape[1:])
+
+            def split_leaf(k, x):
+                if k == "positions":
+                    return jnp.moveaxis(
+                        x.reshape((3, m, x.shape[1] // m) + x.shape[2:]), 1, 0)
+                return split(x)
+
+            mbs = {k: split_leaf(k, v) for k, v in batch.items()}
+
+            def acc_fn(carry, mb):
+                g_acc, l_acc = carry
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                g_acc = constrain_like_params(g_acc)
+                return (g_acc, l_acc + loss), metrics
+
+            g0 = constrain_like_params(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (grads, loss_sum), metrics = jax.lax.scan(
+                acc_fn, (g0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / m, grads)
+            loss = loss_sum / m
+            metrics = jax.tree.map(lambda x: x[-1], metrics)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        if compress is not None:
+            grads, state = compress(grads, state)
+        new_params, new_opt, opt_metrics = opt.update(
+            params, grads, state["opt"])
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return {"params": new_params, "opt": new_opt, **{
+            k: v for k, v in state.items() if k not in ("params", "opt")}}, metrics
+
+    return train_step
+
+
+def make_loss_step(model: LM) -> Callable:
+    def step(params, batch):
+        return model.loss(params, batch)[0]
+    return step
+
+
+def make_prefill_step(model: LM) -> Callable:
+    def prefill(params, batch):
+        return model.prefill(params, batch)
+    return prefill
+
+
+def make_decode_step(model: LM, mesh=None, seq_sharded: bool = True) -> Callable:
+    """decode(params, cache, batch) -> (logits, cache).  With a mesh, the KV
+    sequence axis is sharded over 'model' and combined via psum."""
+    dp_axes = None
+    seq_axis = None
+    if mesh is not None and seq_sharded:
+        fsdp, tp = mesh_axes(mesh)
+        dp_axes, seq_axis = fsdp, tp
+
+    def decode(params, cache, batch):
+        return model.decode_step(params, cache, batch, dp_axes=dp_axes,
+                                 seq_axis=seq_axis, mesh=mesh)
+
+    return decode

@@ -1,0 +1,153 @@
+"""Correctness of the counting engine vs. the brute-force grounding oracle."""
+
+import numpy as np
+import pytest
+
+from repro.core import (Attribute, EntityType, Relationship, Schema,
+                        build_lattice, complete_ct, positive_ct, synth_db,
+                        point_from_rels, attr_var, edge_var, rind_var,
+                        CostStats, superset_mobius)
+from repro.core.oracle import oracle_ct
+from repro.core.strategies import _OnDemandProvider
+
+import jax.numpy as jnp
+
+
+def tiny_db(seed=0):
+    att = lambda n, c=2: Attribute(n, c)
+    schema = Schema(
+        entities=(
+            EntityType("s", 5, (att("iq", 2), att("rank", 3))),
+            EntityType("c", 4, (att("diff", 2),)),
+            EntityType("p", 3, (att("pop", 2),)),
+        ),
+        relationships=(
+            Relationship("Reg", "s", "c", (att("grade", 2),)),
+            Relationship("RA", "p", "s", (att("sal", 2),)),
+        ),
+    )
+    return synth_db(schema, {"Reg": 8, "RA": 5}, seed=seed)
+
+
+def self_rel_db(seed=1):
+    att = lambda n, c=2: Attribute(n, c)
+    schema = Schema(
+        entities=(EntityType("u", 5, (att("g", 2),)),),
+        relationships=(Relationship("Fr", "u", "u", ()),),
+    )
+    return synth_db(schema, {"Fr": 7}, seed=seed)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_positive_ct_single_rel(seed):
+    db = tiny_db(seed)
+    point = point_from_rels(db.schema, ["Reg"])
+    keep = point.all_ct_vars(db.schema, include_rind=False)
+    got = positive_ct(db, point, keep)
+    want = oracle_ct(db, point, keep, require_positive=True)
+    np.testing.assert_allclose(np.asarray(got.counts), want, rtol=0, atol=1e-4)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_positive_ct_chain(seed):
+    db = tiny_db(seed)
+    point = point_from_rels(db.schema, ["Reg", "RA"])
+    keep = point.all_ct_vars(db.schema, include_rind=False)
+    got = positive_ct(db, point, keep)
+    want = oracle_ct(db, point, keep, require_positive=True)
+    np.testing.assert_allclose(np.asarray(got.counts), want, atol=1e-4)
+
+
+def test_positive_ct_subset_attrs():
+    db = tiny_db(0)
+    point = point_from_rels(db.schema, ["Reg", "RA"])
+    all_vars = point.all_ct_vars(db.schema, include_rind=False)
+    keep = (all_vars[0], all_vars[3], all_vars[-1])
+    got = positive_ct(db, point, keep)
+    want = oracle_ct(db, point, keep, require_positive=True)
+    np.testing.assert_allclose(np.asarray(got.counts), want, atol=1e-4)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_complete_ct_single_rel(seed):
+    db = tiny_db(seed)
+    point = point_from_rels(db.schema, ["Reg"])
+    keep = point.all_ct_vars(db.schema, include_rind=True)
+    prov = _OnDemandProvider(db, CostStats())
+    got = complete_ct(point, keep, prov)
+    want = oracle_ct(db, point, keep)
+    np.testing.assert_allclose(np.asarray(got.counts), want, atol=1e-3)
+    # total must equal the full grounding space
+    assert got.total() == pytest.approx(5 * 4)
+
+
+def test_complete_ct_chain_full():
+    db = tiny_db(0)
+    point = point_from_rels(db.schema, ["Reg", "RA"])
+    keep = point.all_ct_vars(db.schema, include_rind=True)
+    prov = _OnDemandProvider(db, CostStats())
+    got = complete_ct(point, keep, prov)
+    want = oracle_ct(db, point, keep)
+    np.testing.assert_allclose(np.asarray(got.counts), want, atol=1e-3)
+    assert got.total() == pytest.approx(5 * 4 * 3)
+
+
+def test_complete_ct_family_subsets():
+    """Family-style keeps: mixtures of attrs / edge attrs / indicators."""
+    db = tiny_db(2)
+    sch = db.schema
+    point = point_from_rels(sch, ["Reg", "RA"])
+    from repro.core.variables import Var
+    s, c, p = Var("s"), Var("c"), Var("p")
+    cases = [
+        (attr_var(s, "iq", 2), rind_var("Reg")),
+        (attr_var(c, "diff", 2), rind_var("Reg"), rind_var("RA")),
+        (edge_var("Reg", "grade", 2), attr_var(s, "iq", 2)),
+        (edge_var("Reg", "grade", 2), rind_var("RA"), attr_var(p, "pop", 2)),
+        (edge_var("RA", "sal", 2), edge_var("Reg", "grade", 2)),
+    ]
+    for keep in cases:
+        prov = _OnDemandProvider(db, CostStats())
+        got = complete_ct(point, keep, prov)
+        want = oracle_ct(db, point, keep)
+        np.testing.assert_allclose(np.asarray(got.counts), want, atol=1e-3,
+                                   err_msg=str([str(v) for v in keep]))
+
+
+def test_complete_ct_self_relationship():
+    db = self_rel_db()
+    point = point_from_rels(db.schema, ["Fr"])
+    keep = point.all_ct_vars(db.schema, include_rind=True)
+    prov = _OnDemandProvider(db, CostStats())
+    got = complete_ct(point, keep, prov)
+    want = oracle_ct(db, point, keep)
+    np.testing.assert_allclose(np.asarray(got.counts), want, atol=1e-3)
+
+
+def test_butterfly_equals_blockwise():
+    db = tiny_db(1)
+    point = point_from_rels(db.schema, ["Reg", "RA"])
+    from repro.core.variables import Var
+    keep = (attr_var(Var("s"), "iq", 2), rind_var("Reg"), rind_var("RA"))
+    a = complete_ct(point, keep, _OnDemandProvider(db, CostStats()),
+                    use_butterfly=True)
+    b = complete_ct(point, keep, _OnDemandProvider(db, CostStats()),
+                    use_butterfly=False)
+    np.testing.assert_allclose(np.asarray(a.counts), np.asarray(b.counts),
+                               atol=1e-3)
+
+
+def test_superset_mobius_identity():
+    # k=1: [*, T] -> [F, T] with F = * - T
+    x = jnp.asarray([[10.0, 3.0], [8.0, 8.0]]).T  # axis0: {*,T}
+    y = superset_mobius(x, 1)
+    np.testing.assert_allclose(np.asarray(y[0]), np.asarray(x[0] - x[1]))
+    np.testing.assert_allclose(np.asarray(y[1]), np.asarray(x[1]))
+
+
+def test_lattice_builds():
+    db = tiny_db(0)
+    lat = build_lattice(db.schema, 2)
+    names = [p.rels for p in lat]
+    assert frozenset({"Reg"}) in names and frozenset({"RA"}) in names
+    assert frozenset({"Reg", "RA"}) in names  # share the student type

@@ -1,0 +1,49 @@
+"""Sharded counting == single-device counting.
+
+Runs in a subprocess with 8 fake host devices (XLA_FLAGS must be set before
+jax initialises, so the main test process — which needs 1 device — can't do
+it in-process)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np
+    from jax.sharding import Mesh
+    from repro.core import positive_ct, point_from_rels, superset_mobius
+    from repro.core.distributed import sharded_positive_ct, superset_mobius_sharded
+    import jax.numpy as jnp
+    from tests.test_counting_core import tiny_db
+
+    db = tiny_db(4)
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    for rels in (["Reg"], ["Reg", "RA"]):
+        point = point_from_rels(db.schema, rels)
+        keep = point.all_ct_vars(db.schema, include_rind=False)
+        a = positive_ct(db, point, keep)
+        b = sharded_positive_ct(db, point, keep, mesh=mesh)
+        np.testing.assert_allclose(np.asarray(a.counts), np.asarray(b.counts),
+                                   atol=1e-3)
+    x = jnp.arange(2 * 2 * 16, dtype=jnp.float32).reshape(2, 2, 16)
+    with jax.set_mesh(mesh):
+        y = superset_mobius_sharded(x, 2, mesh=mesh)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(superset_mobius(x, 2)))
+    print("DISTRIBUTED-OK")
+""")
+
+
+def test_sharded_counting_matches(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.abspath("src"), os.path.abspath("."),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "DISTRIBUTED-OK" in out.stdout
