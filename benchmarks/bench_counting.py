@@ -68,6 +68,7 @@ def family_workload(db: RelationalDB, lattice, max_parents: int = 3,
 class RunRecord:
     dataset: str
     strategy: str
+    executor: str
     rows: int
     families: int
     completed: bool
@@ -86,13 +87,14 @@ class RunRecord:
 
 def run_one(name: str, strategy_name: str, scale: Optional[float] = None,
             budget_s: float = TIME_BUDGET_S, seed: int = 0,
-            use_kernel_mobius: bool = False) -> RunRecord:
+            use_kernel_mobius: bool = False, executor: str = "dense",
+            cache_budget_bytes: Optional[int] = None) -> RunRecord:
     scale = DEFAULT_SCALES[name] if scale is None else scale
     db = paper_benchmark_db(name, seed=seed, scale=scale)
     lattice = build_lattice(db.schema, max_length=2)
     work = family_workload(db, lattice)
 
-    kw = {}
+    kw = {"executor": executor, "cache_budget_bytes": cache_budget_bytes}
     if use_kernel_mobius:
         from repro.kernels.ops import mobius_nd
         kw["mobius_fn"] = mobius_nd
@@ -112,7 +114,8 @@ def run_one(name: str, strategy_name: str, scale: Optional[float] = None,
     wall = time.perf_counter() - t0
     st = strat.stats
     return RunRecord(
-        dataset=name, strategy=strategy_name, rows=db.total_rows,
+        dataset=name, strategy=strategy_name, executor=executor,
+        rows=db.total_rows,
         families=done, completed=completed, wall_s=round(wall, 2),
         time_metadata=round(st.time_metadata, 3),
         time_positive=round(st.time_positive, 3),
@@ -124,25 +127,32 @@ def run_one(name: str, strategy_name: str, scale: Optional[float] = None,
 def run_all(datasets: Sequence[str] = PAPER_DATASETS,
             strategies: Sequence[str] = ("PRECOUNT", "ONDEMAND", "HYBRID"),
             scale: Optional[float] = None,
-            budget_s: float = TIME_BUDGET_S) -> List[RunRecord]:
+            budget_s: float = TIME_BUDGET_S,
+            executors: Sequence[str] = ("dense", "sparse"),
+            cache_budget_bytes: Optional[int] = None) -> List[RunRecord]:
     recs = []
     for name in datasets:
         for s in strategies:
-            r = run_one(name, s, scale=scale, budget_s=budget_s)
-            flag = "" if r.completed else "  [TIMEOUT]"
-            print(f"[counting] {name:13s} {s:9s} wall={r.wall_s:7.2f}s "
-                  f"meta={r.time_metadata:6.2f} pos={r.time_positive:6.2f} "
-                  f"neg={r.time_negative:6.2f} joins={r.joins:5d} "
-                  f"peakMB={r.peak_bytes / 1e6:9.2f}{flag}", flush=True)
-            recs.append(r)
+            for ex in executors:
+                r = run_one(name, s, scale=scale, budget_s=budget_s,
+                            executor=ex,
+                            cache_budget_bytes=cache_budget_bytes)
+                flag = "" if r.completed else "  [TIMEOUT]"
+                print(f"[counting] {name:13s} {s:9s} {ex:6s} "
+                      f"wall={r.wall_s:7.2f}s "
+                      f"meta={r.time_metadata:6.2f} pos={r.time_positive:6.2f} "
+                      f"neg={r.time_negative:6.2f} joins={r.joins:5d} "
+                      f"peakMB={r.peak_bytes / 1e6:9.2f}{flag}", flush=True)
+                recs.append(r)
     return recs
 
 
 # ------------------------------------------------------------- paper views --
 
 def fig3_runtime(recs: List[RunRecord]) -> List[dict]:
-    """Fig. 3: stacked time decomposition per (dataset, strategy)."""
+    """Fig. 3: stacked time decomposition per (dataset, strategy, executor)."""
     return [{"dataset": r.dataset, "strategy": r.strategy,
+             "executor": r.executor,
              "metadata_s": r.time_metadata, "positive_s": r.time_positive,
              "negative_s": r.time_negative,
              "total_s": round(r.time_metadata + r.time_positive
@@ -151,15 +161,20 @@ def fig3_runtime(recs: List[RunRecord]) -> List[dict]:
 
 
 def fig4_memory(recs: List[RunRecord]) -> List[dict]:
-    """Fig. 4: peak resident ct-cache bytes per (dataset, strategy)."""
+    """Fig. 4: peak resident ct-cache bytes per (dataset, strategy,
+    executor)."""
     return [{"dataset": r.dataset, "strategy": r.strategy,
+             "executor": r.executor,
              "peak_mb": round(r.peak_bytes / 1e6, 3)} for r in recs]
 
 
 def table5_sizes(recs: List[RunRecord]) -> List[dict]:
     """Table 5: summed family-ct rows (ONDEMAND/HYBRID) vs global-ct rows
-    (PRECOUNT) per dataset."""
-    by = {(r.dataset, r.strategy): r for r in recs}
+    (PRECOUNT) per dataset (first executor seen; ct sizes are
+    backend-invariant)."""
+    by = {}
+    for r in recs:
+        by.setdefault((r.dataset, r.strategy), r)
     out = []
     for name in dict.fromkeys(r.dataset for r in recs):
         row = {"dataset": name}
@@ -173,10 +188,22 @@ def table5_sizes(recs: List[RunRecord]) -> List[dict]:
     return out
 
 
+def bench_trajectory(recs: List[RunRecord]) -> List[dict]:
+    """The cross-PR perf trajectory: (strategy × dataset × executor) →
+    wall time / peak bytes / ct rows.  Written to BENCH_counting.json."""
+    return [{"dataset": r.dataset, "strategy": r.strategy,
+             "executor": r.executor, "wall_s": r.wall_s,
+             "peak_bytes": r.peak_bytes, "ct_rows": r.ct_rows,
+             "completed": r.completed} for r in recs]
+
+
 def main(out_dir: str = "results/bench", scale: Optional[float] = None,
          datasets: Sequence[str] = PAPER_DATASETS,
-         budget_s: float = TIME_BUDGET_S, spotlight: bool = True) -> dict:
-    recs = run_all(datasets=datasets, scale=scale, budget_s=budget_s)
+         budget_s: float = TIME_BUDGET_S, spotlight: bool = True,
+         executors: Sequence[str] = ("dense", "sparse"),
+         bench_json: str = "BENCH_counting.json") -> dict:
+    recs = run_all(datasets=datasets, scale=scale, budget_s=budget_s,
+                   executors=executors)
     art = {
         "runs": [r.as_dict() for r in recs],
         "fig3_runtime": fig3_runtime(recs),
@@ -185,20 +212,27 @@ def main(out_dir: str = "results/bench", scale: Optional[float] = None,
     }
     if spotlight:
         # the paper's headline: hybrid counting scales to millions of facts.
-        # Full-scale VisualGenome (15.8M rows) / IMDb (1.06M rows), HYBRID.
+        # Full-scale VisualGenome (15.8M rows) / IMDb (1.06M rows), HYBRID on
+        # the sparse backend (positive phase scales in nnz, not entities×D).
         spot = []
         for name, sc in (("IMDb", 1.0), ("VisualGenome", 1.0)):
-            r = run_one(name, "HYBRID", scale=sc, budget_s=1200.0)
-            print(f"[spotlight] {name} rows={r.rows} HYBRID "
+            r = run_one(name, "HYBRID", scale=sc, budget_s=1200.0,
+                        executor="sparse")
+            print(f"[spotlight] {name} rows={r.rows} HYBRID/sparse "
                   f"wall={r.wall_s}s pos={r.time_positive} "
                   f"neg={r.time_negative} completed={r.completed}",
                   flush=True)
             spot.append(r.as_dict())
+            recs.append(r)
         art["spotlight_full_scale"] = spot
     out = Path(out_dir)
     out.mkdir(parents=True, exist_ok=True)
     (out / "counting.json").write_text(json.dumps(art, indent=1))
     print(f"[counting] wrote {out / 'counting.json'}")
+    if bench_json:
+        Path(bench_json).write_text(
+            json.dumps(bench_trajectory(recs), indent=1))
+        print(f"[counting] wrote {bench_json}")
     return art
 
 

@@ -1,0 +1,106 @@
+"""Version-tolerant wrappers for jax APIs that moved between releases.
+
+The repo targets the modern surface (``jax.shard_map``, ``jax.sharding
+.AxisType``, ``jax.set_mesh``); this module backfills each name from the
+experimental location when running on an older jax (e.g. 0.4.x, where
+``shard_map`` still lives in ``jax.experimental.shard_map`` and takes
+``check_rep`` instead of ``check_vma``).  Import from here, never from jax
+directly, for any of these symbols.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Any
+
+import jax
+
+try:                                     # jax >= 0.6
+    from jax import shard_map as _shard_map
+except ImportError:                      # jax < 0.6
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+# Feature probes for APIs with no sensible fallback: callers (and tests)
+# gate sharded code paths on these instead of crashing mid-trace.
+HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+HAS_SET_MESH = hasattr(jax, "set_mesh") or hasattr(jax.sharding, "set_mesh")
+HAS_ABSTRACT_MESH = hasattr(jax.sharding, "get_abstract_mesh")
+
+
+def shard_map(f, **kwargs):
+    """``jax.shard_map`` with kwarg renames smoothed over.
+
+    ``check_vma`` (new name) falls back to ``check_rep`` (old name); kwargs
+    the installed jax does not know are dropped rather than TypeError'd.
+    """
+    if "check_vma" in kwargs and "check_vma" not in _SHARD_MAP_PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    kwargs = {k: v for k, v in kwargs.items() if k in _SHARD_MAP_PARAMS}
+    return _shard_map(f, **kwargs)
+
+
+def get_abstract_mesh():
+    """The ambient mesh set by ``set_mesh`` — native on new jax, the
+    module-level emulation (installed below) on old jax."""
+    return jax.sharding.get_abstract_mesh()
+
+
+def make_mesh(axis_shapes, axis_names, axis_types=None) -> Any:
+    """``jax.make_mesh`` minus the ``axis_types`` kwarg on old jax."""
+    if axis_types is not None and HAS_AXIS_TYPE:
+        return jax.make_mesh(axis_shapes, axis_names, axis_types=axis_types)
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+# ---------------------------------------------------------------------------
+# Backfill the modern ambient-mesh API onto the jax namespace when missing,
+# so call sites (and tests) written against it run unchanged on old jax.
+# The emulation keeps a process-local current mesh: ``set_mesh`` is a
+# context manager that also enters the concrete mesh (the 0.4.x resource
+# env), and ``get_abstract_mesh`` returns it (a concrete Mesh quacks like
+# an AbstractMesh for the attributes used here: .empty/.axis_names/.shape).
+# ---------------------------------------------------------------------------
+
+if not HAS_ABSTRACT_MESH or not HAS_SET_MESH:
+    import contextlib
+
+    _AMBIENT_MESH = []
+
+    @contextlib.contextmanager
+    def _set_mesh(mesh):
+        _AMBIENT_MESH.append(mesh)
+        try:
+            with mesh:
+                yield mesh
+        finally:
+            _AMBIENT_MESH.pop()
+
+    def _get_abstract_mesh():
+        return _AMBIENT_MESH[-1] if _AMBIENT_MESH else None
+
+    if not hasattr(jax.sharding, "set_mesh"):
+        jax.sharding.set_mesh = _set_mesh
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = jax.sharding.set_mesh
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+        jax.sharding.get_abstract_mesh = _get_abstract_mesh
+
+if not HAS_AXIS_TYPE:
+    class _AxisTypeNS:
+        """Placeholder enum; values are accepted (and ignored) by the
+        make_mesh wrapper below."""
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = _AxisTypeNS
+
+    _orig_make_mesh = jax.make_mesh
+
+    def _make_mesh_compat(axis_shapes, axis_names, *args, **kwargs):
+        kwargs.pop("axis_types", None)
+        return _orig_make_mesh(axis_shapes, axis_names)
+
+    jax.make_mesh = _make_mesh_compat

@@ -1,6 +1,8 @@
 """Core library: the paper's contribution — pre/post/hybrid counts caching
 for scalable statistical-relational model discovery — as composable JAX
-modules."""
+modules, layered as planner (:mod:`.plan`) / executors (:mod:`.executors`)
+/ cache (:mod:`.cache`) under thin strategy policies (:mod:`.strategies`).
+"""
 
 from .schema import Attribute, EntityType, Relationship, Schema
 from .database import RelationalDB, synth_db, paper_benchmark_db, PAPER_DATASETS
@@ -8,9 +10,16 @@ from .variables import (Var, Atom, CtVar, LatticePoint, attr_var, edge_var,
                         rind_var, build_lattice, point_from_rels)
 from .ct import CtTable
 from .contract import CostStats, positive_ct, entity_hist
+from .plan import ContractionPlan, compile_plan
+from .executors import (DenseExecutor, Executor, SparseExecutor, EXECUTORS,
+                        make_executor)
+from .cache import CtCache
+from .engine import (CountingEngine, CachedFullPositives, OnDemandPositives,
+                     TupleIdPositives)
 from .mobius import complete_ct, superset_mobius
-from .strategies import Strategy, Precount, OnDemand, Hybrid, make_strategy, STRATEGIES
-from .bdeu import bdeu_score_2d, family_score
+from .strategies import (Strategy, Precount, OnDemand, Hybrid, TupleId,
+                         make_strategy, STRATEGIES)
+from .bdeu import bdeu_score_2d, bdeu_score_batch, family_score
 from .search import StructureSearch, discover_model, BNModel
 
 __all__ = [
@@ -19,8 +28,13 @@ __all__ = [
     "Var", "Atom", "CtVar", "LatticePoint", "attr_var", "edge_var", "rind_var",
     "build_lattice", "point_from_rels", "CtTable",
     "CostStats", "positive_ct", "entity_hist",
+    "ContractionPlan", "compile_plan",
+    "Executor", "DenseExecutor", "SparseExecutor", "EXECUTORS", "make_executor",
+    "CtCache", "CountingEngine",
+    "CachedFullPositives", "OnDemandPositives", "TupleIdPositives",
     "complete_ct", "superset_mobius",
-    "Strategy", "Precount", "OnDemand", "Hybrid", "make_strategy", "STRATEGIES",
-    "bdeu_score_2d", "family_score",
+    "Strategy", "Precount", "OnDemand", "Hybrid", "TupleId",
+    "make_strategy", "STRATEGIES",
+    "bdeu_score_2d", "bdeu_score_batch", "family_score",
     "StructureSearch", "discover_model", "BNModel",
 ]

@@ -1,0 +1,115 @@
+"""CtCache: one budgeted LRU cache under every counting strategy.
+
+The seed carried three ad-hoc dict caches (`_OnDemandProvider._cache`,
+`_CachedPositiveProvider.full`, `_TupleIdProvider._msgs`) plus a per-strategy
+family memo — none with a budget, and none that ever *decremented*
+``CostStats.cache_bytes``, so the Fig. 4 memory proxy (``peak_bytes``) was
+wrong the moment anything should have been dropped.  This module replaces
+all of them:
+
+* every entry is charged by byte size (``CtTable.nbytes``, array
+  ``.nbytes``, or an explicit ``nbytes=``);
+* a byte budget triggers LRU eviction, and evictions *decrement* the
+  shared :class:`~repro.core.contract.CostStats` so ``cache_bytes`` is the
+  live footprint and ``peak_bytes`` the true high-water mark;
+* an entry larger than the whole budget is admitted transiently (so its
+  residency shows up in ``peak_bytes``) and immediately dropped;
+* eviction is safe by construction: every caller has a recompute path on
+  miss (positives re-contract, messages re-propagate, family tables
+  re-join).
+
+Keys are arbitrary hashable tuples; by convention the first element names
+the namespace (``"pos"``, ``"full"``, ``"complete"``, ``"msg"``, ``"fam"``,
+``"hist"``) so one cache instance can back every layer of a strategy.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Hashable, Optional
+
+from .contract import CostStats
+
+
+def _nbytes_of(value: Any) -> int:
+    nb = getattr(value, "nbytes", None)
+    if nb is not None:
+        return int(nb)
+    if isinstance(value, tuple):
+        return sum(_nbytes_of(v) for v in value)
+    return 0
+
+
+class CtCache:
+    """Byte-budgeted LRU cache for ct-tables and message matrices."""
+
+    def __init__(self, budget_bytes: Optional[int] = None,
+                 stats: Optional[CostStats] = None):
+        self.budget_bytes = budget_bytes
+        self.stats = stats
+        self._entries: "OrderedDict[Hashable, Tuple[Any, int]]" = OrderedDict()
+        self.nbytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.dropped = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._entries
+
+    def get(self, key: Hashable, default=None):
+        hit = self._entries.get(key)
+        if hit is None:
+            self.misses += 1
+            return default
+        self._entries.move_to_end(key)
+        self.hits += 1
+        return hit[0]
+
+    def put(self, key: Hashable, value: Any,
+            nbytes: Optional[int] = None) -> Any:
+        """Insert (or refresh) ``key``; returns ``value`` for chaining."""
+        nb = _nbytes_of(value) if nbytes is None else int(nbytes)
+        if key in self._entries:
+            self._evict_one(key)
+        self._entries[key] = (value, nb)
+        self.nbytes += nb
+        if self.stats is not None:
+            self.stats.bump_cache(nb)      # records the peak before any drop
+        self._shrink_to_budget(just_added=key)
+        return value
+
+    # -- eviction -----------------------------------------------------------
+    def _evict_one(self, key: Hashable) -> None:
+        _, nb = self._entries.pop(key)
+        self.nbytes -= nb
+        if self.stats is not None:
+            self.stats.bump_cache(-nb)
+
+    def _shrink_to_budget(self, just_added: Optional[Hashable] = None) -> None:
+        if self.budget_bytes is None:
+            return
+        while self.nbytes > self.budget_bytes and len(self._entries) > 1:
+            # the just-added entry sits at the MRU end, so the LRU pop below
+            # can only reach it once everything older is gone
+            self._evict_one(next(iter(self._entries)))
+            self.evictions += 1
+        if self.nbytes > self.budget_bytes and just_added in self._entries:
+            # the new entry alone exceeds the budget: admit-then-drop, so
+            # peak_bytes reflects its transient residency
+            self._evict_one(just_added)
+            self.dropped += 1
+
+    def evict_all(self) -> None:
+        for key in list(self._entries):
+            self._evict_one(key)
+            self.evictions += 1
+
+    def info(self) -> dict:
+        return dict(entries=len(self._entries), nbytes=self.nbytes,
+                    budget_bytes=self.budget_bytes, hits=self.hits,
+                    misses=self.misses, evictions=self.evictions,
+                    dropped=self.dropped)

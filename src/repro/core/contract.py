@@ -1,26 +1,34 @@
-"""Positive ct-tables via tree tensor contraction (the JOIN problem on MXU).
+"""Cost instrumentation + one-hot contraction primitives.
 
-The SQL ``INNER JOIN + GROUP BY + COUNT(*)`` of FACTORBASE becomes a single
-message-passing sweep over the lattice point's variable tree:
+Historically this module WAS the counting engine: a hard-coded dense
+one-hot tree contraction.  After the planner/executor/cache refactor the
+engine lives in three layers —
 
-* per-variable one-hot attribute encodings,
-* per-relationship edge gathers + segment-sums (the join),
-* elementwise products at shared variables (the group-by combine).
+* :mod:`repro.core.plan`       compiles ``(LatticePoint, keep)`` queries,
+* :mod:`repro.core.executors`  evaluates plans (dense one-hot / sparse
+  segment-sum backends),
+* :mod:`repro.core.cache`      budgeted LRU storage for every ct artefact —
 
-Each hop is ``gather → (outer) multiply → segment_sum`` — on TPU the one-hot
-multiply/accumulate maps onto the MXU (see ``kernels/hist_kernel.py``); here we
-express it with ``jax.ops.segment_sum`` so XLA can fuse it on any backend.
+and this module keeps what the whole stack shares: the paper-metric
+instrumentation (:class:`CostStats`: Fig. 3 time decomposition, Fig. 4
+memory proxy, Table 5 ct sizes), the dense one-hot helpers reused by the
+dense executor and the sharded counting path, and thin compatibility
+wrappers (:func:`positive_ct`, :func:`entity_hist`) that compile + execute
+on the dense backend.
 
-Complexity: O(edges × D) per hop where D is the flattened value-space of the
-subtree — the paper's Eq. (3) growth, paid once per lattice point in
-PRECOUNT/HYBRID and once per family in ONDEMAND.
+Each dense hop is ``gather → (outer) multiply → segment_sum`` — on TPU the
+one-hot multiply/accumulate maps onto the MXU (see
+``kernels/hist_kernel.py``).  Complexity: O(edges × D) per hop where D is
+the flattened value-space of the subtree — the paper's Eq. (3) growth.
+The sparse executor replaces this with O(nnz) scatter-adds; see
+:mod:`repro.core.executors`.
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,19 +36,24 @@ import numpy as np
 
 from .ct import CtTable
 from .database import RelationalDB
-from .schema import Schema
-from .variables import Atom, CtVar, LatticePoint, Var, attr_var, edge_var
+from .variables import CtVar, LatticePoint, Var, attr_var
 
 
 @dataclass
 class CostStats:
-    """Instrumentation mirroring the paper's reported metrics."""
+    """Instrumentation mirroring the paper's reported metrics.
+
+    ``cache_bytes`` is the *live* cache footprint: :class:`~repro.core
+    .cache.CtCache` bumps it on insert and **decrements it on eviction or
+    drop**, so ``peak_bytes`` (the Fig. 4 memory proxy) is a true
+    high-water mark even under a byte budget.
+    """
     joins: int = 0                # number of edge-table join sweeps
     rows_scanned: int = 0         # edge rows touched by joins
     ct_cells: int = 0             # dense ct cells materialised
     ct_rows: int = 0              # sparse-equivalent rows materialised
-    cache_bytes: int = 0          # live cache footprint (Fig. 4 proxy)
-    peak_bytes: int = 0
+    cache_bytes: int = 0          # live cache footprint
+    peak_bytes: int = 0           # high-water mark (Fig. 4 proxy)
     time_metadata: float = 0.0    # Fig. 3 decomposition
     time_positive: float = 0.0
     time_negative: float = 0.0
@@ -77,7 +90,7 @@ class CostStats:
 
 
 # --------------------------------------------------------------------------
-# one-hot helpers
+# one-hot helpers (dense backend + sharded counting)
 # --------------------------------------------------------------------------
 
 def _onehot(codes: jnp.ndarray, card: int, dtype) -> jnp.ndarray:
@@ -101,7 +114,9 @@ def entity_onehot(db: RelationalDB, var: Var, keep: Sequence[CtVar],
     for a in tab.type.attrs:
         cv = attr_var(var, a.name, a.card)
         if cv in keep:
-            msg, mvars = _expand(msg, mvars, _onehot(jnp.asarray(tab.attrs[a.name]), a.card, dtype), cv)
+            msg, mvars = _expand(msg, mvars,
+                                 _onehot(jnp.asarray(tab.attrs[a.name]),
+                                         a.card, dtype), cv)
     return msg, mvars
 
 
@@ -115,74 +130,6 @@ def entity_hist(db: RelationalDB, var: Var, keep: Sequence[CtVar],
     flat = jnp.sum(msg, axis=0)
     counts = flat.reshape(tuple(v.card for v in mvars)) if mvars else flat[0]
     return CtTable(tuple(mvars), counts)
-
-
-# --------------------------------------------------------------------------
-# tree contraction
-# --------------------------------------------------------------------------
-
-def positive_ct(db: RelationalDB, point: LatticePoint,
-                keep: Optional[Sequence[CtVar]] = None,
-                dtype=jnp.float32,
-                stats: Optional[CostStats] = None) -> CtTable:
-    """Positive ct-table ``ct_+`` of a lattice point: counts over value
-    combinations of ``keep`` among groundings where every relationship of the
-    point holds.  ``keep`` may contain entity-attr and edge-attr CtVars of the
-    point; defaults to all of them.  Indicator axes are *not* present (they
-    are all implicitly T) — the Möbius join adds them.
-    """
-    schema = db.schema
-    if keep is None:
-        keep = [v for v in point.all_ct_vars(schema, include_rind=False)]
-    keep = list(keep)
-
-    if not point.atoms:
-        raise ValueError("positive_ct needs at least one atom")
-
-    # var tree: adjacency var -> [(atom, other_var)]
-    adj: Dict[Var, List[Tuple[Atom, Var]]] = {}
-    for a in point.atoms:
-        adj.setdefault(a.src, []).append((a, a.dst))
-        adj.setdefault(a.dst, []).append((a, a.src))
-    # root at the tree centre (max degree): interior per-row messages stay
-    # one-hop wide, and the root-level product is deferred to the chunked
-    # Khatri-Rao contraction below instead of a full (n, prod D) expansion.
-    root = max(point.vars, key=lambda v: len(adj.get(v, ())))
-
-    def visit(v: Var, parent_atom: Optional[Atom]) -> Tuple[jnp.ndarray, List[CtVar]]:
-        msg, mvars = entity_onehot(db, v, keep, dtype)
-        for atom, u in adj.get(v, ()):  # children
-            if atom is parent_atom:
-                continue
-            child_msg, child_vars = visit(u, atom)
-            hop, hop_vars = _join_hop(db, atom, child=u, parent=v,
-                                      child_msg=child_msg, child_vars=child_vars,
-                                      keep=keep, dtype=dtype, stats=stats)
-            n, d1 = msg.shape
-            msg = (msg[:, :, None] * hop[:, None, :]).reshape(n, d1 * hop.shape[1])
-            mvars = mvars + hop_vars
-        return msg, mvars
-
-    # collect the root's factors WITHOUT expanding them against each other
-    factors: List[Tuple[jnp.ndarray, List[CtVar]]] = []
-    own_msg, own_vars = entity_onehot(db, root, keep, dtype)
-    factors.append((own_msg, own_vars))
-    for atom, u in adj.get(root, ()):
-        child_msg, child_vars = visit(u, atom)
-        hop, hop_vars = _join_hop(db, atom, child=u, parent=root,
-                                  child_msg=child_msg, child_vars=child_vars,
-                                  keep=keep, dtype=dtype, stats=stats)
-        factors.append((hop, hop_vars))
-
-    flat, mvars = _khatri_rao_reduce(factors)
-    counts = flat.reshape(tuple(v.card for v in mvars)) if mvars else flat.reshape(())
-    tab = CtTable(tuple(mvars), counts)
-    # canonical order: as in `keep`
-    order = tuple(v for v in keep if v in tab.vars)
-    tab = tab.transpose_to(order) if order != tab.vars else tab
-    if stats is not None:
-        stats.ct_cells += tab.size
-    return tab
 
 
 def _khatri_rao_reduce(factors: List[Tuple[jnp.ndarray, List[CtVar]]],
@@ -217,38 +164,28 @@ def _khatri_rao_reduce(factors: List[Tuple[jnp.ndarray, List[CtVar]]],
     return out.reshape(-1), mvars
 
 
-def _join_hop(db: RelationalDB, atom: Atom, child: Var, parent: Var,
-              child_msg: jnp.ndarray, child_vars: List[CtVar],
-              keep: Sequence[CtVar], dtype, stats: Optional[CostStats]
-              ) -> Tuple[jnp.ndarray, List[CtVar]]:
-    """Push a child-subtree message through one relationship: the join.
+# --------------------------------------------------------------------------
+# compatibility wrapper: compile + execute on the dense backend
+# --------------------------------------------------------------------------
 
-    (n_child, D) -> (n_parent, D * E) where E covers kept edge attributes.
-    Edge-attr axes are sized ``card + 1`` (N/A slot last, empty here) so they
-    line up with complete tables without re-indexing.
+def positive_ct(db: RelationalDB, point: LatticePoint,
+                keep: Optional[Sequence[CtVar]] = None,
+                dtype=jnp.float32,
+                stats: Optional[CostStats] = None) -> CtTable:
+    """Positive ct-table ``ct_+`` of a lattice point: counts over value
+    combinations of ``keep`` among groundings where every relationship of
+    the point holds.  ``keep`` may contain entity-attr and edge-attr CtVars
+    of the point; defaults to all of them.  Indicator axes are *not*
+    present (they are all implicitly T) — the Möbius join adds them.
+
+    Equivalent to compiling a plan and running the dense executor; callers
+    that care about the backend should use :class:`~repro.core.engine
+    .CountingEngine` directly.
     """
-    rt = db.relations[atom.rel]
-    if child == atom.src and parent == atom.dst:
-        gather_idx, scatter_idx = jnp.asarray(rt.src), jnp.asarray(rt.dst)
-        n_parent = db.entities[atom.dst.etype].size
-    elif child == atom.dst and parent == atom.src:
-        gather_idx, scatter_idx = jnp.asarray(rt.dst), jnp.asarray(rt.src)
-        n_parent = db.entities[atom.src.etype].size
-    else:
-        raise AssertionError("atom does not connect child/parent")
-
-    m = child_msg[gather_idx]                     # (edges, D)
-    mvars = list(child_vars)
-    for a in rt.type.attrs:
-        cv = edge_var(rt.type.name, a.name, a.card)
-        if cv in keep:
-            hot = _onehot(jnp.asarray(rt.attrs[a.name]), cv.card, dtype)  # card+1, NA empty
-            m, mvars = _expand(m, mvars, hot, cv)
-    out = jax.ops.segment_sum(m, scatter_idx, num_segments=n_parent)
-    if stats is not None:
-        stats.joins += 1
-        stats.rows_scanned += int(gather_idx.shape[0])
-    return out, mvars
+    from .executors import DenseExecutor     # local import: avoids a cycle
+    from .plan import compile_plan
+    plan = compile_plan(db.schema, point, keep)
+    return DenseExecutor(dtype=dtype).positive(db, plan, stats)
 
 
 def cartesian_size(db: RelationalDB, vars: Sequence[Var]) -> float:

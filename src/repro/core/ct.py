@@ -4,7 +4,10 @@ The paper stores ct-tables as sparse SQL rows; on TPU we store them as dense
 count tensors over the attribute value space, one axis per :class:`CtVar`.
 Dense tensors keep projection (the PRECOUNT/HYBRID family-extraction
 primitive) a pure ``sum`` over axes — a VPU-friendly reduction — and keep the
-Möbius transform a strided butterfly.
+Möbius transform a strided butterfly.  (Sparsity is exploited upstream:
+the sparse *executor* contracts raw edge lists in O(nnz) and only the
+final table is dense — see :mod:`repro.core.executors`.)  Tables are the
+unit of account in the byte-budgeted :class:`~repro.core.cache.CtCache`.
 
 ``nnz_rows`` reports the sparse-equivalent row count so benchmarks can be
 compared against the paper's Table 5 numbers.

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from ..compat import shard_map
 
 from .contract import CostStats, entity_onehot, _onehot, _expand
 from .ct import CtTable

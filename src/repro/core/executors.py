@@ -1,0 +1,417 @@
+"""Executors: pluggable backends that evaluate contraction plans.
+
+The planner (:mod:`repro.core.plan`) fixes the traversal; an executor picks
+the message representation:
+
+* :class:`DenseExecutor` — the one-hot path: per-variable one-hot attribute
+  encodings, per-relationship ``gather → (outer) multiply → segment_sum``
+  hops, chunked Khatri-Rao reduction at the root.  Every hop costs
+  O(edges × D) multiply-accumulates and materialises (n, D) messages — MXU
+  friendly, but the Eq. (3) blowup is paid in *entities × D*.
+
+* :class:`SparseExecutor` — the code path: attribute combinations are
+  mixed-radix ``int32`` codes, never one-hot.  A leaf hop is a single
+  ``jax.ops.segment_sum`` of ones over flattened ``(parent, code)`` keys —
+  O(nnz) scatter-adds over the raw edge list with no per-entity one-hot
+  materialisation — and the root combine segment-sums child messages by the
+  root's own code.  Positive ct-tables therefore scale in ``nnz`` rather
+  than ``entities × D``, which is what makes the paper's
+  VisualGenome-scale configuration reachable.
+
+Both executors expose the same interface (``positive`` / ``hist`` /
+``leaf_hop`` / ``root_reduce`` / ``mobius``) so strategies, the Möbius join
+and the tuple-ID variant are executor-agnostic.  The negative-phase step
+(``mobius``) defaults to the pure-jnp superset transform and can be wired
+to the Pallas kernel (``kernels/mobius_kernel.py``) with
+``use_pallas_mobius=True``.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .contract import CostStats, _khatri_rao_reduce, _onehot
+from .ct import CtTable
+from .database import RelationalDB
+from .plan import ContractionPlan, FactorSpec, HopSpec, NodeSpec
+from .variables import Atom, CtVar, Var
+
+_MAX_CHUNK_CELLS = 32_000_000
+_INT32_LIMIT = 2 ** 31 - 1
+
+
+def project_columns(m: jnp.ndarray, mvars: Tuple[CtVar, ...],
+                    keep: Sequence[CtVar]
+                    ) -> Tuple[jnp.ndarray, Tuple[CtVar, ...]]:
+    """Marginalise the column axes of an entity-indexed message matrix
+    ``(n, prod cards(mvars))`` onto the vars present in ``keep``."""
+    want = tuple(v for v in mvars if v in keep)
+    if want == tuple(mvars):
+        return m, tuple(mvars)
+    wide = m.reshape((m.shape[0],) + tuple(v.card for v in mvars))
+    dropped = tuple(i + 1 for i, v in enumerate(mvars) if v not in keep)
+    if dropped:
+        wide = jnp.sum(wide, axis=dropped)
+    return wide.reshape(m.shape[0], -1), want
+
+
+def _finalise(flat: jnp.ndarray, mvars: Sequence[CtVar],
+              keep: Sequence[CtVar], stats: Optional[CostStats]) -> CtTable:
+    mvars = tuple(mvars)
+    counts = flat.reshape(tuple(v.card for v in mvars)) if mvars \
+        else flat.reshape(())
+    tab = CtTable(mvars, counts)
+    order = tuple(v for v in keep if v in tab.vars)
+    if order != tab.vars:
+        tab = tab.transpose_to(order)
+    if stats is not None:
+        stats.ct_cells += tab.size
+    return tab
+
+
+class Executor:
+    """Backend interface: evaluate plans against a database."""
+
+    name = "base"
+
+    def __init__(self, dtype=jnp.float32, mobius_fn=None,
+                 use_pallas_mobius: bool = False):
+        self.dtype = dtype
+        if mobius_fn is None and use_pallas_mobius:
+            from ..kernels.ops import mobius_nd
+            mobius_fn = mobius_nd
+        self._mobius_fn = mobius_fn
+
+    # -- negative phase -----------------------------------------------------
+    def mobius(self, stack: jnp.ndarray, k: int) -> jnp.ndarray:
+        """Superset Möbius transform over the leading ``k`` binary axes —
+        the Möbius join's butterfly step."""
+        if self._mobius_fn is not None:
+            return self._mobius_fn(stack, k)
+        from .mobius import superset_mobius
+        return superset_mobius(stack, k)
+
+    # -- positive phase -----------------------------------------------------
+    def positive(self, db: RelationalDB, plan: ContractionPlan,
+                 stats: Optional[CostStats] = None) -> CtTable:
+        """Evaluate a compiled plan: one message per root hop, then the
+        root combine.  Backends only implement the two primitives."""
+        factors = [self.hop_message(db, hop, stats) for hop in plan.root.hops]
+        return self.root_reduce(db, plan.root.own, factors, plan.keep, stats)
+
+    def hop_message(self, db: RelationalDB, hop: HopSpec,
+                    stats: Optional[CostStats] = None
+                    ) -> Tuple[jnp.ndarray, Tuple[CtVar, ...]]:
+        """Full message matrix ``(n_parent, D)`` of one root-adjacent hop,
+        including the child's entire subtree."""
+        raise NotImplementedError
+
+    def hist(self, db: RelationalDB, var: Var, attrs: Tuple[CtVar, ...],
+             stats: Optional[CostStats] = None) -> CtTable:
+        raise NotImplementedError
+
+    def leaf_hop(self, db: RelationalDB, atom: Atom, child: Var, parent: Var,
+                 child_attrs: Tuple[CtVar, ...],
+                 edge_attrs: Tuple[CtVar, ...],
+                 stats: Optional[CostStats] = None
+                 ) -> Tuple[jnp.ndarray, Tuple[CtVar, ...]]:
+        """Message matrix ``(n_parent, D)`` a bare child variable sends
+        through one relationship — the tuple-ID precompute primitive."""
+        raise NotImplementedError
+
+    def root_reduce(self, db: RelationalDB, own: FactorSpec,
+                    factors: Sequence[Tuple[jnp.ndarray, Tuple[CtVar, ...]]],
+                    keep: Sequence[CtVar],
+                    stats: Optional[CostStats] = None) -> CtTable:
+        """Combine the root variable's own attributes with entity-indexed
+        factor matrices ``(n_root, D_i)`` into a ct-table."""
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# shared edge-list bookkeeping
+# ---------------------------------------------------------------------------
+
+def _hop_indices(db: RelationalDB, atom: Atom, child: Var, parent: Var):
+    rt = db.relations[atom.rel]
+    if child == atom.src and parent == atom.dst:
+        return rt, rt.src, rt.dst, db.entities[atom.dst.etype].size
+    if child == atom.dst and parent == atom.src:
+        return rt, rt.dst, rt.src, db.entities[atom.src.etype].size
+    raise AssertionError("atom does not connect child/parent")
+
+
+# ---------------------------------------------------------------------------
+# dense executor (one-hot contraction)
+# ---------------------------------------------------------------------------
+
+class DenseExecutor(Executor):
+    name = "dense"
+
+    def _entity_factor(self, db: RelationalDB, fs: FactorSpec
+                       ) -> Tuple[jnp.ndarray, List[CtVar]]:
+        tab = db.entities[fs.var.etype]
+        msg = jnp.ones((tab.size, 1), dtype=self.dtype)
+        mvars: List[CtVar] = []
+        for cv in fs.attrs:
+            hot = _onehot(jnp.asarray(tab.attrs[cv.owner[1]]), cv.card,
+                          self.dtype)
+            n, d = msg.shape
+            msg = (msg[:, :, None] * hot[:, None, :]).reshape(n, d * cv.card)
+            mvars.append(cv)
+        return msg, mvars
+
+    def _hop(self, db: RelationalDB, hop: HopSpec, child_msg: jnp.ndarray,
+             child_vars: List[CtVar], stats: Optional[CostStats]
+             ) -> Tuple[jnp.ndarray, List[CtVar]]:
+        rt, gather_idx, scatter_idx, n_parent = _hop_indices(
+            db, hop.atom, hop.child, hop.parent)
+        m = child_msg[jnp.asarray(gather_idx)]            # (edges, D)
+        mvars = list(child_vars)
+        for cv in hop.edge_attrs:
+            hot = _onehot(jnp.asarray(rt.attrs[cv.owner[1]]), cv.card,
+                          self.dtype)                     # card+1, NA empty
+            n, d = m.shape
+            m = (m[:, :, None] * hot[:, None, :]).reshape(n, d * cv.card)
+            mvars.append(cv)
+        out = jax.ops.segment_sum(m, jnp.asarray(scatter_idx),
+                                  num_segments=n_parent)
+        if stats is not None:
+            stats.joins += 1
+            stats.rows_scanned += int(gather_idx.shape[0])
+        return out, mvars
+
+    def _node_message(self, db: RelationalDB, node: NodeSpec,
+                      stats: Optional[CostStats]
+                      ) -> Tuple[jnp.ndarray, List[CtVar]]:
+        msg, mvars = self._entity_factor(db, node.own)
+        for hop in node.hops:
+            child_msg, child_vars = self._node_message(db, hop.child_node,
+                                                       stats)
+            h, hvars = self._hop(db, hop, child_msg, child_vars, stats)
+            n, d = msg.shape
+            msg = (msg[:, :, None] * h[:, None, :]).reshape(n, d * h.shape[1])
+            mvars = mvars + hvars
+        return msg, mvars
+
+    def hop_message(self, db: RelationalDB, hop: HopSpec,
+                    stats: Optional[CostStats] = None
+                    ) -> Tuple[jnp.ndarray, Tuple[CtVar, ...]]:
+        child_msg, child_vars = self._node_message(db, hop.child_node, stats)
+        m, mvars = self._hop(db, hop, child_msg, child_vars, stats)
+        return m, tuple(mvars)
+
+    def hist(self, db: RelationalDB, var: Var, attrs: Tuple[CtVar, ...],
+             stats: Optional[CostStats] = None) -> CtTable:
+        msg, mvars = self._entity_factor(db, FactorSpec(var, tuple(attrs)))
+        flat = jnp.sum(msg, axis=0)
+        counts = flat.reshape(tuple(v.card for v in mvars)) if mvars \
+            else flat[0]
+        return CtTable(tuple(mvars), counts)
+
+    def leaf_hop(self, db: RelationalDB, atom: Atom, child: Var, parent: Var,
+                 child_attrs: Tuple[CtVar, ...],
+                 edge_attrs: Tuple[CtVar, ...],
+                 stats: Optional[CostStats] = None
+                 ) -> Tuple[jnp.ndarray, Tuple[CtVar, ...]]:
+        fs = FactorSpec(child, tuple(child_attrs))
+        leaf = NodeSpec(fs, (), fs.attrs)
+        hop = HopSpec(atom, child, parent, tuple(edge_attrs), leaf,
+                      fs.attrs + tuple(edge_attrs))
+        return self.hop_message(db, hop, stats)
+
+    def root_reduce(self, db: RelationalDB, own: FactorSpec,
+                    factors: Sequence[Tuple[jnp.ndarray, Tuple[CtVar, ...]]],
+                    keep: Sequence[CtVar],
+                    stats: Optional[CostStats] = None) -> CtTable:
+        fs: List[Tuple[jnp.ndarray, List[CtVar]]] = [
+            self._entity_factor(db, own)]
+        fs.extend((m, list(vs)) for m, vs in factors)
+        flat, mvars = _khatri_rao_reduce(fs)
+        return _finalise(flat, mvars, keep, stats)
+
+
+# ---------------------------------------------------------------------------
+# sparse executor (int32 codes + segment_sum over edge lists)
+# ---------------------------------------------------------------------------
+
+class _SparseMsg:
+    """Per-entity message: a mixed-radix scalar code over ``svars`` (one
+    value per entity — exact, no one-hot) plus an optional dense block over
+    ``dvars`` (present only after an aggregation made the distribution
+    genuinely multi-valued)."""
+
+    __slots__ = ("code", "ds", "svars", "dense", "dvars")
+
+    def __init__(self, code, ds, svars, dense, dvars):
+        self.code, self.ds, self.svars = code, ds, svars
+        self.dense, self.dvars = dense, dvars
+
+
+def _np_codes(cols: List[np.ndarray], cards: List[int]) -> np.ndarray:
+    code = np.zeros(len(cols[0]) if cols else 0, dtype=np.int64)
+    for col, card in zip(cols, cards):
+        code = code * card + col.astype(np.int64)
+    return code
+
+
+class SparseExecutor(Executor):
+    name = "sparse"
+
+    def _entity_code(self, db: RelationalDB, fs: FactorSpec
+                     ) -> Tuple[Optional[np.ndarray], int]:
+        """Mixed-radix host-side code per entity.  Kept as numpy: codes are
+        consumed by host index arithmetic in ``_hop``; only the final
+        segment-id array ever moves to the device."""
+        if not fs.attrs:
+            return None, 1
+        tab = db.entities[fs.var.etype]
+        cols = [np.asarray(tab.attrs[cv.owner[1]]) for cv in fs.attrs]
+        code = _np_codes(cols, [cv.card for cv in fs.attrs])
+        return code.astype(np.int32), fs.card
+
+    def _hop(self, db: RelationalDB, hop: HopSpec, msg: _SparseMsg,
+             stats: Optional[CostStats]
+             ) -> Tuple[jnp.ndarray, Tuple[CtVar, ...]]:
+        """Push a child message through one relationship.  Scalar-coded axes
+        travel as index arithmetic inside the segment ids; only genuinely
+        dense axes (from deeper aggregations) are carried as row vectors."""
+        rt, gather_idx, scatter_idx, n_parent = _hop_indices(
+            db, hop.atom, hop.child, hop.parent)
+        gather_np = np.asarray(gather_idx)
+        n_edges = int(gather_np.shape[0])
+
+        # per-edge scalar code: child code gathered at the child end of the
+        # edge, extended with this relationship's kept edge attributes
+        ds = msg.ds
+        if msg.code is not None:
+            ecode = msg.code[gather_np].astype(np.int64)
+        else:
+            ecode = np.zeros(n_edges, dtype=np.int64)
+        svars = tuple(msg.svars)
+        for cv in hop.edge_attrs:
+            ecode = ecode * cv.card + np.asarray(
+                rt.attrs[cv.owner[1]]).astype(np.int64)
+            ds *= cv.card
+            svars = svars + (cv,)
+
+        total = n_parent * ds
+        if total > _INT32_LIMIT:
+            raise OverflowError(
+                f"sparse hop segment space {total} exceeds int32; use the "
+                f"dense executor or reduce kept axes")
+        seg = jnp.asarray((np.asarray(scatter_idx).astype(np.int64) * ds
+                           + ecode).astype(np.int32))
+        if msg.dense is None:
+            flat = jax.ops.segment_sum(
+                jnp.ones((n_edges,), dtype=self.dtype), seg,
+                num_segments=total)
+            out = flat.reshape(n_parent, ds)
+            out_vars = svars
+        else:
+            rows = msg.dense[jnp.asarray(gather_np)]       # (edges, Dd)
+            agg = jax.ops.segment_sum(rows, seg, num_segments=total)
+            out = agg.reshape(n_parent, ds * msg.dense.shape[1])
+            out_vars = svars + tuple(msg.dvars)
+        if stats is not None:
+            stats.joins += 1
+            stats.rows_scanned += n_edges
+        return out, out_vars
+
+    def _node_message(self, db: RelationalDB, node: NodeSpec,
+                      stats: Optional[CostStats]) -> _SparseMsg:
+        code, ds = self._entity_code(db, node.own)
+        dense: Optional[jnp.ndarray] = None
+        dvars: Tuple[CtVar, ...] = ()
+        for hop in node.hops:
+            child = self._node_message(db, hop.child_node, stats)
+            h, hvars = self._hop(db, hop, child, stats)
+            if dense is None:
+                dense, dvars = h, hvars
+            else:
+                n, d = dense.shape
+                dense = (dense[:, :, None] * h[:, None, :]).reshape(
+                    n, d * h.shape[1])
+                dvars = dvars + hvars
+        return _SparseMsg(code, ds, tuple(node.own.attrs), dense, dvars)
+
+    def _reduce_by_code(self, code: Optional[jnp.ndarray], ds: int, n: int,
+                        factors: Sequence[jnp.ndarray]) -> jnp.ndarray:
+        """``out[c, :] = sum_{i: code[i]=c} ⊗_f factors[f][i, :]`` —
+        the root combine as one segment-sum (chunked when the Khatri-Rao
+        expansion would not fit)."""
+        if code is None:
+            code = jnp.zeros((n,), dtype=jnp.int32)
+        if not factors:
+            return jax.ops.segment_sum(
+                jnp.ones((n,), dtype=self.dtype), code, num_segments=ds)
+        if len(factors) == 1:
+            return jax.ops.segment_sum(factors[0], code,
+                                       num_segments=ds).reshape(-1)
+        d_prod = int(np.prod([f.shape[1] for f in factors], dtype=np.int64))
+        chunk = max(64, min(n, _MAX_CHUNK_CELLS // max(d_prod, 1)))
+        out = jnp.zeros((ds, d_prod), dtype=self.dtype)
+        for s in range(0, n, chunk):
+            kr = factors[0][s:s + chunk]
+            for f in factors[1:]:
+                blk = f[s:s + chunk]
+                kr = (kr[:, :, None] * blk[:, None, :]).reshape(
+                    kr.shape[0], -1)
+            out = out + jax.ops.segment_sum(kr, code[s:s + chunk],
+                                            num_segments=ds)
+        return out.reshape(-1)
+
+    def hop_message(self, db: RelationalDB, hop: HopSpec,
+                    stats: Optional[CostStats] = None
+                    ) -> Tuple[jnp.ndarray, Tuple[CtVar, ...]]:
+        child = self._node_message(db, hop.child_node, stats)
+        return self._hop(db, hop, child, stats)
+
+    def hist(self, db: RelationalDB, var: Var, attrs: Tuple[CtVar, ...],
+             stats: Optional[CostStats] = None) -> CtTable:
+        fs = FactorSpec(var, tuple(attrs))
+        code, ds = self._entity_code(db, fs)
+        n = db.entities[var.etype].size
+        flat = self._reduce_by_code(code, ds, n, ())
+        if not fs.attrs:
+            return CtTable((), flat[0])
+        return CtTable(fs.attrs, flat.reshape(tuple(v.card for v in fs.attrs)))
+
+    def leaf_hop(self, db: RelationalDB, atom: Atom, child: Var, parent: Var,
+                 child_attrs: Tuple[CtVar, ...],
+                 edge_attrs: Tuple[CtVar, ...],
+                 stats: Optional[CostStats] = None
+                 ) -> Tuple[jnp.ndarray, Tuple[CtVar, ...]]:
+        fs = FactorSpec(child, tuple(child_attrs))
+        leaf = NodeSpec(fs, (), fs.attrs)
+        hop = HopSpec(atom, child, parent, tuple(edge_attrs), leaf,
+                      fs.attrs + tuple(edge_attrs))
+        return self.hop_message(db, hop, stats)
+
+    def root_reduce(self, db: RelationalDB, own: FactorSpec,
+                    factors: Sequence[Tuple[jnp.ndarray, Tuple[CtVar, ...]]],
+                    keep: Sequence[CtVar],
+                    stats: Optional[CostStats] = None) -> CtTable:
+        code, ds = self._entity_code(db, own)
+        n = db.entities[own.var.etype].size
+        mvars: List[CtVar] = list(own.attrs)
+        mats: List[jnp.ndarray] = []
+        for m, vs in factors:
+            mats.append(m)
+            mvars.extend(vs)
+        flat = self._reduce_by_code(code, ds, n, mats)
+        return _finalise(flat, mvars, keep, stats)
+
+
+EXECUTORS = {"dense": DenseExecutor, "sparse": SparseExecutor}
+
+
+def make_executor(name, **kw) -> Executor:
+    """Resolve an executor by name (or pass an instance through)."""
+    if isinstance(name, Executor):
+        return name
+    return EXECUTORS[name.lower()](**kw)

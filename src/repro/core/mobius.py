@@ -6,9 +6,12 @@ for a final configuration with relation set ``A`` true and ``B`` false,
     N[A=T, B=F, attrs] = sum_{S subseteq B} (-1)^|S| ct_+[A u S true, attrs]
 
 No access to the original data is needed: every term is a positive ct-table of
-a *sub-pattern*, available from the lattice cache (PRECOUNT/HYBRID) or
-contracted on demand (ONDEMAND), with disconnected sub-patterns factorising
-into outer products of component tables and per-variable histograms.
+a *sub-pattern*, served by a :class:`PositiveProvider` — one of the policies
+in :mod:`repro.core.engine` (cached-full for PRECOUNT/HYBRID, on-demand for
+ONDEMAND, message recombination for TUPLEID), all backed by the shared
+planner/executor/cache machinery — with disconnected sub-patterns
+factorising into outer products of component tables and per-variable
+histograms.
 
 Two equivalent evaluation orders are implemented:
 
@@ -18,7 +21,10 @@ Two equivalent evaluation orders are implemented:
 * ``butterfly`` — the superset Möbius transform as k in-place passes
   ``F-slice = *-slice − T-slice`` over a [2^k, D] stack; this is the
   memory-bound transform the Pallas kernel (kernels/mobius_kernel.py)
-  implements.  Used when no edge-attr axes are kept.
+  implements.  Used when no edge-attr axes are kept.  The ``mobius_fn``
+  hook is normally the executor's negative-phase step
+  (:meth:`repro.core.executors.Executor.mobius`), which dispatches to the
+  Pallas kernel when the executor was built with ``use_pallas_mobius``.
 
 The transform output is integral and non-negative (counts); property tests
 assert both.

@@ -7,18 +7,27 @@ the pluggable counting :class:`~repro.core.strategies.Strategy` — this module
 is deliberately strategy-agnostic: it is the *workload generator* whose
 pattern stream the pre/post/hybrid caches serve.
 
-Family scores are memoised globally by (child, parents): the same family is
-generated repeatedly during search (and across lattice points), which is
-exactly what makes counts caching pay off.
+Family scoring is **batched**: each hill-climbing round first enumerates
+every candidate move, fetches the ct-tables of the not-yet-scored families
+through the strategy (cache-served for PRECOUNT/HYBRID/TUPLEID), groups the
+resulting ``N_ijk`` matrices by shape, and scores each group in ONE
+jitted/vmapped BDeu call (:func:`~repro.core.bdeu.bdeu_score_batch`)
+instead of one Python → XLA round-trip per family.  Scores are memoised
+globally by (child, parents): the same family is generated repeatedly
+during search (and across lattice points), which is exactly what makes
+counts caching pay off.
 """
 
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
-from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+from dataclasses import dataclass
+from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Set, Tuple
 
-from .bdeu import family_score
+import jax.numpy as jnp
+import numpy as np
+
+from .bdeu import bdeu_score_batch, family_nijk, family_score
 from .database import RelationalDB
 from .strategies import Strategy
 from .variables import CtVar, LatticePoint, build_lattice
@@ -34,17 +43,22 @@ class BNModel:
         return [(p, c) for c, ps in self.parents.items() for p in ps]
 
 
+Family = Tuple[CtVar, FrozenSet[CtVar]]          # (child, parents)
+
+
 class StructureSearch:
     def __init__(self, db: RelationalDB, strategy: Strategy,
                  max_parents: int = 3, ess: float = 1.0,
-                 max_moves: int = 200):
+                 max_moves: int = 200, batch_scoring: bool = True):
         self.db = db
         self.strategy = strategy
         self.max_parents = max_parents
         self.ess = ess
         self.max_moves = max_moves
-        self._score_cache: Dict[Tuple[CtVar, FrozenSet[CtVar]], float] = {}
+        self.batch_scoring = batch_scoring
+        self._score_cache: Dict[Family, float] = {}
         self.families_scored = 0
+        self.batch_calls = 0          # vmapped BDeu dispatches issued
 
     # -- family scoring (through the counting strategy) ---------------------
     def local_score(self, point: LatticePoint, child: CtVar,
@@ -56,6 +70,40 @@ class StructureSearch:
             self._score_cache[key] = family_score(tab, child, self.ess)
             self.families_scored += 1
         return self._score_cache[key]
+
+    def batch_scores(self, point: LatticePoint,
+                     fams: Iterable[Family]) -> None:
+        """Score every not-yet-cached family of ``fams`` with one vmapped
+        BDeu call per N_ijk shape group."""
+        todo: List[Family] = []
+        seen: Set[Family] = set()
+        for fam in fams:
+            if fam not in self._score_cache and fam not in seen:
+                seen.add(fam)
+                todo.append(fam)
+        if not todo:
+            return
+        groups: Dict[Tuple[int, int], List[Tuple[Family, jnp.ndarray]]] = {}
+        for child, parents in todo:
+            keep = tuple(sorted(parents)) + (child,)
+            tab = self.strategy.family_ct(point, keep)
+            nijk = family_nijk(tab, child)
+            groups.setdefault(tuple(nijk.shape), []).append(
+                ((child, parents), nijk))
+        for shape, members in groups.items():
+            stack = jnp.stack([nijk for _, nijk in members])
+            # pad the batch axis to the next power of two: the frontier
+            # shrinks every round, and an exact-B jit would recompile per
+            # round; all-zero rows score 0 and are sliced off below
+            b = stack.shape[0]
+            b_pad = 1 << max(b - 1, 0).bit_length()
+            if b_pad != b:
+                stack = jnp.pad(stack, ((0, b_pad - b), (0, 0), (0, 0)))
+            scores = np.asarray(bdeu_score_batch(stack, ess=self.ess))[:b]
+            self.batch_calls += 1
+            for (fam, _), s in zip(members, scores):
+                self._score_cache[fam] = float(s)
+        self.families_scored += len(todo)
 
     # -- acyclicity ----------------------------------------------------------
     @staticmethod
@@ -74,6 +122,24 @@ class StructureSearch:
         return False
 
     # -- hill climbing per lattice point -------------------------------------
+    def _candidate_moves(self, nodes: Sequence[CtVar],
+                         parents: Dict[CtVar, Set[CtVar]]
+                         ) -> List[Tuple[str, CtVar, CtVar, FrozenSet[CtVar]]]:
+        """All legal single-edge moves, in deterministic enumeration order."""
+        moves = []
+        for src, dst in itertools.permutations(nodes, 2):
+            if src in parents[dst]:
+                moves.append(("del", src, dst,
+                              frozenset(parents[dst] - {src})))
+            else:
+                if len(parents[dst]) >= self.max_parents:
+                    continue
+                if self._creates_cycle(parents, src, dst):
+                    continue
+                moves.append(("add", src, dst,
+                              frozenset(parents[dst] | {src})))
+        return moves
+
     def climb_point(self, point: LatticePoint,
                     init_parents: Optional[Dict[CtVar, Set[CtVar]]] = None
                     ) -> BNModel:
@@ -87,29 +153,22 @@ class StructureSearch:
         def sc(child: CtVar) -> float:
             return self.local_score(point, child, frozenset(parents[child]))
 
+        if self.batch_scoring:
+            self.batch_scores(point, ((n, frozenset(parents[n]))
+                                      for n in nodes))
         total = sum(sc(n) for n in nodes)
         for _ in range(self.max_moves):
+            moves = self._candidate_moves(nodes, parents)
+            if self.batch_scoring:
+                # one vmapped scoring pass over the whole round's frontier
+                self.batch_scores(point, ((dst, ps)
+                                          for _, _, dst, ps in moves))
             best_delta, best_apply = 0.0, None
-            for src, dst in itertools.permutations(nodes, 2):
-                if src in parents[dst]:
-                    # removal
-                    old = sc(dst)
-                    new = self.local_score(point, dst,
-                                           frozenset(parents[dst] - {src}))
-                    if new - old > best_delta:
-                        best_delta = new - old
-                        best_apply = ("del", src, dst)
-                else:
-                    if len(parents[dst]) >= self.max_parents:
-                        continue
-                    if self._creates_cycle(parents, src, dst):
-                        continue
-                    old = sc(dst)
-                    new = self.local_score(point, dst,
-                                           frozenset(parents[dst] | {src}))
-                    if new - old > best_delta:
-                        best_delta = new - old
-                        best_apply = ("add", src, dst)
+            for op, src, dst, new_ps in moves:
+                delta = (self.local_score(point, dst, new_ps) - sc(dst))
+                if delta > best_delta:
+                    best_delta = delta
+                    best_apply = (op, src, dst)
             if best_apply is None:
                 break
             op, src, dst = best_apply
@@ -137,12 +196,14 @@ class StructureSearch:
 
 def discover_model(db: RelationalDB, strategy: Strategy,
                    max_chain_length: int = 2, max_parents: int = 3,
-                   ess: float = 1.0) -> Tuple[Dict[LatticePoint, BNModel], Strategy]:
+                   ess: float = 1.0, batch_scoring: bool = True
+                   ) -> Tuple[Dict[LatticePoint, BNModel], Strategy]:
     """End-to-end model discovery: build lattice, run the strategy's
     pre-search phase, hill-climb bottom-up.  Returns per-point models and the
     strategy (whose ``stats`` carry the paper's metrics)."""
     lattice = build_lattice(db.schema, max_chain_length)
     strategy.prepare(db, lattice)
-    search = StructureSearch(db, strategy, max_parents=max_parents, ess=ess)
+    search = StructureSearch(db, strategy, max_parents=max_parents, ess=ess,
+                             batch_scoring=batch_scoring)
     models = search.run(lattice)
     return models, strategy

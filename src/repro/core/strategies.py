@@ -1,354 +1,182 @@
-"""PRECOUNT / ONDEMAND / HYBRID counts-caching strategies (paper Algs. 1-3).
+"""PRECOUNT / ONDEMAND / HYBRID / TUPLEID counts-caching strategies
+(paper Algs. 1-3 + the tuple-ID future-work variant).
 
-All three expose the same interface to structure search:
+All four expose the same interface to structure search:
 
-    prepare(db, lattice)                  # pre-search phase
+    prepare(db, lattice)                    # pre-search phase
     family_ct(point, keep_vars) -> CtTable  # during search
 
 and record the paper's instrumentation (Fig. 3 time decomposition into
-metadata / positive / negative, Fig. 4 memory, Table 5 ct sizes) in ``stats``.
+metadata / positive / negative, Fig. 4 memory, Table 5 ct sizes) in
+``stats``.
+
+Since the planner/executor/cache refactor each strategy is a *thin policy*
+over shared machinery (:mod:`repro.core.engine`): it picks a positive-table
+policy, decides what runs at ``prepare`` time vs. search time, and shares
+one byte-budgeted :class:`~repro.core.cache.CtCache` across positives,
+messages, family memos and histograms.  The contraction backend is
+pluggable (``executor="dense" | "sparse"``) and the Möbius negative phase
+runs through the executor (wired to the Pallas kernel with
+``use_pallas_mobius=True``, or any ``mobius_fn`` override).
 
 * PRECOUNT — prepare() contracts the positive ct-table for every lattice
   point AND runs the Möbius join to the complete table over *all* variables
   of the point; family_ct() is a pure projection.  Pays the Eq. (3) blowup.
 * ONDEMAND — prepare() builds only per-variable histograms (metadata);
   family_ct() contracts the family's positive tables from the raw data (the
-  expensive JOINs, re-run per family) then runs a small Möbius join.  Family
-  results are memoised for revisits.
+  expensive JOINs, re-run per family) then runs a small Möbius join.
 * HYBRID — prepare() contracts and caches only the *positive* ct-table per
-  lattice point (JOINs once, like PRECOUNT); family_ct() projects the cached
-  positives down to the family and runs a small Möbius join (like ONDEMAND,
-  but with zero data access).
+  lattice point (JOINs once, like PRECOUNT); family_ct() projects the
+  cached positives down to the family and runs a small Möbius join (like
+  ONDEMAND, but with zero data access).
+* TUPLEID — prepare() caches per-relationship message matrices (tuple-ID
+  propagation); family positives recombine them with zero edge access.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
-from .contract import CostStats, entity_hist, positive_ct
+from .contract import CostStats
 from .ct import CtTable
 from .database import RelationalDB
-from .mobius import PositiveProvider, complete_ct
-from .variables import CtVar, LatticePoint, Var, build_lattice
+from .engine import (CachedFullPositives, CountingEngine, OnDemandPositives,
+                     TupleIdPositives)
+from .mobius import complete_ct
+from .variables import CtVar, LatticePoint
 
 
 def _freeze(point: LatticePoint, keep: Sequence[CtVar]) -> Tuple:
     return (point.atoms, tuple(keep))
 
 
-class _OnDemandProvider:
-    """Contracts positive tables straight from the database (counts JOINs);
-    memoises within a strategy instance (the paper's post-count cache)."""
-
-    def __init__(self, db: RelationalDB, stats: CostStats, dtype=jnp.float32):
-        self.db, self.stats, self.dtype = db, stats, dtype
-        self._cache: Dict[Tuple, CtTable] = {}
-        self._hists: Dict[Tuple, CtTable] = {}
-
-    def positive(self, point: LatticePoint, keep: Tuple[CtVar, ...]) -> CtTable:
-        key = _freeze(point, keep)
-        if key not in self._cache:
-            with self.stats.timer("positive"):   # the per-family JOIN cost
-                t = positive_ct(self.db, point, keep, self.dtype, self.stats)
-            self._cache[key] = t
-            self.stats.bump_cache(t.nbytes)
-            self.stats.ct_rows += t.nnz_rows()
-        return self._cache[key]
-
-    def hist(self, var: Var, keep: Tuple[CtVar, ...]) -> CtTable:
-        key = (var, tuple(keep))
-        if key not in self._hists:
-            self._hists[key] = entity_hist(self.db, var, keep, self.dtype)
-        return self._hists[key]
-
-
-class _CachedPositiveProvider:
-    """Serves positives by *projection* from full-attribute positive tables
-    pre-computed per lattice point — zero data access (HYBRID / PRECOUNT)."""
-
-    def __init__(self, db: RelationalDB, stats: CostStats, dtype=jnp.float32):
-        self.db, self.stats, self.dtype = db, stats, dtype
-        self.full: Dict[frozenset, CtTable] = {}   # rels -> full positive ct
-        self._hists: Dict[Tuple, CtTable] = {}
-
-    def precompute(self, lattice: Sequence[LatticePoint]) -> None:
-        for point in lattice:
-            t = positive_ct(self.db, point, None, self.dtype, self.stats)
-            self.full[frozenset(point.rels)] = t
-            self.stats.bump_cache(t.nbytes)
-            self.stats.ct_rows += t.nnz_rows()
-
-    def positive(self, point: LatticePoint, keep: Tuple[CtVar, ...]) -> CtTable:
-        # NOTE §Perf H3 it.3: memoising these projections by (atoms, keep)
-        # was tried and REFUTED — CtVar-tuple hashing overhead exceeded the
-        # projection cost at every dataset size measured.
-        full = self.full.get(frozenset(point.rels))
-        if full is None:  # sub-pattern not in lattice (shouldn't happen: lattice is downward closed)
-            full = positive_ct(self.db, point, None, self.dtype, self.stats)
-            self.full[frozenset(point.rels)] = full
-            self.stats.bump_cache(full.nbytes)
-        return full.project(keep)
-
-    def hist(self, var: Var, keep: Tuple[CtVar, ...]) -> CtTable:
-        key = (var, tuple(keep))
-        if key not in self._hists:
-            self._hists[key] = entity_hist(self.db, var, keep, self.dtype)
-        return self._hists[key]
-
-
 @dataclass
 class Strategy:
+    """Base policy: shared engine, unified family memo, Möbius wiring.
+
+    Subclasses set ``_policy_cls`` and ``_precount_complete`` /
+    ``_warm_hists`` flags — everything else (caching, stats, executor and
+    Möbius dispatch) lives in the shared machinery.
+    """
+
     name: str = "base"
     dtype: object = jnp.float32
     use_butterfly: bool = True
-    mobius_fn: Optional[object] = None   # plug the Pallas kernel here
+    mobius_fn: Optional[object] = None     # overrides the executor's step
     stats: CostStats = field(default_factory=CostStats)
+    executor: object = "dense"             # name or Executor instance
+    cache_budget_bytes: Optional[int] = None
+    use_pallas_mobius: bool = False
 
-    def prepare(self, db: RelationalDB, lattice: Sequence[LatticePoint]) -> None:
-        raise NotImplementedError
+    _policy_cls = None                     # set by subclasses
+    _precount_complete = False             # PRECOUNT: complete tables upfront
+    _warm_hists = False                    # ONDEMAND: hists are the metadata
 
-    def family_ct(self, point: LatticePoint, keep: Sequence[CtVar]) -> CtTable:
-        raise NotImplementedError
-
-    # shared: memoised family results (both post-counting methods revisit)
-    def _memo_get(self, key):
-        return getattr(self, "_family_cache", {}).get(key)
-
-    def _memo_put(self, key, tab: CtTable):
-        if not hasattr(self, "_family_cache"):
-            self._family_cache: Dict = {}
-        self._family_cache[key] = tab
-        self.stats.bump_cache(tab.nbytes)
-
-
-class OnDemand(Strategy):
-    def __init__(self, **kw):
-        super().__init__(name="ONDEMAND", **kw)
-
-    def prepare(self, db: RelationalDB, lattice: Sequence[LatticePoint]) -> None:
+    # -- pre-search phase ----------------------------------------------------
+    def prepare(self, db: RelationalDB,
+                lattice: Sequence[LatticePoint]) -> None:
         self.db, self.lattice = db, list(lattice)
         with self.stats.timer("metadata"):
-            self.provider = _OnDemandProvider(db, self.stats, self.dtype)
+            from .executors import make_executor
+            ex = (self.executor if not isinstance(self.executor, str)
+                  else make_executor(self.executor, dtype=self.dtype,
+                                     use_pallas_mobius=self.use_pallas_mobius))
+            self.engine = CountingEngine(
+                db, ex, self.stats,
+                cache_budget_bytes=self.cache_budget_bytes, dtype=self.dtype)
+            self.provider = self._policy_cls(self.engine)
+            self._rows_counted = set()
+            if self._warm_hists:
+                for point in lattice:
+                    for v in point.vars:
+                        self.provider.hist(v, ())
+        # data access inside the policy times itself (-> time_positive),
+        # including any eviction-driven recompute later on
+        self.provider.precompute(lattice)
+        if self._precount_complete:
             for point in lattice:
-                for v in point.vars:
-                    self.provider.hist(v, ())
+                self._complete_full(point)
 
-    def family_ct(self, point: LatticePoint, keep: Sequence[CtVar]) -> CtTable:
-        key = _freeze(point, keep)
-        hit = self._memo_get(key)
-        if hit is not None:
-            return hit
-        # positive contractions (data access) are timed inside the provider
-        # (-> time_positive); subtract that nested time from the negative
-        # phase so the Fig. 3 decomposition doesn't double-count.
+    # -- complete tables -----------------------------------------------------
+    def _mobius_fn(self):
+        return self.mobius_fn if self.mobius_fn is not None \
+            else self.engine.executor.mobius
+
+    def _timed_complete(self, point: LatticePoint,
+                        keep: Tuple[CtVar, ...]) -> CtTable:
+        """Möbius join timed as negative-phase work; positive contractions
+        nested inside it (ONDEMAND joins, eviction recomputes) time
+        themselves in the policy, so subtract that growth to keep the
+        Fig. 3 decomposition disjoint."""
         pos_before = self.stats.time_positive
         with self.stats.timer("negative"):
             tab = complete_ct(point, keep, self.provider, self.stats,
                               use_butterfly=self.use_butterfly,
-                              mobius_fn=self.mobius_fn)
+                              mobius_fn=self._mobius_fn())
         self.stats.time_negative -= self.stats.time_positive - pos_before
-        self._memo_put(key, tab)
         return tab
+
+    def _complete_full(self, point: LatticePoint) -> CtTable:
+        """Complete (positive+negative) table over *all* axes of a point —
+        the PRECOUNT global ct.  Cached; recomputed if evicted."""
+        key = ("complete", frozenset(point.rels))
+        hit = self.engine.cache.get(key)
+        if hit is None:
+            keep = point.all_ct_vars(self.db.schema, include_rind=True)
+            hit = self._timed_complete(point, keep)
+            if key not in self._rows_counted:    # once per point, not per
+                self._rows_counted.add(key)      # eviction recompute
+                self.stats.ct_rows += hit.nnz_rows()
+            self.engine.cache.put(key, hit)
+        return hit
+
+    # -- search phase --------------------------------------------------------
+    def family_ct(self, point: LatticePoint,
+                  keep: Sequence[CtVar]) -> CtTable:
+        if self._precount_complete:
+            return self._complete_full(point).project(keep)
+        key = ("fam",) + _freeze(point, keep)
+        hit = self.engine.cache.get(key)
+        if hit is not None:
+            return hit
+        tab = self._timed_complete(point, tuple(keep))
+        self.engine.cache.put(key, tab)
+        return tab
+
+
+class OnDemand(Strategy):
+    _policy_cls = OnDemandPositives
+    _warm_hists = True
+
+    def __init__(self, **kw):
+        super().__init__(name="ONDEMAND", **kw)
 
 
 class Precount(Strategy):
+    _policy_cls = CachedFullPositives
+    _precount_complete = True
+
     def __init__(self, **kw):
         super().__init__(name="PRECOUNT", **kw)
 
-    def prepare(self, db: RelationalDB, lattice: Sequence[LatticePoint]) -> None:
-        self.db, self.lattice = db, list(lattice)
-        with self.stats.timer("metadata"):
-            provider = _CachedPositiveProvider(db, self.stats, self.dtype)
-        with self.stats.timer("positive"):
-            provider.precompute(lattice)
-        self.provider = provider
-        # complete (positive+negative) table per lattice point, full attrs
-        self.complete: Dict[frozenset, CtTable] = {}
-        with self.stats.timer("negative"):
-            for point in lattice:
-                keep = point.all_ct_vars(db.schema, include_rind=True)
-                tab = complete_ct(point, keep, provider, self.stats,
-                                  use_butterfly=self.use_butterfly,
-                                  mobius_fn=self.mobius_fn)
-                self.complete[frozenset(point.rels)] = tab
-                self.stats.bump_cache(tab.nbytes)
-                self.stats.ct_rows += tab.nnz_rows()
-
-    def family_ct(self, point: LatticePoint, keep: Sequence[CtVar]) -> CtTable:
-        return self.complete[frozenset(point.rels)].project(keep)
-
 
 class Hybrid(Strategy):
+    _policy_cls = CachedFullPositives
+
     def __init__(self, **kw):
         super().__init__(name="HYBRID", **kw)
-
-    def prepare(self, db: RelationalDB, lattice: Sequence[LatticePoint]) -> None:
-        self.db, self.lattice = db, list(lattice)
-        with self.stats.timer("metadata"):
-            provider = _CachedPositiveProvider(db, self.stats, self.dtype)
-        with self.stats.timer("positive"):
-            provider.precompute(lattice)
-        self.provider = provider
-
-    def family_ct(self, point: LatticePoint, keep: Sequence[CtVar]) -> CtTable:
-        key = _freeze(point, keep)
-        hit = self._memo_get(key)
-        if hit is not None:
-            return hit
-        with self.stats.timer("negative"):
-            tab = complete_ct(point, keep, self.provider, self.stats,
-                              use_butterfly=self.use_butterfly,
-                              mobius_fn=self.mobius_fn)
-        self._memo_put(key, tab)
-        return tab
-
-
-class _TupleIdProvider:
-    """Positive tables via tuple-ID propagation (Yin et al. 2004 — the
-    paper's 'Pre-Count Variants' future-work section, realised in tensors).
-
-    prepare caches, per (atom, direction), the *message matrix*
-    ``M[parent_entity, D_child_attrs x D_edge_attrs]`` — the one-hot mass
-    each parent node receives through that relationship, at full attribute
-    resolution.  A family positive is then a pure contraction of cached
-    entity-indexed matrices (projection + Khatri-Rao reduce): the edge
-    tables are never touched again.  Cost profile is the paper's: scales
-    well in predicates (one matrix per relationship), less well in rows
-    (matrices are entity-indexed)."""
-
-    def __init__(self, db: RelationalDB, stats: CostStats, dtype=jnp.float32):
-        self.db, self.stats, self.dtype = db, stats, dtype
-        self._msgs: Dict[Tuple, Tuple] = {}   # (rel, child_var, parent_var)
-        self._hists: Dict[Tuple, CtTable] = {}
-
-    def precompute(self, lattice: Sequence[LatticePoint]) -> None:
-        from .contract import _join_hop, entity_onehot
-        seen = set()
-        for point in lattice:
-            for atom in point.atoms:
-                for child, parent in ((atom.src, atom.dst),
-                                      (atom.dst, atom.src)):
-                    key = (atom.rel, child, parent)
-                    if key in seen:
-                        continue
-                    seen.add(key)
-                    all_keep = None  # full resolution
-                    child_keep = [
-                        v for v in point.all_ct_vars(self.db.schema, False)
-                        if (v.kind == "attr" and v.owner[0] == child)
-                        or (v.kind == "edge" and v.owner[0] == atom.rel)]
-                    cmsg, cvars = entity_onehot(self.db, child, child_keep,
-                                                self.dtype)
-                    m, mvars = _join_hop(self.db, atom, child, parent,
-                                         cmsg, cvars, child_keep,
-                                         self.dtype, self.stats)
-                    self._msgs[key] = (m, tuple(mvars))
-                    self.stats.bump_cache(int(m.nbytes))
-
-    def positive(self, point: LatticePoint, keep: Tuple[CtVar, ...]) -> CtTable:
-        """Contract the point's positive table over ``keep`` from cached
-        message matrices — zero edge-table access."""
-        from .contract import _khatri_rao_reduce, entity_onehot
-        keep = tuple(keep)
-        adj: Dict[Var, List[Tuple]] = {}
-        for a in point.atoms:
-            adj.setdefault(a.src, []).append((a, a.dst))
-            adj.setdefault(a.dst, []).append((a, a.src))
-        root = max(point.vars, key=lambda v: len(adj.get(v, ())))
-
-        def msg_for(atom, child, parent):
-            m, mvars = self._msgs[(atom.rel, child, parent)]
-            # project cached full-resolution columns onto the kept ones
-            want = [v for v in mvars if v in keep]
-            if tuple(want) != mvars:
-                wide = m.reshape((m.shape[0],) + tuple(v.card for v in mvars))
-                # sum out unwanted column axes (row axis 0 = entity ids)
-                dropped = tuple(i + 1 for i, v in enumerate(mvars)
-                                if v not in keep)
-                if dropped:
-                    wide = jnp.sum(wide, axis=dropped)
-                m = wide.reshape(m.shape[0], -1)
-                mvars = tuple(want)
-            return m, list(mvars)
-
-        def visit(v: Var, parent_atom) -> Tuple[jnp.ndarray, List[CtVar]]:
-            msg, mvars = entity_onehot(self.db, v, keep, self.dtype)
-            for atom, u in adj.get(v, ()):
-                if atom is parent_atom:
-                    continue
-                if not adj.get(u) or all(a is atom for a, _ in adj.get(u, ())):
-                    hop, hop_vars = msg_for(atom, u, v)   # leaf: cached
-                else:  # deeper subtree: recurse then propagate (rare, len>2)
-                    child_msg, child_vars = visit(u, atom)
-                    from .contract import _join_hop
-                    hop, hop_vars = _join_hop(self.db, atom, u, v, child_msg,
-                                              child_vars, keep, self.dtype,
-                                              self.stats)
-                n, d1 = msg.shape
-                msg = (msg[:, :, None] * hop[:, None, :]).reshape(
-                    n, d1 * hop.shape[1])
-                mvars = mvars + hop_vars
-            return msg, mvars
-
-        factors: List[Tuple[jnp.ndarray, List[CtVar]]] = []
-        own, own_vars = entity_onehot(self.db, root, keep, self.dtype)
-        factors.append((own, own_vars))
-        for atom, u in adj.get(root, ()):
-            if not adj.get(u) or all(a is atom for a, _ in adj.get(u, ())):
-                hop, hop_vars = msg_for(atom, u, root)
-            else:
-                child_msg, child_vars = visit(u, atom)
-                from .contract import _join_hop
-                hop, hop_vars = _join_hop(self.db, atom, u, root, child_msg,
-                                          child_vars, keep, self.dtype,
-                                          self.stats)
-            factors.append((hop, list(hop_vars)))
-        flat, mvars = _khatri_rao_reduce(factors)
-        counts = flat.reshape(tuple(v.card for v in mvars)) if mvars \
-            else flat.reshape(())
-        tab = CtTable(tuple(mvars), counts)
-        order = tuple(v for v in keep if v in tab.vars)
-        if self.stats is not None:
-            self.stats.ct_cells += tab.size
-        return tab.transpose_to(order) if order != tab.vars else tab
-
-    def hist(self, var: Var, keep: Tuple[CtVar, ...]) -> CtTable:
-        key = (var, tuple(keep))
-        if key not in self._hists:
-            self._hists[key] = entity_hist(self.db, var, keep, self.dtype)
-        return self._hists[key]
 
 
 class TupleId(Strategy):
     """The paper's future-work pre-count variant: tuple-ID propagation."""
 
+    _policy_cls = TupleIdPositives
+
     def __init__(self, **kw):
         super().__init__(name="TUPLEID", **kw)
-
-    def prepare(self, db: RelationalDB, lattice: Sequence[LatticePoint]) -> None:
-        self.db, self.lattice = db, list(lattice)
-        with self.stats.timer("metadata"):
-            provider = _TupleIdProvider(db, self.stats, self.dtype)
-        with self.stats.timer("positive"):
-            provider.precompute(lattice)
-        self.provider = provider
-
-    def family_ct(self, point: LatticePoint, keep: Sequence[CtVar]) -> CtTable:
-        key = _freeze(point, keep)
-        hit = self._memo_get(key)
-        if hit is not None:
-            return hit
-        pos_before = self.stats.time_positive
-        with self.stats.timer("negative"):
-            tab = complete_ct(point, keep, self.provider, self.stats,
-                              use_butterfly=self.use_butterfly,
-                              mobius_fn=self.mobius_fn)
-        self.stats.time_negative -= self.stats.time_positive - pos_before
-        self._memo_put(key, tab)
-        return tab
 
 
 STRATEGIES = {"PRECOUNT": Precount, "ONDEMAND": OnDemand, "HYBRID": Hybrid,
@@ -357,3 +185,24 @@ STRATEGIES = {"PRECOUNT": Precount, "ONDEMAND": OnDemand, "HYBRID": Hybrid,
 
 def make_strategy(name: str, **kw) -> Strategy:
     return STRATEGIES[name.upper()](**kw)
+
+
+# ---------------------------------------------------------------------------
+# compatibility constructors for the pre-refactor provider classes (tests
+# and external callers build these directly around complete_ct)
+# ---------------------------------------------------------------------------
+
+def _engine(db, stats, dtype):
+    return CountingEngine(db, "dense", stats, dtype=dtype)
+
+
+def _OnDemandProvider(db, stats, dtype=jnp.float32) -> OnDemandPositives:
+    return OnDemandPositives(_engine(db, stats, dtype))
+
+
+def _CachedPositiveProvider(db, stats, dtype=jnp.float32) -> CachedFullPositives:
+    return CachedFullPositives(_engine(db, stats, dtype))
+
+
+def _TupleIdProvider(db, stats, dtype=jnp.float32) -> TupleIdPositives:
+    return TupleIdPositives(_engine(db, stats, dtype))

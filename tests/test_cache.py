@@ -1,0 +1,86 @@
+"""CtCache: byte budget, LRU order, and CostStats accounting.
+
+The Fig. 4 memory proxy (``peak_bytes``) depends on ``cache_bytes`` being
+decremented on eviction/drop — these tests pin that contract down.
+"""
+
+import numpy as np
+
+from repro.core import CostStats, CtCache
+from repro.core.ct import CtTable
+
+
+def _blob(n_bytes: int) -> np.ndarray:
+    return np.zeros(n_bytes // 4, dtype=np.float32)
+
+
+def test_put_get_and_hit_miss_counts():
+    c = CtCache()
+    assert c.get("x") is None
+    v = _blob(64)
+    c.put("x", v)
+    assert c.get("x") is v
+    assert c.hits == 1 and c.misses == 1
+    assert c.nbytes == 64
+
+
+def test_lru_eviction_under_budget():
+    stats = CostStats()
+    c = CtCache(budget_bytes=256, stats=stats)
+    c.put("a", _blob(128))
+    c.put("b", _blob(128))
+    assert c.nbytes == 256 and stats.cache_bytes == 256
+    c.get("a")                        # refresh a -> b becomes LRU
+    c.put("c", _blob(128))            # evicts b
+    assert "b" not in c and "a" in c and "c" in c
+    assert c.evictions == 1
+    assert c.nbytes == 256
+    # the satellite fix: cache_bytes decremented on eviction
+    assert stats.cache_bytes == 256
+    assert stats.peak_bytes == 384    # transiently held a+b+c
+
+
+def test_oversized_entry_admit_then_drop():
+    stats = CostStats()
+    c = CtCache(budget_bytes=100, stats=stats)
+    c.put("huge", _blob(400))
+    assert "huge" not in c and c.dropped == 1
+    assert c.nbytes == 0 and stats.cache_bytes == 0
+    assert stats.peak_bytes == 400    # residency recorded before the drop
+
+
+def test_reput_same_key_does_not_double_count():
+    stats = CostStats()
+    c = CtCache(stats=stats)
+    c.put("k", _blob(100))
+    c.put("k", _blob(200))
+    assert c.nbytes == 200 and stats.cache_bytes == 200
+    assert len(c) == 1
+
+
+def test_ct_table_and_tuple_values_are_charged():
+    import jax.numpy as jnp
+    c = CtCache()
+    t = CtTable((), jnp.asarray(1.0))
+    c.put("t", t)
+    assert c.nbytes == t.nbytes
+    m = jnp.zeros((4, 4))
+    c.put("m", (m, ("vars",)))
+    assert c.nbytes == t.nbytes + m.nbytes
+
+
+def test_evict_all_returns_bytes():
+    stats = CostStats()
+    c = CtCache(stats=stats)
+    c.put("a", _blob(64))
+    c.put("b", _blob(64))
+    c.evict_all()
+    assert len(c) == 0 and c.nbytes == 0 and stats.cache_bytes == 0
+    assert stats.peak_bytes == 128
+
+
+def test_info_shape():
+    c = CtCache(budget_bytes=10)
+    info = c.info()
+    assert set(info) >= {"entries", "nbytes", "budget_bytes", "hits",
+                         "misses", "evictions", "dropped"}

@@ -1,0 +1,136 @@
+"""Property test: every counting strategy × every executor backend is
+*semantically identical* — same positive ct-tables and same Möbius-derived
+complete (negative-including) ct-tables as a brute-force numpy counter —
+on small random ``synth_db`` instances.
+
+Also covers the refactor's acceptance bar: the sparse executor completes
+``family_ct`` on ``paper_benchmark_db("IMDb", scale=0.1)`` for the HYBRID
+strategy under a 2 GiB cache budget.
+"""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import (Attribute, EntityType, Relationship, Schema,
+                        CostStats, CountingEngine, build_lattice,
+                        make_strategy, paper_benchmark_db,
+                        synth_db)
+from repro.core.oracle import oracle_ct
+from repro.core.strategies import STRATEGIES
+from repro.core.executors import EXECUTORS
+
+ALL_COMBOS = list(itertools.product(sorted(STRATEGIES), sorted(EXECUTORS)))
+
+
+def random_db(seed: int):
+    """Small random schema + data with every shape knob randomised:
+    entity sizes, attribute counts/cards, edge-attr presence, self-rels."""
+    rng = np.random.default_rng(seed)
+    card = lambda: int(rng.integers(2, 4))
+    a_attrs = tuple(Attribute(f"a{i}", card())
+                    for i in range(int(rng.integers(1, 3))))
+    b_attrs = (Attribute("b0", card()),)
+    schema_a = EntityType("A", int(rng.integers(4, 7)), a_attrs)
+    schema_b = EntityType("B", int(rng.integers(3, 6)), b_attrs)
+    r1_attrs = (Attribute("e1", card()),) if rng.random() < 0.7 else ()
+    rels = [Relationship("R1", "A", "B", r1_attrs)]
+    if rng.random() < 0.5:
+        rels.append(Relationship("R2", "B", "A", (Attribute("e2", card()),)))
+    else:
+        rels.append(Relationship("S", "A", "A", ()))
+    schema = Schema((schema_a, schema_b), tuple(rels))
+    edges = {r.name: int(rng.integers(3, 10)) for r in rels}
+    return synth_db(schema, edges, seed=seed)
+
+
+def random_keeps(rng, point, schema, n=3):
+    """A few random axis subsets: attrs, edge attrs and indicators mixed."""
+    pool = list(point.all_ct_vars(schema, include_rind=True))
+    keeps = [tuple(pool)]
+    for _ in range(n):
+        k = rng.integers(1, len(pool) + 1)
+        pick = rng.choice(len(pool), size=k, replace=False)
+        keeps.append(tuple(pool[i] for i in sorted(pick)))
+    return keeps
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_positive_ct_matches_oracle_both_executors(seed):
+    db = random_db(seed)
+    for point in build_lattice(db.schema, 2):
+        keep = point.all_ct_vars(db.schema, include_rind=False)
+        want = oracle_ct(db, point, keep, require_positive=True)
+        for ex in sorted(EXECUTORS):
+            eng = CountingEngine(db, ex, CostStats())
+            got = eng.contract(point, keep)
+            np.testing.assert_allclose(
+                np.asarray(got.counts), want, atol=1e-3,
+                err_msg=f"seed={seed} executor={ex} point={point}")
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_all_strategies_and_executors_match_oracle(seed):
+    """Complete (Möbius-negative-including) family tables agree with the
+    grounding oracle for every strategy × executor combination."""
+    db = random_db(seed)
+    rng = np.random.default_rng(seed + 100)
+    lattice = build_lattice(db.schema, 2)
+    point = lattice[-1]                       # largest connected point
+    keeps = random_keeps(rng, point, db.schema)
+    oracles = [oracle_ct(db, point, keep) for keep in keeps]
+    for sname, ex in ALL_COMBOS:
+        st = make_strategy(sname, executor=ex)
+        st.prepare(db, lattice)
+        for keep, want in zip(keeps, oracles):
+            got = st.family_ct(point, keep)
+            np.testing.assert_allclose(
+                np.asarray(got.counts), want, atol=1e-3,
+                err_msg=f"seed={seed} {sname}/{ex} "
+                        f"keep={[str(v) for v in keep]}")
+
+
+def test_executors_agree_under_tight_budget():
+    """Eviction-forcing budget: results unchanged, accounting coherent."""
+    db = random_db(7)
+    lattice = build_lattice(db.schema, 2)
+    point = lattice[-1]
+    keep = point.all_ct_vars(db.schema, include_rind=True)
+    ref = None
+    for ex in sorted(EXECUTORS):
+        st = make_strategy("HYBRID", executor=ex, cache_budget_bytes=4096)
+        st.prepare(db, lattice)
+        got = st.family_ct(point, keep)
+        if ref is None:
+            ref = np.asarray(got.counts)
+        else:
+            np.testing.assert_allclose(np.asarray(got.counts), ref, atol=1e-3)
+        cache = st.engine.cache
+        assert cache.nbytes <= 4096 or len(cache) <= 1
+        assert st.stats.cache_bytes == cache.nbytes
+        assert st.stats.peak_bytes >= st.stats.cache_bytes
+
+
+def test_sparse_hybrid_imdb_scale_under_budget():
+    """Acceptance: sparse executor completes family_ct on IMDb at scale 0.1
+    for HYBRID under a 2 GiB cache budget."""
+    db = paper_benchmark_db("IMDb", seed=0, scale=0.1)
+    lattice = build_lattice(db.schema, 2)
+    st = make_strategy("HYBRID", executor="sparse",
+                       cache_budget_bytes=2 << 30)
+    st.prepare(db, lattice)
+    point = next(p for p in lattice if p.length == 2)
+    sch = db.schema
+    nodes = list(point.all_ct_vars(sch, include_rind=True))
+    fams = [
+        (nodes[0],),
+        (nodes[0], nodes[1]),
+        (nodes[-1], nodes[0]),                 # rind child axis
+        (nodes[3], nodes[-2], nodes[0]),
+    ]
+    for keep in fams:
+        tab = st.family_ct(point, keep)
+        assert tab.total() > 0
+    assert st.stats.peak_bytes < (2 << 30)
+    assert st.stats.cache_bytes == st.engine.cache.nbytes

@@ -4,6 +4,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
+pytest.importorskip("hypothesis", reason="hypothesis not installed in this container")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
