@@ -1,0 +1,104 @@
+"""CI perf smoke: a small counting config + the service flood, gated
+against the recorded trajectory.
+
+Runs ``bench_counting.main`` on a reduced configuration (UW at scale
+0.25 plus a small same-signature flood), which *appends* this run's rows
+to ``BENCH_counting.json`` — the accumulating cross-PR trajectory — and
+then fails (exit 1) when the batched serve path regresses.  The gate is
+the *same-run* batched-over-per-query speedup (both sides measured on
+the same machine in the same process, so the signal is comparable across
+laptops and CI runners, unlike absolute q/s):
+
+* the speedup must stay >= ``MIN_BATCHED_SPEEDUP`` (the serve layer's
+  acceptance bar), and
+* it must not fall more than ``REGRESSION_FACTOR``x below the best
+  speedup previously recorded for the same flood config in the
+  trajectory, and
+* the reduced counting runs must complete within their budget.
+
+First run on a fresh history simply records the baseline and passes.
+
+Run:  PYTHONPATH=src:. python benchmarks/perf_smoke.py
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from benchmarks import bench_counting
+
+BENCH_JSON = "BENCH_counting.json"
+REGRESSION_FACTOR = 2.0
+SMOKE_FLOOD = dict(n_rels=8, edges=800, rounds=3)
+MIN_BATCHED_SPEEDUP = 2.0     # the serve layer's reason to exist
+
+
+def flood_config_tag() -> str:
+    f = SMOKE_FLOOD
+    return f"flood{f['n_rels']}x{f['edges']}r{f['rounds']}"
+
+
+def prior_batched_speedup(history: list, config: str) -> dict:
+    """Best recorded batched speedup per executor for this flood config."""
+    best: dict = {}
+    for rec in history:
+        if (rec.get("bench") == "service_flood"
+                and rec.get("mode") == "batched"
+                and rec.get("config") == config
+                and "speedup_vs_per_query" in rec):
+            ex = rec.get("executor")
+            best[ex] = max(best.get(ex, 0.0),
+                           float(rec["speedup_vs_per_query"]))
+    return best
+
+
+def main() -> int:
+    path = Path(BENCH_JSON)
+    history = []
+    if path.exists():
+        try:
+            history = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            history = []
+    baseline = prior_batched_speedup(history, flood_config_tag())
+
+    art = bench_counting.main(
+        datasets=("UW",), scale=0.25, budget_s=120.0, spotlight=False,
+        flood=True, flood_kw=dict(SMOKE_FLOOD), bench_json=BENCH_JSON)
+
+    failures = []
+    for rec in art.get("service_flood", []):
+        if rec.get("mode") != "batched":
+            continue
+        ex = rec["executor"]
+        speedup = float(rec.get("speedup_vs_per_query", 0.0))
+        if speedup < MIN_BATCHED_SPEEDUP:
+            failures.append(
+                f"{ex}: batched speedup {speedup:.2f}x is below the "
+                f"{MIN_BATCHED_SPEEDUP:.0f}x bar")
+        prior = baseline.get(ex)
+        if prior and speedup * REGRESSION_FACTOR < prior:
+            failures.append(
+                f"{ex}: batched speedup {speedup:.2f}x is a "
+                f">{REGRESSION_FACTOR:.0f}x regression vs recorded "
+                f"{prior:.2f}x")
+    for rec in art["runs"]:
+        if not rec["completed"]:
+            failures.append(
+                f"{rec['dataset']}/{rec['strategy']}/{rec['executor']}: "
+                f"smoke run exceeded its budget")
+
+    if failures:
+        for f in failures:
+            print(f"[perf-smoke] FAIL: {f}", flush=True)
+        return 1
+    gated = ", ".join(f"{ex}>={s / REGRESSION_FACTOR:.1f}x"
+                      for ex, s in baseline.items()) or "baseline recorded"
+    print(f"[perf-smoke] OK (speedup gate: {gated})", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,6 +8,12 @@
    the Möbius join.
 3. Print the learned first-order Bayesian network and the counting stats.
 
+Under the hood every hill-climbing round fetches its family tables through
+the counting service (`repro/serve/`): the round's positive contractions
+are bucketed by plan signature and executed as stacked/vmapped batches.
+To drive that layer directly — many clients flooding one shared counting
+cache — see ``examples/serve_counting.py``.
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 

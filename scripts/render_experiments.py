@@ -105,6 +105,16 @@ def counting_tables():
                        f"{r['families']} families scored in {r['wall_s']}s "
                        f"(positive {r['time_positive']}s / Möbius "
                        f"{r['time_negative']}s)")
+    if "service_flood" in art:
+        out += ["", "**Serve layer — same-signature query flood, per-query "
+                "dispatch vs signature-bucketed stacked execution "
+                "(CountingService):**", "",
+                "| config | executor | mode | queries/s | speedup |",
+                "|---|---|---|---|---|"]
+        for r in art["service_flood"]:
+            sp = r.get("speedup_vs_per_query")
+            out.append(f"| {r['config']} | {r['executor']} | {r['mode']} | "
+                       f"{r['qps']} | {f'{sp}x' if sp else '-'} |")
     return "\n".join(out)
 
 

@@ -10,13 +10,13 @@ from .variables import (Var, Atom, CtVar, LatticePoint, attr_var, edge_var,
                         rind_var, build_lattice, point_from_rels)
 from .ct import CtTable
 from .contract import CostStats, positive_ct, entity_hist
-from .plan import ContractionPlan, compile_plan
+from .plan import ContractionPlan, compile_plan, group_by_signature
 from .executors import (DenseExecutor, Executor, SparseExecutor, EXECUTORS,
-                        make_executor)
+                        make_executor, plan_input_arrays, plan_stack_key)
 from .cache import CtCache
 from .engine import (CountingEngine, CachedFullPositives, OnDemandPositives,
                      TupleIdPositives)
-from .mobius import complete_ct, superset_mobius
+from .mobius import complete_ct, positive_queries, superset_mobius
 from .strategies import (Strategy, Precount, OnDemand, Hybrid, TupleId,
                          make_strategy, STRATEGIES)
 from .bdeu import bdeu_score_2d, bdeu_score_batch, family_score
@@ -28,11 +28,12 @@ __all__ = [
     "Var", "Atom", "CtVar", "LatticePoint", "attr_var", "edge_var", "rind_var",
     "build_lattice", "point_from_rels", "CtTable",
     "CostStats", "positive_ct", "entity_hist",
-    "ContractionPlan", "compile_plan",
+    "ContractionPlan", "compile_plan", "group_by_signature",
     "Executor", "DenseExecutor", "SparseExecutor", "EXECUTORS", "make_executor",
+    "plan_input_arrays", "plan_stack_key",
     "CtCache", "CountingEngine",
     "CachedFullPositives", "OnDemandPositives", "TupleIdPositives",
-    "complete_ct", "superset_mobius",
+    "complete_ct", "positive_queries", "superset_mobius",
     "Strategy", "Precount", "OnDemand", "Hybrid", "TupleId",
     "make_strategy", "STRATEGIES",
     "bdeu_score_2d", "bdeu_score_batch", "family_score",

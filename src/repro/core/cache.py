@@ -25,6 +25,7 @@ the namespace (``"pos"``, ``"full"``, ``"complete"``, ``"msg"``, ``"fam"``,
 
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from typing import Any, Hashable, Optional
 
@@ -48,6 +49,10 @@ class CtCache:
         self.budget_bytes = budget_bytes
         self.stats = stats
         self._entries: "OrderedDict[Hashable, Tuple[Any, int]]" = OrderedDict()
+        # get/put/evict are lock-guarded: the serve layer mutates one shared
+        # cache from many client threads (OrderedDict reorder + byte
+        # accounting are not atomic on their own)
+        self._lock = threading.RLock()
         self.nbytes = 0
         self.hits = 0
         self.misses = 0
@@ -61,25 +66,27 @@ class CtCache:
         return key in self._entries
 
     def get(self, key: Hashable, default=None):
-        hit = self._entries.get(key)
-        if hit is None:
-            self.misses += 1
-            return default
-        self._entries.move_to_end(key)
-        self.hits += 1
-        return hit[0]
+        with self._lock:
+            hit = self._entries.get(key)
+            if hit is None:
+                self.misses += 1
+                return default
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return hit[0]
 
     def put(self, key: Hashable, value: Any,
             nbytes: Optional[int] = None) -> Any:
         """Insert (or refresh) ``key``; returns ``value`` for chaining."""
         nb = _nbytes_of(value) if nbytes is None else int(nbytes)
-        if key in self._entries:
-            self._evict_one(key)
-        self._entries[key] = (value, nb)
-        self.nbytes += nb
-        if self.stats is not None:
-            self.stats.bump_cache(nb)      # records the peak before any drop
-        self._shrink_to_budget(just_added=key)
+        with self._lock:
+            if key in self._entries:
+                self._evict_one(key)
+            self._entries[key] = (value, nb)
+            self.nbytes += nb
+            if self.stats is not None:
+                self.stats.bump_cache(nb)  # records the peak before any drop
+            self._shrink_to_budget(just_added=key)
         return value
 
     # -- eviction -----------------------------------------------------------
@@ -104,9 +111,10 @@ class CtCache:
             self.dropped += 1
 
     def evict_all(self) -> None:
-        for key in list(self._entries):
-            self._evict_one(key)
-            self.evictions += 1
+        with self._lock:
+            for key in list(self._entries):
+                self._evict_one(key)
+                self.evictions += 1
 
     def info(self) -> dict:
         return dict(entries=len(self._entries), nbytes=self.nbytes,

@@ -67,12 +67,14 @@ class RelationalDB:
         for name, tab in self.relations.items():
             rt = tab.type
             ns, nd = self.entities[rt.src].size, self.entities[rt.dst].size
-            assert tab.src.min() >= 0 and tab.src.max() < ns
-            assert tab.dst.min() >= 0 and tab.dst.max() < nd
+            if tab.num_edges:       # empty relationship tables are legal
+                assert tab.src.min() >= 0 and tab.src.max() < ns
+                assert tab.dst.min() >= 0 and tab.dst.max() < nd
             for a in rt.attrs:
                 col = tab.attrs[a.name]
                 assert col.shape == tab.src.shape
-                assert col.min() >= 0 and col.max() < a.card
+                if col.size:
+                    assert col.min() >= 0 and col.max() < a.card
 
 
 def synth_db(schema: Schema,

@@ -56,6 +56,17 @@ class CountingEngine:
         self.cache = cache if cache is not None else CtCache(
             cache_budget_bytes, self.stats)
         self.dtype = dtype
+        # one rows-counted set per engine: policies AND the counting
+        # service share artefact key namespaces ("pos"/"full"/...), so
+        # Table 5's "once per distinct artefact" accounting must be shared
+        # too, or a service-computed table recomputed by a policy after
+        # eviction would be counted twice
+        self.rows_counted: Set[Tuple] = set()
+
+    def count_rows_once(self, key: Tuple, tab: CtTable) -> None:
+        if key not in self.rows_counted:
+            self.rows_counted.add(key)
+            self.stats.ct_rows += tab.nnz_rows()
 
     def plan(self, point: LatticePoint,
              keep: Optional[Sequence[CtVar]] = None) -> ContractionPlan:
@@ -93,12 +104,9 @@ class _Policy:
 
     def __init__(self, engine: CountingEngine):
         self.engine = engine
-        self._rows_counted: Set[Tuple] = set()
 
     def _count_rows_once(self, key: Tuple, tab: CtTable) -> None:
-        if key not in self._rows_counted:
-            self._rows_counted.add(key)
-            self.engine.stats.ct_rows += tab.nnz_rows()
+        self.engine.count_rows_once(key, tab)
 
     def hist(self, var: Var, keep: Tuple[CtVar, ...]) -> CtTable:
         return self.engine.hist(var, keep)
@@ -106,15 +114,42 @@ class _Policy:
     def precompute(self, lattice: Sequence[LatticePoint]) -> None:
         pass
 
+    # -- serve-layer integration --------------------------------------------
+    supports_batch_prefetch = False    # callers skip query enumeration when
+                                       # a policy can never batch (TUPLEID)
+
+    def batchable_misses(self, queries: Sequence[Tuple[LatticePoint,
+                                                       Tuple[CtVar, ...]]]
+                         ) -> List[Tuple[LatticePoint,
+                                         Optional[Tuple[CtVar, ...]]]]:
+        """Of the positive queries a Möbius join is about to issue, the
+        deduplicated subset this policy would contract *from data* on miss
+        — i.e. what a batching service should execute as one
+        signature-bucketed dispatch.  Policies whose misses are not plan
+        contractions (tuple-ID message recombination) return []."""
+        return []
+
+    def absorb(self, point: LatticePoint,
+               keep: Optional[Tuple[CtVar, ...]], tab: CtTable) -> None:
+        """Accept a service-computed positive table for a query previously
+        reported by :meth:`batchable_misses` (same caching + row
+        accounting as the policy's own miss path)."""
+        raise NotImplementedError
+
 
 class OnDemandPositives(_Policy):
     """Contract positives from the database per request (counts JOINs);
     memoised in the shared cache (the paper's post-count cache)."""
 
+    supports_batch_prefetch = True
+
+    def _key(self, point: LatticePoint, keep: Tuple[CtVar, ...]) -> Tuple:
+        return ("pos", self.engine.executor.name, point.atoms, tuple(keep))
+
     def positive(self, point: LatticePoint,
                  keep: Tuple[CtVar, ...]) -> CtTable:
         eng = self.engine
-        key = ("pos", eng.executor.name, point.atoms, tuple(keep))
+        key = self._key(point, keep)
         hit = eng.cache.get(key)
         if hit is None:
             with eng.stats.timer("positive"):   # the per-family JOIN cost
@@ -123,19 +158,38 @@ class OnDemandPositives(_Policy):
             eng.cache.put(key, hit)
         return hit
 
+    def batchable_misses(self, queries):
+        out, seen = [], set()
+        for point, keep in queries:
+            key = self._key(point, keep)
+            if key not in self.engine.cache and key not in seen:
+                seen.add(key)
+                out.append((point, tuple(keep)))
+        return out
+
+    def absorb(self, point, keep, tab):
+        key = self._key(point, keep)
+        self._count_rows_once(key, tab)
+        self.engine.cache.put(key, tab)
+
 
 class CachedFullPositives(_Policy):
     """Serve positives by *projection* from full-attribute positive tables
     contracted once per lattice point — zero data access afterwards
     (HYBRID / PRECOUNT).  Evicted entries are re-contracted on miss."""
 
+    supports_batch_prefetch = True
+
     def precompute(self, lattice: Sequence[LatticePoint]) -> None:
         for point in lattice:
             self._full(point)
 
+    def _full_key(self, point: LatticePoint) -> Tuple:
+        return ("full", self.engine.executor.name, frozenset(point.rels))
+
     def _full(self, point: LatticePoint) -> CtTable:
         eng = self.engine
-        key = ("full", eng.executor.name, frozenset(point.rels))
+        key = self._full_key(point)
         hit = eng.cache.get(key)
         if hit is None:
             with eng.stats.timer("positive"):
@@ -143,6 +197,22 @@ class CachedFullPositives(_Policy):
             self._count_rows_once(key, hit)
             eng.cache.put(key, hit)
         return hit
+
+    def batchable_misses(self, queries):
+        # misses here are evicted full-resolution tables: one (point, None)
+        # re-contraction per distinct sub-point no longer resident
+        out, seen = [], set()
+        for point, _ in queries:
+            key = self._full_key(point)
+            if key not in self.engine.cache and key not in seen:
+                seen.add(key)
+                out.append((point, None))
+        return out
+
+    def absorb(self, point, keep, tab):
+        key = self._full_key(point)
+        self._count_rows_once(key, tab)
+        self.engine.cache.put(key, tab)
 
     def positive(self, point: LatticePoint,
                  keep: Tuple[CtVar, ...]) -> CtTable:

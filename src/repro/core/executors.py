@@ -85,6 +85,8 @@ class Executor:
             from ..kernels.ops import mobius_nd
             mobius_fn = mobius_nd
         self._mobius_fn = mobius_fn
+        # (stack key, padded batch) -> (db, jitted vmapped evaluator)
+        self._batch_cache: dict = {}
 
     # -- negative phase -----------------------------------------------------
     def mobius(self, stack: jnp.ndarray, k: int) -> jnp.ndarray:
@@ -102,6 +104,92 @@ class Executor:
         root combine.  Backends only implement the two primitives."""
         factors = [self.hop_message(db, hop, stats) for hop in plan.root.hops]
         return self.root_reduce(db, plan.root.own, factors, plan.keep, stats)
+
+    # -- batched positive phase (serve-layer entry point) -------------------
+    def positive_batch(self, db: RelationalDB,
+                       plans: Sequence[ContractionPlan],
+                       stats: Optional[CostStats] = None,
+                       min_stack: int = 2) -> List[CtTable]:
+        """Evaluate many compiled plans at once.
+
+        Plans whose computations are structurally identical (equal
+        :func:`plan_stack_key` — same hop-tree topology, array sizes and
+        axis cards) have their input arrays stacked along a new batch axis
+        and run through ONE jitted+vmapped evaluation; groups smaller than
+        ``min_stack`` (and backends without a traced evaluator) fall back
+        to :meth:`positive` per plan.  Results are positionally aligned
+        with ``plans`` and numerically identical to the unbatched path
+        (counts are integer-valued, so the op reordering is exact)."""
+        results: List[Optional[CtTable]] = [None] * len(plans)
+        groups: "dict" = {}
+        for i, plan in enumerate(plans):
+            groups.setdefault(plan_stack_key(db, plan), []).append(i)
+        for idxs in groups.values():
+            members = [plans[i] for i in idxs]
+            tabs = None
+            if len(members) >= min_stack:
+                try:
+                    tabs = self._positive_stacked(db, members, stats)
+                except NotImplementedError:
+                    tabs = None
+            if tabs is None:
+                tabs = [self.positive(db, p, stats) for p in members]
+            for i, t in zip(idxs, tabs):
+                results[i] = t
+        return results
+
+    def _positive_stacked(self, db: RelationalDB,
+                          plans: Sequence[ContractionPlan],
+                          stats: Optional[CostStats]) -> List[CtTable]:
+        """One vmapped execution of stack-compatible plans.  The batch axis
+        is padded to the next power of two (padding replays the first plan)
+        so the jit cache is keyed by a handful of sizes, not every flood
+        length seen."""
+        template = plans[0]
+        packs = [plan_input_arrays(db, p) for p in plans]
+        b = len(plans)
+        b_pad = 1 << max(b - 1, 0).bit_length()
+        packs = packs + [packs[0]] * (b_pad - b)
+        stacked = tuple(jnp.asarray(np.stack([p[j] for p in packs]))
+                        for j in range(len(packs[0])))
+        fn = self._stacked_fn(db, template, b_pad)
+        flat = fn(*stacked)
+        out: List[CtTable] = []
+        for plan, row in zip(plans, flat):        # drops the pad rows
+            out.append(_finalise(row, self._flat_vars(plan), plan.keep,
+                                 stats))
+            if stats is not None:
+                _count_plan_joins(db, plan, stats)
+        return out
+
+    def _stacked_fn(self, db: RelationalDB, template: ContractionPlan,
+                    b_pad: int):
+        key = (plan_stack_key(db, template), b_pad)
+        hit = self._batch_cache.get(key)
+        if hit is not None and hit[0] is db:
+            return hit[1]
+
+        def one(*arrays):
+            cur = _ArrayCursor(arrays)
+            flat = self._flat_from_arrays(db, template, cur)
+            assert cur.exhausted, "plan evaluator out of sync with inputs"
+            return flat
+
+        fn = jax.jit(jax.vmap(one))
+        self._batch_cache[key] = (db, fn)
+        return fn
+
+    def _flat_from_arrays(self, db: RelationalDB, plan: ContractionPlan,
+                          cur: "_ArrayCursor") -> jnp.ndarray:
+        """Traced single-plan evaluation over an input-array pack (see
+        :func:`plan_input_arrays`); returns the flat counts in
+        ``_flat_vars(plan)`` axis order.  Backends that implement this get
+        stacked execution for free."""
+        raise NotImplementedError
+
+    def _flat_vars(self, plan: ContractionPlan) -> Tuple[CtVar, ...]:
+        """Axis order of :meth:`_flat_from_arrays` output."""
+        raise NotImplementedError
 
     def hop_message(self, db: RelationalDB, hop: HopSpec,
                     stats: Optional[CostStats] = None
@@ -143,6 +231,84 @@ def _hop_indices(db: RelationalDB, atom: Atom, child: Var, parent: Var):
     if child == atom.dst and parent == atom.src:
         return rt, rt.dst, rt.src, db.entities[atom.src.etype].size
     raise AssertionError("atom does not connect child/parent")
+
+
+# ---------------------------------------------------------------------------
+# batched execution plumbing: plans as (static structure, input-array pack)
+# ---------------------------------------------------------------------------
+
+class _ArrayCursor:
+    """Sequential reader over a plan's flattened input-array pack.  The
+    collection (:func:`plan_input_arrays`) and consumption
+    (``_flat_from_arrays``) sides share one traversal order: per node its
+    kept attribute columns, then per hop the child subtree (recursively),
+    the gather index, the scatter index, and the kept edge-attr columns."""
+
+    __slots__ = ("arrays", "i")
+
+    def __init__(self, arrays: Sequence):
+        self.arrays, self.i = arrays, 0
+
+    def take(self):
+        a = self.arrays[self.i]
+        self.i += 1
+        return a
+
+    @property
+    def exhausted(self) -> bool:
+        return self.i == len(self.arrays)
+
+
+def plan_stack_key(db: RelationalDB, plan: ContractionPlan) -> Tuple:
+    """Stacked-execution key: plans with equal keys against the same
+    database run the exact same operation sequence on same-shape arrays
+    (hop-tree topology + entity sizes + edge counts + axis cards), so
+    their input packs can be stacked and evaluated under one ``vmap``."""
+    def node(n: NodeSpec) -> Tuple:
+        hops = []
+        for h in n.hops:
+            _, g, _, n_parent = _hop_indices(db, h.atom, h.child, h.parent)
+            hops.append((int(np.asarray(g).shape[0]), n_parent,
+                         tuple(cv.card for cv in h.edge_attrs),
+                         node(h.child_node)))
+        return (db.entities[n.var.etype].size,
+                tuple(cv.card for cv in n.own.attrs), tuple(hops))
+    return node(plan.root)
+
+
+def plan_input_arrays(db: RelationalDB, plan: ContractionPlan
+                      ) -> List[np.ndarray]:
+    """The plan's data inputs as a flat host-array list in cursor order
+    (see :class:`_ArrayCursor`) — everything an executor reads from the
+    database, ready to be ``np.stack``-ed across stack-compatible plans."""
+    arrs: List[np.ndarray] = []
+
+    def node(n: NodeSpec) -> None:
+        tab = db.entities[n.var.etype]
+        for cv in n.own.attrs:
+            arrs.append(np.asarray(tab.attrs[cv.owner[1]]))
+        for h in n.hops:
+            node(h.child_node)
+            rt, g, s, _ = _hop_indices(db, h.atom, h.child, h.parent)
+            arrs.append(np.asarray(g))
+            arrs.append(np.asarray(s))
+            for cv in h.edge_attrs:
+                arrs.append(np.asarray(rt.attrs[cv.owner[1]]))
+
+    node(plan.root)
+    return arrs
+
+
+def _count_plan_joins(db: RelationalDB, plan: ContractionPlan,
+                      stats: CostStats) -> None:
+    """Mirror the per-hop join accounting of the unbatched path."""
+    def node(n: NodeSpec) -> None:
+        for h in n.hops:
+            node(h.child_node)
+            _, g, _, _ = _hop_indices(db, h.atom, h.child, h.parent)
+            stats.joins += 1
+            stats.rows_scanned += int(np.asarray(g).shape[0])
+    node(plan.root)
 
 
 # ---------------------------------------------------------------------------
@@ -233,6 +399,61 @@ class DenseExecutor(Executor):
         fs.extend((m, list(vs)) for m, vs in factors)
         flat, mvars = _khatri_rao_reduce(fs)
         return _finalise(flat, mvars, keep, stats)
+
+    # -- traced batched evaluation ------------------------------------------
+    def _flat_from_arrays(self, db: RelationalDB, plan: ContractionPlan,
+                          cur: _ArrayCursor) -> jnp.ndarray:
+        """Mirror of ``_entity_factor``/``_hop``/``_node_message`` +
+        ``root_reduce`` reading from an array pack — same op sequence, so
+        batched results match the unbatched path exactly."""
+        def entity_factor(fs: FactorSpec) -> jnp.ndarray:
+            n = db.entities[fs.var.etype].size
+            msg = jnp.ones((n, 1), dtype=self.dtype)
+            for cv in fs.attrs:
+                hot = _onehot(cur.take(), cv.card, self.dtype)
+                nn, d = msg.shape
+                msg = (msg[:, :, None] * hot[:, None, :]).reshape(
+                    nn, d * cv.card)
+            return msg
+
+        def hop_from(hop: HopSpec, child_msg: jnp.ndarray) -> jnp.ndarray:
+            g, s = cur.take(), cur.take()
+            n_parent = db.entities[hop.parent.etype].size
+            m = child_msg[g]
+            for cv in hop.edge_attrs:
+                hot = _onehot(cur.take(), cv.card, self.dtype)
+                nn, d = m.shape
+                m = (m[:, :, None] * hot[:, None, :]).reshape(nn, d * cv.card)
+            return jax.ops.segment_sum(m, s, num_segments=n_parent)
+
+        def node_msg(node: NodeSpec) -> jnp.ndarray:
+            msg = entity_factor(node.own)
+            for hop in node.hops:
+                h = hop_from(hop, node_msg(hop.child_node))
+                nn, d = msg.shape
+                msg = (msg[:, :, None] * h[:, None, :]).reshape(
+                    nn, d * h.shape[1])
+            return msg
+
+        factors: List[Tuple[jnp.ndarray, List[CtVar]]] = [
+            (entity_factor(plan.root.own), [])]
+        for hop in plan.root.hops:
+            factors.append((hop_from(hop, node_msg(hop.child_node)), []))
+        flat, _ = _khatri_rao_reduce(factors)
+        return flat
+
+    def _flat_vars(self, plan: ContractionPlan) -> Tuple[CtVar, ...]:
+        # replicate _khatri_rao_reduce's widest-last reorder on var metadata
+        fvars = [tuple(plan.root.own.attrs)] + [tuple(h.out_vars)
+                                                for h in plan.root.hops]
+        widths = [int(np.prod([v.card for v in vs], dtype=np.int64))
+                  for vs in fvars]
+        widest = max(range(len(fvars)), key=widths.__getitem__)
+        order = [i for i in range(len(fvars)) if i != widest] + [widest]
+        out: List[CtVar] = []
+        for i in order:
+            out.extend(fvars[i])
+        return tuple(out)
 
 
 # ---------------------------------------------------------------------------
@@ -405,6 +626,82 @@ class SparseExecutor(Executor):
             mvars.extend(vs)
         flat = self._reduce_by_code(code, ds, n, mats)
         return _finalise(flat, mvars, keep, stats)
+
+    # -- traced batched evaluation ------------------------------------------
+    def _flat_from_arrays(self, db: RelationalDB, plan: ContractionPlan,
+                          cur: _ArrayCursor) -> jnp.ndarray:
+        """Device-side mirror of ``_entity_code``/``_hop``/``_node_message``
+        + ``root_reduce``: the host numpy code arithmetic becomes jnp int32
+        arithmetic so the whole evaluation traces under ``vmap``.  The
+        int32 segment-space guard is static, so it still raises at trace
+        time."""
+        def entity_code(fs: FactorSpec):
+            if not fs.attrs:
+                return None, 1
+            code = None
+            for cv in fs.attrs:
+                col = cur.take().astype(jnp.int32)
+                code = col if code is None else code * cv.card + col
+            return code, fs.card
+
+        def hop_from(hop: HopSpec, msg: _SparseMsg) -> jnp.ndarray:
+            g, s = cur.take(), cur.take()
+            n_parent = db.entities[hop.parent.etype].size
+            n_edges = int(g.shape[0])
+            ds = msg.ds
+            ecode = (msg.code[g] if msg.code is not None
+                     else jnp.zeros((n_edges,), dtype=jnp.int32))
+            for cv in hop.edge_attrs:
+                ecode = ecode * cv.card + cur.take().astype(jnp.int32)
+                ds *= cv.card
+            total = n_parent * ds
+            if total > _INT32_LIMIT:
+                raise OverflowError(
+                    f"sparse hop segment space {total} exceeds int32; use "
+                    f"the dense executor or reduce kept axes")
+            seg = s.astype(jnp.int32) * ds + ecode
+            if msg.dense is None:
+                flat = jax.ops.segment_sum(
+                    jnp.ones((n_edges,), dtype=self.dtype), seg,
+                    num_segments=total)
+                return flat.reshape(n_parent, ds)
+            agg = jax.ops.segment_sum(msg.dense[g], seg, num_segments=total)
+            return agg.reshape(n_parent, ds * msg.dense.shape[1])
+
+        def node_msg(node: NodeSpec) -> _SparseMsg:
+            code, ds = entity_code(node.own)
+            dense: Optional[jnp.ndarray] = None
+            for hop in node.hops:
+                h = hop_from(hop, node_msg(hop.child_node))
+                if dense is None:
+                    dense = h
+                else:
+                    nn, d = dense.shape
+                    dense = (dense[:, :, None] * h[:, None, :]).reshape(
+                        nn, d * h.shape[1])
+            return _SparseMsg(code, ds, (), dense, ())
+
+        code, ds = entity_code(plan.root.own)
+        n = db.entities[plan.root.var.etype].size
+        mats = [hop_from(hop, node_msg(hop.child_node))
+                for hop in plan.root.hops]
+        return self._reduce_by_code(code, ds, n, mats)
+
+    def _flat_vars(self, plan: ContractionPlan) -> Tuple[CtVar, ...]:
+        # the sparse recursion emits (child own attrs, edge attrs) scalar-
+        # coded first, then the child's aggregated dense axes — NOT the
+        # planner's out_vars order; mirror it structurally
+        def hop_vars(hop: HopSpec) -> List[CtVar]:
+            child = hop.child_node
+            out = list(child.own.attrs) + list(hop.edge_attrs)
+            for h in child.hops:
+                out.extend(hop_vars(h))
+            return out
+
+        out: List[CtVar] = list(plan.root.own.attrs)
+        for hop in plan.root.hops:
+            out.extend(hop_vars(hop))
+        return tuple(out)
 
 
 EXECUTORS = {"dense": DenseExecutor, "sparse": SparseExecutor}

@@ -103,6 +103,59 @@ def _pattern_table(point: LatticePoint, rels: Set[str],
         if set(out.vars) == set(keep_axes) else out.project(keep_axes)
 
 
+def positive_queries(point: LatticePoint, keep: Sequence[CtVar],
+                     use_butterfly: bool = True
+                     ) -> List[Tuple[LatticePoint, Tuple[CtVar, ...]]]:
+    """The positive sub-queries :func:`complete_ct` will request from its
+    provider for ``(point, keep)``, in request order.
+
+    This mirrors the Möbius join's own enumeration (butterfly vs blockwise
+    branch, relation dropping, connected-component factorisation) without
+    touching any data — it is what lets a serving layer batch a whole
+    round of family queries into signature buckets *before* any Möbius
+    join runs (see :meth:`repro.serve.service.CountingService.prefetch`).
+    Per-variable histogram queries are omitted: they are cheap, shared,
+    and cached on first use.  Duplicates across terms are preserved
+    (callers dedupe); every entry is a connected sub-pattern.
+    """
+    keep = tuple(keep)
+    kept_attrs = tuple(v for v in keep if v.kind == "attr")
+    kept_edges: Dict[str, List[CtVar]] = {}
+    for v in keep:
+        if v.kind == "edge":
+            kept_edges.setdefault(v.owner[0], []).append(v)
+    kept_rinds = {v.owner[0] for v in keep if v.kind == "rind"}
+    effective = sorted(set(kept_edges) | kept_rinds)
+    k = len(effective)
+
+    out: List[Tuple[LatticePoint, Tuple[CtVar, ...]]] = []
+
+    def pattern(rels: Set[str], keep_axes: Tuple[CtVar, ...]) -> None:
+        atoms = tuple(a for a in point.atoms if a.rel in rels)
+        for comp in connected_components(atoms):
+            cp = LatticePoint(comp)
+            comp_rels = {a.rel for a in comp}
+            ckeep = tuple(v for v in keep_axes
+                          if (v.kind == "attr" and v.owner[0] in cp.vars)
+                          or (v.kind == "edge" and v.owner[0] in comp_rels))
+            out.append((cp, ckeep))
+
+    if use_butterfly and not kept_edges and k > 0:
+        for bits in itertools.product((0, 1), repeat=k):
+            pattern({r for r, b in zip(effective, bits) if b == 1},
+                    kept_attrs)
+    else:
+        for r_bits in itertools.product((0, 1), repeat=k):
+            A = {r for r, b in zip(effective, r_bits) if b == 1}
+            B = [r for r in effective if r not in A]
+            axes_A = kept_attrs + tuple(
+                v for r in sorted(A) for v in kept_edges.get(r, ()))
+            for j in range(len(B) + 1):
+                for S in itertools.combinations(B, j):
+                    pattern(A | set(S), axes_A)
+    return out
+
+
 # --------------------------------------------------------------------------
 # complete ct-table
 # --------------------------------------------------------------------------

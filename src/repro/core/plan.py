@@ -104,6 +104,20 @@ class ContractionPlan:
         ct-tables (axis kinds + cards, in output order)."""
         return tuple((v.kind, v.card) for v in self.keep)
 
+    def tree_signature(self) -> Tuple:
+        """Structural batching key: the hop-tree topology with per-factor
+        attribute cards and per-hop edge-attribute cards, independent of the
+        concrete variables/relations involved.  Two plans with equal tree
+        signatures run the *same* sequence of contraction operations; add the
+        database-dependent array sizes (entity sizes, edge counts — see
+        :func:`repro.core.executors.plan_stack_key`) and their inputs can be
+        stacked and executed in one vmapped call."""
+        def node(n: NodeSpec) -> Tuple:
+            return (tuple(cv.card for cv in n.own.attrs),
+                    tuple((tuple(cv.card for cv in h.edge_attrs),
+                           node(h.child_node)) for h in n.hops))
+        return (node(self.root), self.shape_signature())
+
 
 def _kept_entity_attrs(schema: Schema, var: Var,
                        keep: Tuple[CtVar, ...]) -> Tuple[CtVar, ...]:
@@ -178,3 +192,19 @@ def compile_plan_cached(schema: Schema, point: LatticePoint,
         return _compile_cached(schema, point.atoms, tuple(keep))
     except TypeError:            # unhashable schema: fall back, don't cache
         return compile_plan(schema, point, keep)
+
+
+def group_by_signature(plans: Sequence[ContractionPlan],
+                       key: str = "shape") -> Dict[Tuple, List[int]]:
+    """Group plan *indices* by batching signature, preserving arrival order
+    within each group.  ``key="shape"`` buckets by output shape (the
+    scheduler's quota unit); ``key="tree"`` buckets by full structural
+    signature (the stacked-execution precondition, minus array sizes)."""
+    if key not in ("shape", "tree"):
+        raise ValueError(f"unknown signature key {key!r}")
+    groups: Dict[Tuple, List[int]] = {}
+    for i, plan in enumerate(plans):
+        sig = (plan.shape_signature() if key == "shape"
+               else plan.tree_signature())
+        groups.setdefault(sig, []).append(i)
+    return groups

@@ -74,7 +74,12 @@ class StructureSearch:
     def batch_scores(self, point: LatticePoint,
                      fams: Iterable[Family]) -> None:
         """Score every not-yet-cached family of ``fams`` with one vmapped
-        BDeu call per N_ijk shape group."""
+        BDeu call per N_ijk shape group.  The ct-tables themselves are
+        fetched through the strategy's batched entry point
+        (:meth:`~repro.core.strategies.Strategy.family_ct_many`), which
+        routes the round's positive contractions through the counting
+        service in signature-bucketed stacked dispatches — hill-climbing
+        is the service's first heavy client."""
         todo: List[Family] = []
         seen: Set[Family] = set()
         for fam in fams:
@@ -83,10 +88,13 @@ class StructureSearch:
                 todo.append(fam)
         if not todo:
             return
+        keeps = [tuple(sorted(parents)) + (child,)
+                 for child, parents in todo]
+        fetch_many = getattr(self.strategy, "family_ct_many", None)
+        tabs = (fetch_many(point, keeps) if fetch_many is not None
+                else [self.strategy.family_ct(point, k) for k in keeps])
         groups: Dict[Tuple[int, int], List[Tuple[Family, jnp.ndarray]]] = {}
-        for child, parents in todo:
-            keep = tuple(sorted(parents)) + (child,)
-            tab = self.strategy.family_ct(point, keep)
+        for (child, parents), tab in zip(todo, tabs):
             nijk = family_nijk(tab, child)
             groups.setdefault(tuple(nijk.shape), []).append(
                 ((child, parents), nijk))

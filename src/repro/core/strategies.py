@@ -45,7 +45,7 @@ from .ct import CtTable
 from .database import RelationalDB
 from .engine import (CachedFullPositives, CountingEngine, OnDemandPositives,
                      TupleIdPositives)
-from .mobius import complete_ct
+from .mobius import complete_ct, positive_queries
 from .variables import CtVar, LatticePoint
 
 
@@ -88,6 +88,7 @@ class Strategy:
                 db, ex, self.stats,
                 cache_budget_bytes=self.cache_budget_bytes, dtype=self.dtype)
             self.provider = self._policy_cls(self.engine)
+            self._service = None           # rebuilt lazily over this engine
             self._rows_counted = set()
             if self._warm_hists:
                 for point in lattice:
@@ -145,6 +146,42 @@ class Strategy:
         tab = self._timed_complete(point, tuple(keep))
         self.engine.cache.put(key, tab)
         return tab
+
+    # -- batched search phase (the serve layer as counting backend) ----------
+    def service(self):
+        """Lazy per-strategy :class:`~repro.serve.service.CountingService`
+        over the shared engine — the batching front-end for this
+        strategy's positive contractions."""
+        svc = getattr(self, "_service", None)
+        if svc is None:
+            from ..serve.service import CountingService
+            svc = self._service = CountingService(self.engine)
+        return svc
+
+    def family_ct_many(self, point: LatticePoint,
+                       keeps: Sequence[Sequence[CtVar]]) -> list:
+        """Fetch a whole round of family tables at once.
+
+        The positive sub-queries every missing family's Möbius join will
+        issue are enumerated up front (:func:`~repro.core.mobius
+        .positive_queries`), filtered to what the positive policy would
+        actually contract from data, and executed through the counting
+        service in signature-bucketed stacked dispatches.  Each family
+        table is then assembled by the ordinary :meth:`family_ct` path
+        against the warmed cache — so results (and, under eviction, the
+        recompute semantics) are identical to the unbatched path."""
+        keeps = [tuple(k) for k in keeps]
+        if (not self._precount_complete and len(keeps) > 1
+                and self.provider.supports_batch_prefetch):
+            cache = self.engine.cache
+            queries = []
+            for keep in keeps:
+                if ("fam",) + _freeze(point, keep) not in cache:
+                    queries.extend(positive_queries(point, keep,
+                                                    self.use_butterfly))
+            if queries:
+                self.service().prefetch(self.provider, queries)
+        return [self.family_ct(point, keep) for keep in keeps]
 
 
 class OnDemand(Strategy):

@@ -1,0 +1,21 @@
+"""Counting query service: signature-bucketed micro-batching over the
+planner/executor/cache engine (:mod:`repro.core`).
+
+Layering::
+
+    clients (structure search / external threads / benchmarks)
+        -> CountingService   (queue, buckets, backpressure)  service.py
+        -> execute_bucketed  (shape-signature micro-batches) batching.py
+        -> Executor.positive_batch (stacked/vmapped plans)   core/executors.py
+        -> CtCache           (shared byte-budgeted storage)  core/cache.py
+"""
+
+from .batching import execute_bucketed, plan_input_arrays, plan_stack_key
+from .metrics import BucketMetrics, ServiceMetrics
+from .service import CountingService, CountTicket
+
+__all__ = [
+    "CountingService", "CountTicket",
+    "ServiceMetrics", "BucketMetrics",
+    "execute_bucketed", "plan_input_arrays", "plan_stack_key",
+]

@@ -1,0 +1,56 @@
+"""Bucketed plan execution: the bridge between the service scheduler and
+the executors' stacked entry point.
+
+The scheduler (:mod:`repro.serve.service`) thinks in *shape signatures*
+(:meth:`~repro.core.plan.ContractionPlan.shape_signature` — its quota and
+metrics unit); the executors stack on the stricter
+:func:`~repro.core.executors.plan_stack_key` (same topology AND array
+sizes).  :func:`execute_bucketed` sits between the two: it chops an
+arbitrary mix of compiled plans into same-shape micro-batches of at most
+``max_batch_size``, hands each to
+:meth:`~repro.core.executors.Executor.positive_batch` (which re-groups by
+stack key and vmaps what it can, loops what it can't), and reports each
+micro-batch's latency to the service metrics.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Sequence
+
+from ..core.contract import CostStats
+from ..core.ct import CtTable
+from ..core.database import RelationalDB
+from ..core.executors import Executor, plan_input_arrays, plan_stack_key
+from ..core.plan import ContractionPlan, group_by_signature
+from .metrics import ServiceMetrics
+
+__all__ = ["execute_bucketed", "plan_input_arrays", "plan_stack_key"]
+
+
+def execute_bucketed(executor: Executor, db: RelationalDB,
+                     plans: Sequence[ContractionPlan],
+                     stats: Optional[CostStats] = None,
+                     max_batch_size: Optional[int] = None,
+                     metrics: Optional[ServiceMetrics] = None
+                     ) -> List[CtTable]:
+    """Evaluate ``plans`` in shape-signature micro-batches.
+
+    Results align positionally with ``plans`` and are numerically identical
+    to per-plan :meth:`~repro.core.executors.Executor.positive` execution;
+    only the dispatch granularity changes.
+    """
+    results: List[Optional[CtTable]] = [None] * len(plans)
+    for sig, idxs in group_by_signature(plans, key="shape").items():
+        step = max_batch_size if max_batch_size else len(idxs)
+        for s in range(0, len(idxs), max(step, 1)):
+            chunk = idxs[s:s + max(step, 1)]
+            t0 = time.perf_counter()
+            tabs = executor.positive_batch(db, [plans[i] for i in chunk],
+                                           stats)
+            dt = time.perf_counter() - t0
+            if metrics is not None:
+                metrics.observe_batch(sig, len(chunk), dt)
+            for i, tab in zip(chunk, tabs):
+                results[i] = tab
+    return results

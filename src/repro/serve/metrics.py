@@ -1,0 +1,96 @@
+"""Service observability: per-signature-bucket latency/throughput plus the
+cache hit/miss/eviction counters surfaced from :class:`~repro.core.cache
+.CtCache`.
+
+The counting service is the first layer of this repo that serves *traffic*
+rather than one offline run, so its health is expressed in service terms:
+how many requests short-circuited on the cache, how many were coalesced
+with an identical in-flight request, how large the signature buckets
+actually got (batching efficiency), and what each bucket's execution
+latency/throughput looks like.  Everything is plain counters — cheap
+enough to stay on in production — and :meth:`ServiceMetrics.snapshot`
+renders one JSON-able dict for dashboards/benchmarks.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from ..core.cache import CtCache
+
+
+@dataclass
+class BucketMetrics:
+    """One shape-signature bucket's execution statistics."""
+    signature: Tuple
+    queries: int = 0              # queries executed through this bucket
+    batches: int = 0              # positive_batch dispatches issued
+    max_batch: int = 0            # largest micro-batch seen
+    exec_s: float = 0.0           # total execution wall time
+
+    @property
+    def qps(self) -> float:
+        return self.queries / self.exec_s if self.exec_s > 0 else 0.0
+
+    def as_dict(self) -> dict:
+        return dict(signature=str(self.signature), queries=self.queries,
+                    batches=self.batches, max_batch=self.max_batch,
+                    exec_s=round(self.exec_s, 6), qps=round(self.qps, 1))
+
+
+@dataclass
+class ServiceMetrics:
+    """Aggregate counters for one :class:`~repro.serve.service
+    .CountingService` instance."""
+    requests: int = 0             # submit() calls
+    cache_hits: int = 0           # resolved from the CtCache without queueing
+    coalesced: int = 0            # merged into an identical in-flight request
+    enqueued: int = 0             # entered the request queue
+    flushes: int = 0              # scheduler drains (any trigger)
+    size_flushes: int = 0        # triggered by a bucket hitting max_batch_size
+    wait_flushes: int = 0        # triggered by the max_wait deadline
+    backpressure_flushes: int = 0  # triggered by in-flight/byte limits
+    batches: int = 0              # positive_batch dispatches
+    batched_queries: int = 0      # queries that went through a batch dispatch
+    exec_s: float = 0.0           # total bucket execution wall time
+    wait_s: float = 0.0           # total queue residency across requests
+    buckets: Dict[Tuple, BucketMetrics] = field(default_factory=dict)
+
+    def observe_batch(self, signature: Tuple, n_queries: int,
+                      dt: float) -> None:
+        b = self.buckets.get(signature)
+        if b is None:
+            b = self.buckets[signature] = BucketMetrics(signature)
+        b.queries += n_queries
+        b.batches += 1
+        b.max_batch = max(b.max_batch, n_queries)
+        b.exec_s += dt
+        self.batches += 1
+        self.batched_queries += n_queries
+        self.exec_s += dt
+
+    def observe_wait(self, dt: float) -> None:
+        self.wait_s += dt
+
+    @property
+    def qps(self) -> float:
+        return self.batched_queries / self.exec_s if self.exec_s > 0 else 0.0
+
+    def snapshot(self, cache: Optional[CtCache] = None) -> dict:
+        """One JSON-able health dict; pass the engine's cache to include
+        its hit/miss/eviction/dropped counters alongside service counters."""
+        out = dict(
+            requests=self.requests, cache_hits=self.cache_hits,
+            coalesced=self.coalesced, enqueued=self.enqueued,
+            flushes=self.flushes, size_flushes=self.size_flushes,
+            wait_flushes=self.wait_flushes,
+            backpressure_flushes=self.backpressure_flushes,
+            batches=self.batches, batched_queries=self.batched_queries,
+            exec_s=round(self.exec_s, 6), wait_s=round(self.wait_s, 6),
+            qps=round(self.qps, 1),
+            buckets=[b.as_dict() for b in self.buckets.values()],
+        )
+        if cache is not None:
+            out["cache"] = cache.info()
+        return out

@@ -1,0 +1,301 @@
+"""CountingService: a query-serving front-end for the counting engine.
+
+FACTORBASE answers instantiation counts as database *queries*; this module
+treats them the same way at scale.  A :class:`CountingService` accepts many
+concurrent positive-count queries — from one structure search, several
+searches sharing a database, or external clients on their own threads —
+and executes them in **signature-bucketed micro-batches** against one
+shared byte-budgeted :class:`~repro.core.cache.CtCache`:
+
+* ``submit(point, keep)`` returns a :class:`CountTicket` immediately.
+  Queries already resident in the cache short-circuit without queueing;
+  identical in-flight queries are coalesced onto one pending entry.
+* Pending queries are bucketed by
+  :meth:`~repro.core.plan.ContractionPlan.shape_signature`.  A bucket is
+  dispatched when it reaches ``max_batch_size``, when the oldest pending
+  query exceeds ``max_wait_s``, when backpressure demands it, or when a
+  caller blocks on a ticket — whichever comes first.
+* Dispatch goes through :func:`~repro.serve.batching.execute_bucketed`,
+  which stacks structurally identical plans into single vmapped
+  contractions (:meth:`~repro.core.executors.Executor.positive_batch`).
+* **Backpressure**: the queue is bounded by ``max_in_flight`` queries and
+  by the estimated bytes of pending results (default: the cache budget);
+  exceeding either limit drains the queue instead of growing it.
+
+Locking: the queue lock only guards scheduler state — triggered batches
+execute *after* it is released, so submits keep flowing while a batch
+runs; one execution lock serialises engine/cache mutation across client
+threads (the cache itself is also lock-guarded for its other users).
+
+Results land in the engine's cache under the same keys the on-demand
+positive policy uses, so a structure search sharing the engine is served
+directly from the warmed cache; :meth:`CountingService.prefetch` runs the
+same machinery for an explicit policy (see
+:meth:`repro.core.strategies.Strategy.family_ct_many`).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.ct import CtTable
+from ..core.engine import CountingEngine
+from ..core.plan import ContractionPlan
+from ..core.variables import CtVar, LatticePoint
+from .batching import execute_bucketed
+from .metrics import ServiceMetrics
+
+Sink = Callable[[LatticePoint, Tuple[CtVar, ...], CtTable], None]
+
+
+class _Pending:
+    """One in-flight query: a compiled plan plus everyone waiting on it."""
+
+    __slots__ = ("point", "keep", "plan", "sig", "sinks", "cache_result",
+                 "enqueued_at", "event", "result", "error")
+
+    def __init__(self, point: LatticePoint, keep: Tuple[CtVar, ...],
+                 plan: ContractionPlan):
+        self.point, self.keep, self.plan = point, keep, plan
+        self.sig = plan.shape_signature()
+        self.sinks: List[Sink] = []
+        self.cache_result = False      # a sink-less client wants it cached
+        self.enqueued_at = time.perf_counter()
+        self.event = threading.Event()
+        self.result: Optional[CtTable] = None
+        self.error: Optional[BaseException] = None
+
+
+class CountTicket:
+    """Handle for a submitted query; ``result()`` blocks (flushing the
+    service if needed) until the count table is available."""
+
+    def __init__(self, service: "CountingService",
+                 entry: Optional[_Pending] = None,
+                 result: Optional[CtTable] = None):
+        self._service = service
+        self._entry = entry
+        self._result = result
+
+    @property
+    def done(self) -> bool:
+        return self._result is not None or (
+            self._entry is not None and self._entry.event.is_set())
+
+    def result(self, timeout: Optional[float] = None) -> CtTable:
+        if self._result is not None:
+            return self._result
+        assert self._entry is not None
+        if not self._entry.event.is_set():
+            self._service.flush()          # our entry may ride this drain …
+            if not self._entry.event.wait(timeout):   # … or a concurrent one
+                raise TimeoutError("count query did not complete in time")
+        if self._entry.error is not None:  # execution failed: every waiter
+            raise self._entry.error        # sees the batch's exception
+        self._result = self._entry.result
+        return self._result
+
+
+class CountingService:
+    """Signature-bucketed micro-batching scheduler over a
+    :class:`~repro.core.engine.CountingEngine`."""
+
+    def __init__(self, engine: CountingEngine,
+                 max_batch_size: int = 64,
+                 max_wait_s: Optional[float] = None,
+                 max_in_flight: int = 1024,
+                 max_pending_bytes: Optional[int] = None,
+                 metrics: Optional[ServiceMetrics] = None):
+        if max_batch_size < 1:
+            raise ValueError("max_batch_size must be >= 1")
+        self.engine = engine
+        self.max_batch_size = max_batch_size
+        self.max_wait_s = max_wait_s
+        self.max_in_flight = max_in_flight
+        self.max_pending_bytes = (max_pending_bytes if max_pending_bytes
+                                  is not None else engine.cache.budget_bytes)
+        self.metrics = metrics if metrics is not None else ServiceMetrics()
+        self._lock = threading.RLock()         # queue state
+        self._exec_lock = threading.Lock()     # execution + cache writes
+        self._pending: Dict[Tuple, _Pending] = {}
+        self._by_sig: Dict[Tuple, List[Tuple]] = {}   # sig -> [req_key]
+        self._pending_bytes = 0
+
+    # -- client API ---------------------------------------------------------
+    def submit(self, point: LatticePoint,
+               keep: Optional[Sequence[CtVar]] = None,
+               sink: Optional[Sink] = None) -> CountTicket:
+        """Enqueue one positive-count query; returns immediately.
+
+        With no ``sink`` the result is cached under the engine's on-demand
+        positive key (and cache-resident queries short-circuit here); a
+        ``sink(point, keep, tab)`` callback routes the result elsewhere
+        (e.g. a strategy policy's absorb hook)."""
+        plan = self.engine.plan(point, keep)
+        keep_t = plan.keep
+        to_execute: List[_Pending] = []
+        with self._lock:
+            self.metrics.requests += 1
+            if sink is None:
+                hit = self.engine.cache.get(self._cache_key(point, keep_t))
+                if hit is not None:
+                    self.metrics.cache_hits += 1
+                    return CountTicket(self, result=hit)
+            req_key = (point.atoms, keep_t)
+            entry = self._pending.get(req_key)
+            if entry is not None:
+                if sink is not None:
+                    entry.sinks.append(sink)
+                else:
+                    entry.cache_result = True
+                self.metrics.coalesced += 1
+                return CountTicket(self, entry=entry)
+            entry = _Pending(point, keep_t, plan)
+            entry.cache_result = sink is None
+            if sink is not None:
+                entry.sinks.append(sink)
+            self._pending[req_key] = entry
+            self._by_sig.setdefault(entry.sig, []).append(req_key)
+            self._pending_bytes += self._estimate_bytes(plan)
+            self.metrics.enqueued += 1
+            ticket = CountTicket(self, entry=entry)
+            to_execute = self._drain_triggered(entry)
+        if to_execute:       # run OUTSIDE the lock: submits keep flowing
+            self._execute(to_execute)
+        return ticket
+
+    def count(self, point: LatticePoint,
+              keep: Optional[Sequence[CtVar]] = None) -> CtTable:
+        """Synchronous convenience: submit + wait."""
+        return self.submit(point, keep).result()
+
+    def count_many(self, queries: Sequence[Tuple[LatticePoint,
+                                                 Optional[Sequence[CtVar]]]]
+                   ) -> List[CtTable]:
+        """Submit a whole query list, dispatch it bucketed, return results
+        in submission order — the natural API for a client that has its
+        round's frontier in hand."""
+        tickets = [self.submit(point, keep) for point, keep in queries]
+        self.flush()
+        return [t.result() for t in tickets]
+
+    def prefetch(self, policy, queries: Sequence[Tuple[LatticePoint,
+                                                       Tuple[CtVar, ...]]]
+                 ) -> int:
+        """Batch-warm a positive policy's cache: ask the policy which of
+        ``queries`` it would have to contract from data
+        (:meth:`~repro.core.engine._Policy.batchable_misses`), execute those
+        in signature buckets, and hand each result back through the
+        policy's absorb hook.  Returns the number of queries executed."""
+        todo = policy.batchable_misses(list(queries))
+        if not todo:
+            return 0
+        for point, keep in todo:
+            self.submit(point, keep, sink=policy.absorb)
+        self.flush()
+        return len(todo)
+
+    # -- scheduler ----------------------------------------------------------
+    def flush(self) -> None:
+        """Drain and execute every pending query."""
+        with self._lock:
+            entries = self._drain_all()
+        if entries:
+            self._execute(entries)
+
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    def _drain_all(self) -> List[_Pending]:
+        """Take the whole queue (lock held)."""
+        entries = list(self._pending.values())
+        self._pending.clear()
+        self._by_sig.clear()
+        self._pending_bytes = 0
+        if entries:
+            self.metrics.flushes += 1
+        return entries
+
+    def _drain_bucket(self, sig: Tuple) -> List[_Pending]:
+        """Take one signature bucket (lock held)."""
+        keys = self._by_sig.pop(sig, [])
+        entries = [self._pending.pop(k) for k in keys]
+        self._pending_bytes -= sum(self._estimate_bytes(e.plan)
+                                   for e in entries)
+        if entries:
+            self.metrics.flushes += 1
+        return entries
+
+    def _drain_triggered(self, entry: _Pending) -> List[_Pending]:
+        """Apply the dispatch triggers after admitting ``entry`` (lock
+        held); returns whatever must now execute."""
+        over_count = len(self._pending) > self.max_in_flight
+        over_bytes = (self.max_pending_bytes is not None
+                      and self._pending_bytes > self.max_pending_bytes
+                      and len(self._pending) > 1)
+        if over_count or over_bytes:
+            self.metrics.backpressure_flushes += 1
+            return self._drain_all()
+        if len(self._by_sig.get(entry.sig, ())) >= self.max_batch_size:
+            self.metrics.size_flushes += 1
+            return self._drain_bucket(entry.sig)
+        if self.max_wait_s is not None:
+            oldest = min(e.enqueued_at for e in self._pending.values())
+            if time.perf_counter() - oldest >= self.max_wait_s:
+                self.metrics.wait_flushes += 1
+                return self._drain_all()
+        return []
+
+    def _execute(self, entries: List[_Pending]) -> None:
+        # one batch executes at a time: the exec lock serialises engine
+        # stats bumps, metrics, cache writes and sink callbacks across
+        # client threads (the queue lock is NOT held here).  Entries are
+        # already out of the queue, so every event MUST be set even on
+        # failure — a waiter left unsignalled would hang forever.
+        eng = self.engine
+        try:
+            with self._exec_lock:
+                now = time.perf_counter()
+                for e in entries:
+                    self.metrics.observe_wait(now - e.enqueued_at)
+                with eng.stats.timer("positive"):
+                    tabs = execute_bucketed(
+                        eng.executor, eng.db, [e.plan for e in entries],
+                        eng.stats, max_batch_size=self.max_batch_size,
+                        metrics=self.metrics)
+                for e, tab in zip(entries, tabs):
+                    for sink in e.sinks:
+                        sink(e.point, e.keep, tab)
+                    if e.cache_result or not e.sinks:
+                        key = self._cache_key(e.point, e.keep)
+                        eng.count_rows_once(key, tab)
+                        eng.cache.put(key, tab)
+                    e.result = tab
+        except BaseException as err:
+            for e in entries:
+                if e.result is None and e.error is None:
+                    e.error = err          # propagate to every waiter
+            raise
+        finally:
+            for e in entries:
+                e.event.set()
+
+    # -- bookkeeping --------------------------------------------------------
+    def _cache_key(self, point: LatticePoint,
+                   keep: Tuple[CtVar, ...]) -> Tuple:
+        # same namespace as OnDemandPositives: a search sharing this engine
+        # is served straight from the warmed cache
+        return ("pos", self.engine.executor.name, point.atoms, tuple(keep))
+
+    def _estimate_bytes(self, plan: ContractionPlan) -> int:
+        itemsize = np.dtype(self.engine.dtype).itemsize
+        return int(np.prod(plan.out_shape, dtype=np.int64)) * itemsize
+
+    def stats(self) -> dict:
+        """Service + cache health snapshot."""
+        return self.metrics.snapshot(self.engine.cache)

@@ -1,0 +1,321 @@
+"""Counting-service tests.
+
+* Property: ct-tables fetched through the batched serve path
+  (``family_ct_many`` / ``CountingService``) are identical to per-query
+  ``family_ct`` answers for all four strategies × both executors.
+* Scheduler: a mixed-signature query flood under a tight cache budget
+  still produces correct per-query results (eviction-safe batching).
+* Executor layer: ``positive_batch`` equals ``positive`` bit-for-bit and
+  stacks what it can; the service's knobs (max batch size, coalescing,
+  cache short-circuit, backpressure) behave as documented, including
+  under concurrent client threads.
+"""
+
+import itertools
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (Attribute, EntityType, Relationship, Schema,
+                        CostStats, CountingEngine, build_lattice,
+                        make_strategy, synth_db)
+from repro.core.executors import EXECUTORS, plan_stack_key
+from repro.core.plan import compile_plan, group_by_signature
+from repro.core.strategies import STRATEGIES
+from repro.serve import CountingService, ServiceMetrics
+
+att = Attribute
+ALL_COMBOS = list(itertools.product(sorted(STRATEGIES), sorted(EXECUTORS)))
+
+
+def flood_db(n_rels: int = 5, edges: int = 24, seed: int = 0):
+    """Several same-shape relationships -> stack-compatible plan floods."""
+    ents = (EntityType("A", 10, (att("a0", 3), att("a1", 2))),
+            EntityType("B", 8, (att("b0", 3),)))
+    rels = tuple(Relationship(f"R{i}", "A", "B", (att(f"e{i}", 3),))
+                 for i in range(n_rels))
+    schema = Schema(ents, rels)
+    return synth_db(schema, {f"R{i}": edges for i in range(n_rels)},
+                    seed=seed)
+
+
+def mixed_db(seed: int = 0):
+    """Heterogeneous shapes -> a mixed-signature workload."""
+    ents = (EntityType("A", 9, (att("a0", 3), att("a1", 2))),
+            EntityType("B", 7, (att("b0", 4),)),
+            EntityType("C", 6, (att("c0", 2),)))
+    rels = (Relationship("R0", "A", "B", (att("e0", 2),)),
+            Relationship("R1", "B", "C", ()),
+            Relationship("R2", "A", "C", (att("e2", 3),)))
+    schema = Schema(ents, rels)
+    return synth_db(schema, {"R0": 14, "R1": 11, "R2": 9}, seed=seed)
+
+
+# ---------------------------------------------------------------- executor --
+
+@pytest.mark.parametrize("ex", sorted(EXECUTORS))
+def test_positive_batch_identical_to_positive(ex):
+    db = flood_db()
+    plans = [compile_plan(db.schema, p) for p in build_lattice(db.schema, 1)]
+    assert len({plan_stack_key(db, p) for p in plans}) == 1  # stackable
+    eng = CountingEngine(db, ex, CostStats())
+    want = [eng.executor.positive(db, p) for p in plans]
+    got = eng.executor.positive_batch(db, plans, CostStats())
+    for w, g in zip(want, got):
+        assert w.vars == g.vars
+        np.testing.assert_array_equal(np.asarray(w.counts),
+                                      np.asarray(g.counts))
+
+
+@pytest.mark.parametrize("ex", sorted(EXECUTORS))
+def test_positive_batch_mixed_signatures(ex):
+    db = mixed_db()
+    points = build_lattice(db.schema, 2)
+    plans = [compile_plan(db.schema, p) for p in points]
+    assert len(group_by_signature(plans, key="shape")) > 1
+    eng = CountingEngine(db, ex, CostStats())
+    want = [eng.executor.positive(db, p) for p in plans]
+    got = eng.executor.positive_batch(db, plans, CostStats())
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(np.asarray(w.counts),
+                                      np.asarray(g.counts))
+
+
+def test_batch_join_accounting_matches_unbatched():
+    db = flood_db()
+    plans = [compile_plan(db.schema, p) for p in build_lattice(db.schema, 1)]
+    eng = CountingEngine(db, "sparse", CostStats())
+    st_ref = CostStats()
+    for p in plans:
+        eng.executor.positive(db, p, st_ref)
+    st_batch = CostStats()
+    eng.executor.positive_batch(db, plans, st_batch)
+    assert st_batch.joins == st_ref.joins
+    assert st_batch.rows_scanned == st_ref.rows_scanned
+
+
+# -------------------------------------------------------- property: service --
+
+@pytest.mark.parametrize("sname,ex", ALL_COMBOS)
+def test_family_ct_many_equals_family_ct(sname, ex):
+    """Batched answers equal per-query family_ct answers for all four
+    strategies × both executors."""
+    db = mixed_db()
+    lattice = build_lattice(db.schema, 2)
+    point = lattice[-1]
+    pool = list(point.all_ct_vars(db.schema, include_rind=True))
+    rng = np.random.default_rng(7)
+    keeps = [tuple(pool)]
+    for _ in range(5):
+        k = rng.integers(1, len(pool) + 1)
+        pick = rng.choice(len(pool), size=k, replace=False)
+        keeps.append(tuple(pool[i] for i in sorted(pick)))
+
+    ref = make_strategy(sname, executor=ex)
+    ref.prepare(db, lattice)
+    want = [ref.family_ct(point, keep) for keep in keeps]
+
+    st = make_strategy(sname, executor=ex)
+    st.prepare(db, lattice)
+    got = st.family_ct_many(point, keeps)
+    for keep, w, g in zip(keeps, want, got):
+        assert w.vars == g.vars
+        np.testing.assert_allclose(
+            np.asarray(g.counts), np.asarray(w.counts), atol=1e-3,
+            err_msg=f"{sname}/{ex} keep={[str(v) for v in keep]}")
+
+
+@pytest.mark.parametrize("ex", sorted(EXECUTORS))
+def test_mixed_signature_flood_under_tight_budget(ex):
+    """Scheduler correctness: a mixed-signature flood against a cache too
+    small to hold the working set still answers every query correctly."""
+    db = mixed_db()
+    lattice = build_lattice(db.schema, 2)
+    point = lattice[-1]
+    pool = list(point.all_ct_vars(db.schema, include_rind=True))
+    rng = np.random.default_rng(3)
+    keeps = []
+    for _ in range(12):
+        k = rng.integers(1, len(pool) + 1)
+        pick = rng.choice(len(pool), size=k, replace=False)
+        keeps.append(tuple(pool[i] for i in sorted(pick)))
+
+    ref = make_strategy("ONDEMAND", executor=ex)
+    ref.prepare(db, lattice)
+    want = [np.asarray(ref.family_ct(point, k).counts) for k in keeps]
+
+    st = make_strategy("ONDEMAND", executor=ex, cache_budget_bytes=4096)
+    st.prepare(db, lattice)
+    got = st.family_ct_many(point, keeps)
+    for keep, w, g in zip(keeps, want, got):
+        np.testing.assert_allclose(np.asarray(g.counts), w, atol=1e-3,
+                                   err_msg=f"{ex} keep={[str(v) for v in keep]}")
+    cache = st.engine.cache
+    assert cache.nbytes <= 4096 or len(cache) <= 1
+    assert st.stats.cache_bytes == cache.nbytes
+
+
+# ------------------------------------------------------------- scheduler ----
+
+def test_service_cache_short_circuit_and_coalescing():
+    db = flood_db()
+    eng = CountingEngine(db, "sparse", CostStats())
+    svc = CountingService(eng, max_batch_size=16)
+    points = build_lattice(db.schema, 1)
+    t1 = svc.submit(points[0])
+    t2 = svc.submit(points[0])          # identical in-flight -> coalesced
+    svc.flush()
+    np.testing.assert_array_equal(np.asarray(t1.result().counts),
+                                  np.asarray(t2.result().counts))
+    assert svc.metrics.coalesced == 1
+    t3 = svc.submit(points[0])          # now resident -> short-circuit
+    assert t3.done
+    assert svc.metrics.cache_hits == 1
+
+
+def test_service_sink_and_client_coalesce_still_caches():
+    """A client coalescing onto an in-flight sink submission (policy
+    prefetch) must still get the result cached under the client key."""
+    db = flood_db()
+    eng = CountingEngine(db, "sparse", CostStats())
+    svc = CountingService(eng, max_batch_size=16)
+    point = build_lattice(db.schema, 1)[0]
+    absorbed = []
+    svc.submit(point, None, sink=lambda p, k, tab: absorbed.append(tab))
+    t = svc.submit(point, None)               # client rides the same entry
+    svc.flush()
+    assert len(absorbed) == 1                 # the sink got its copy
+    keep = eng.plan(point, None).keep
+    key = ("pos", eng.executor.name, point.atoms, keep)
+    assert key in eng.cache                   # …and the client key is warm
+    t2 = svc.submit(point, None)
+    assert t2.done and svc.metrics.cache_hits == 1
+    np.testing.assert_array_equal(np.asarray(t.result().counts),
+                                  np.asarray(t2.result().counts))
+
+
+def test_rows_counted_shared_between_service_and_policy():
+    """ct_rows accounting is per distinct artefact even when the service
+    and a policy compute the same key (engine-level rows_counted set)."""
+    from repro.core.engine import OnDemandPositives
+    db = flood_db()
+    eng = CountingEngine(db, "sparse", CostStats())
+    svc = CountingService(eng)
+    point = build_lattice(db.schema, 1)[0]
+    keep = eng.plan(point, None).keep
+    svc.count(point, keep)
+    rows_after_service = eng.stats.ct_rows
+    assert rows_after_service > 0
+    eng.cache.evict_all()                     # force the policy to recompute
+    OnDemandPositives(eng).positive(point, keep)
+    assert eng.stats.ct_rows == rows_after_service
+
+
+def test_service_size_trigger_dispatches_bucket():
+    db = flood_db()
+    eng = CountingEngine(db, "sparse", CostStats())
+    svc = CountingService(eng, max_batch_size=3)
+    points = build_lattice(db.schema, 1)      # 5 same-signature queries
+    tickets = [svc.submit(p) for p in points]
+    assert svc.metrics.size_flushes >= 1      # fired at the 3rd submit
+    assert svc.pending() < len(points)
+    svc.flush()
+    for p, t in zip(points, tickets):
+        ref = eng.executor.positive(db, eng.plan(p, None))
+        np.testing.assert_array_equal(np.asarray(t.result().counts),
+                                      np.asarray(ref.counts))
+
+
+def test_service_backpressure_bounds_queue():
+    db = mixed_db()
+    eng = CountingEngine(db, "sparse", CostStats())
+    svc = CountingService(eng, max_batch_size=64, max_in_flight=2)
+    for p in build_lattice(db.schema, 2):
+        svc.submit(p)
+    assert svc.pending() <= 2
+    assert svc.metrics.backpressure_flushes >= 1
+    svc.flush()
+
+
+def test_service_concurrent_clients():
+    """Several client threads flooding one service get correct answers."""
+    db = mixed_db()
+    eng = CountingEngine(db, "sparse", CostStats())
+    svc = CountingService(eng, max_batch_size=4)
+    points = build_lattice(db.schema, 2)
+    ref = {p: np.asarray(CountingEngine(db, "sparse", CostStats())
+                         .contract(p, None).counts) for p in points}
+    errors = []
+
+    def client(seed):
+        rng = np.random.default_rng(seed)
+        for _ in range(6):
+            p = points[int(rng.integers(len(points)))]
+            try:
+                tab = svc.count(p)
+                np.testing.assert_array_equal(np.asarray(tab.counts), ref[p])
+            except Exception as e:          # surface in the main thread
+                errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(s,)) for s in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    snap = svc.stats()
+    assert snap["requests"] == 24
+    assert snap["cache"]["hits"] >= 1       # repeats served from the cache
+
+
+@pytest.mark.parametrize("use_butterfly", [True, False])
+def test_positive_queries_predicts_complete_ct_requests(use_butterfly):
+    """The prefetch enumeration must stay in lockstep with what
+    complete_ct actually requests from its provider — a misprediction
+    doesn't break correctness (family_ct recomputes) but silently turns
+    the batched prefetch into wasted double work, so drift fails here."""
+    from repro.core import CtVar, complete_ct, positive_queries
+    from repro.core.engine import OnDemandPositives
+
+    db = mixed_db()
+    lattice = build_lattice(db.schema, 2)
+    point = lattice[-1]
+    pool = list(point.all_ct_vars(db.schema, include_rind=True))
+    rng = np.random.default_rng(11)
+    keeps = [tuple(pool), ()]
+    for _ in range(6):
+        k = rng.integers(1, len(pool) + 1)
+        pick = rng.choice(len(pool), size=k, replace=False)
+        keeps.append(tuple(pool[i] for i in sorted(pick)))
+
+    for keep in keeps:
+        eng = CountingEngine(db, "sparse", CostStats())
+        policy = OnDemandPositives(eng)
+        recorded = []
+
+        class Recorder:
+            def positive(self, p, k):
+                recorded.append((p.atoms, tuple(k)))
+                return policy.positive(p, k)
+
+            def hist(self, var, k):
+                return policy.hist(var, k)
+
+        complete_ct(point, keep, Recorder(), use_butterfly=use_butterfly)
+        predicted = sorted((p.atoms, tuple(k))
+                           for p, k in positive_queries(point, keep,
+                                                        use_butterfly))
+        assert sorted(recorded) == predicted, \
+            f"butterfly={use_butterfly} keep={[str(v) for v in keep]}"
+
+
+def test_service_metrics_snapshot_shape():
+    db = flood_db()
+    eng = CountingEngine(db, "sparse", CostStats())
+    svc = CountingService(eng, metrics=ServiceMetrics())
+    svc.count_many([(p, None) for p in build_lattice(db.schema, 1)])
+    snap = svc.stats()
+    assert snap["batched_queries"] == 5
+    assert snap["buckets"] and snap["buckets"][0]["queries"] == 5
+    assert {"hits", "misses", "evictions", "dropped"} <= set(snap["cache"])
