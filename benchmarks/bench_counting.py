@@ -14,10 +14,14 @@ Each (dataset x strategy) run yields all three artefacts at once:
   * fig4_memory   — peak cache footprint (resident ct bytes)
   * table5_sizes  — summed family-ct rows vs the global PRECOUNT ct rows
 
-plus the serve-layer dimension:
+plus the serve-layer dimensions:
   * service_flood — same-signature query flood, per-query executor
     dispatch vs the CountingService's signature-bucketed stacked path
     (the serve subsystem's headline speedup).
+  * sharded_flood (``--shards``) — the same flood against a horizontally
+    hash-partitioned database behind the CountingRouter (one service per
+    shard, counts merged at the front-end) vs the single-database
+    service, sparse executor on both sides.
 
 Output layout: ``results/bench/counting.json`` is the ONE canonical
 artifact (runs, paper views, flood records, and the ``trajectory``
@@ -295,6 +299,74 @@ def bench_service_flood(n_rels: int = 16, edges: int = 2000,
     return out
 
 
+def bench_sharded_flood(n_shards: int = 2, n_rels: int = 16,
+                        edges: int = 2000, rounds: int = 5,
+                        seed: int = 0) -> List[dict]:
+    """Sharded-vs-single sparse counting throughput (the ``--shards``
+    dimension).
+
+    The same cold-cache query flood is answered two ways: by one
+    CountingService over the whole database, and by a CountingRouter over
+    a ``n_shards``-way hash-partitioned copy (one service per shard,
+    fan-out + count merging at the front-end).  Both sides run the sparse
+    executor.  Reports queries/s per mode and the sharded-over-single
+    ratio — on one host this measures the routing/merge overhead; across
+    real hosts each shard scans 1/``n_shards`` of the edge rows.
+    """
+    from repro.core.database import shard_database
+    from repro.serve import CountingRouter, CountingService
+
+    db = _flood_db(n_rels, edges, seed=seed)
+    lattice = build_lattice(db.schema, 1)
+    queries = [(p, None) for p in lattice]
+    n_queries = rounds * len(queries)
+    config = f"shard{n_shards}x{n_rels}x{edges}r{rounds}"
+    out: List[dict] = []
+
+    # ---- single-database service (the baseline) ----------------------------
+    eng = CountingEngine(db, "sparse", CostStats())
+    svc = CountingService(eng, max_batch_size=max(n_rels, 1))
+    eng.cache.evict_all()
+    jax.block_until_ready([t.counts for t in svc.count_many(queries)])
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        eng.cache.evict_all()
+        jax.block_until_ready([t.counts for t in svc.count_many(queries)])
+    wall_single = time.perf_counter() - t0
+    qps_single = n_queries / wall_single
+
+    # ---- sharded router ----------------------------------------------------
+    sdb = shard_database(db, n_shards)
+    router = CountingRouter(sdb, executor="sparse",
+                            max_batch_size=max(n_rels, 1))
+    jax.block_until_ready([t.counts for t in router.count_many(queries)])
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        for e in router.engines:
+            e.cache.evict_all()
+        jax.block_until_ready([t.counts for t in router.count_many(queries)])
+    wall_sharded = time.perf_counter() - t0
+    qps_sharded = n_queries / wall_sharded
+
+    ratio = qps_sharded / qps_single if qps_single > 0 else float("inf")
+    rs = router.stats()["router"]
+    print(f"[shards] {config} sparse single={qps_single:8.1f} q/s  "
+          f"sharded={qps_sharded:8.1f} q/s  ratio={ratio:5.2f}x  "
+          f"fanout={rs['fanout_requests']} merged={rs['merged_tables']}",
+          flush=True)
+    for mode, wall, qps in (("single", wall_single, qps_single),
+                            ("sharded", wall_sharded, qps_sharded)):
+        rec = {"bench": "sharded_flood", "config": config,
+               "dataset": "synthflood", "strategy": "ROUTER",
+               "executor": "sparse", "mode": mode, "shards": n_shards,
+               "queries": n_queries, "wall_s": round(wall, 4),
+               "qps": round(qps, 1), "completed": True}
+        if mode == "sharded":
+            rec["ratio_vs_single"] = round(ratio, 3)
+        out.append(rec)
+    return out
+
+
 def write_outputs(art: dict, out_dir: str = "results/bench",
                   bench_json: Optional[str] = "BENCH_counting.json") -> None:
     """One canonical artifact; the root trajectory file is derived.
@@ -328,6 +400,8 @@ def main(out_dir: str = "results/bench", scale: Optional[float] = None,
          executors: Sequence[str] = ("dense", "sparse"),
          flood: bool = True,
          flood_kw: Optional[dict] = None,
+         shards: Sequence[int] = (),
+         shard_kw: Optional[dict] = None,
          bench_json: Optional[str] = "BENCH_counting.json") -> dict:
     recs = run_all(datasets=datasets, scale=scale, budget_s=budget_s,
                    executors=executors)
@@ -357,10 +431,31 @@ def main(out_dir: str = "results/bench", scale: Optional[float] = None,
         flood_recs = bench_service_flood(executors=tuple(executors),
                                          **(flood_kw or {}))
         art["service_flood"] = flood_recs
-    art["trajectory"] = bench_trajectory(recs) + flood_recs
+    shard_recs: List[dict] = []
+    for n in shards:
+        shard_recs.extend(bench_sharded_flood(n_shards=int(n),
+                                              **(shard_kw or {})))
+    if shard_recs:
+        art["sharded_flood"] = shard_recs
+    art["trajectory"] = bench_trajectory(recs) + flood_recs + shard_recs
     write_outputs(art, out_dir=out_dir, bench_json=bench_json)
     return art
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scale", type=float, default=None,
+                    help="multiply the per-dataset DEFAULT_SCALES")
+    ap.add_argument("--datasets", nargs="*", default=list(PAPER_DATASETS))
+    ap.add_argument("--budget-s", type=float, default=TIME_BUDGET_S)
+    ap.add_argument("--no-spotlight", action="store_true")
+    ap.add_argument("--no-flood", action="store_true")
+    ap.add_argument("--shards", type=int, nargs="*", default=[],
+                    metavar="N",
+                    help="also run the sharded-vs-single sparse flood for "
+                         "each shard count given (e.g. --shards 2 4)")
+    args = ap.parse_args()
+    main(scale=args.scale, datasets=tuple(args.datasets),
+         budget_s=args.budget_s, spotlight=not args.no_spotlight,
+         flood=not args.no_flood, shards=tuple(args.shards))

@@ -33,6 +33,10 @@ BENCH_JSON = "BENCH_counting.json"
 REGRESSION_FACTOR = 2.0
 SMOKE_FLOOD = dict(n_rels=8, edges=800, rounds=3)
 MIN_BATCHED_SPEEDUP = 2.0     # the serve layer's reason to exist
+# sharded-vs-single is recorded (trajectory dimension), not gated: on one
+# CI host the router measures merge overhead, not the n-hosts scan win
+SMOKE_SHARDS = (2,)
+SMOKE_SHARD_KW = dict(n_rels=8, edges=800, rounds=3)
 
 
 def flood_config_tag() -> str:
@@ -66,7 +70,9 @@ def main() -> int:
 
     art = bench_counting.main(
         datasets=("UW",), scale=0.25, budget_s=120.0, spotlight=False,
-        flood=True, flood_kw=dict(SMOKE_FLOOD), bench_json=BENCH_JSON)
+        flood=True, flood_kw=dict(SMOKE_FLOOD),
+        shards=SMOKE_SHARDS, shard_kw=dict(SMOKE_SHARD_KW),
+        bench_json=BENCH_JSON)
 
     failures = []
     for rec in art.get("service_flood", []):

@@ -1,0 +1,128 @@
+"""Docs link/reference checker (the CI docs job).
+
+Walks ``README.md`` and ``docs/*.md`` and fails when documentation rots:
+
+* **internal links** ``[text](path)`` must point at files/directories that
+  exist (relative to the markdown file); ``#fragment`` anchors must match
+  a heading of the target file (GitHub-style slugs);
+* **code references** — inline-code spans that name this package
+  (``repro.core.plan.ContractionPlan`` style) must import/resolve, and
+  spans that look like repo paths (``src/repro/serve/router.py``,
+  ``tests/``) must exist.
+
+Fenced code blocks are ignored (examples are allowed to elide imports).
+Exits 1 when any reference is broken.
+
+Run:  python scripts/check_docs.py
+"""
+
+from __future__ import annotations
+
+import importlib
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_RE = re.compile(r"`([^`\n]+)`")
+DOTTED_RE = re.compile(r"^repro(\.[A-Za-z_][A-Za-z0-9_]*)+$")
+PATH_RE = re.compile(r"^[A-Za-z0-9_.\-]+(/[A-Za-z0-9_.\-]*)+$")
+
+
+def strip_fences(text: str) -> str:
+    out, fenced = [], False
+    for line in text.splitlines():
+        if line.lstrip().startswith("```"):
+            fenced = not fenced
+            continue
+        out.append("" if fenced else line)
+    return "\n".join(out)
+
+
+def heading_slugs(path: Path) -> set:
+    """GitHub-style anchor slugs of a markdown file's headings."""
+    slugs = set()
+    for line in strip_fences(path.read_text()).splitlines():
+        m = re.match(r"#+\s+(.*)", line)
+        if m:
+            t = re.sub(r"`([^`]*)`", r"\1", m.group(1).strip())
+            t = re.sub(r"[^\w\- ]", "", t.lower())
+            slugs.add(t.replace(" ", "-"))
+    return slugs
+
+
+def check_link(md: Path, target: str) -> str | None:
+    if target.startswith(("http://", "https://", "mailto:")):
+        return None
+    path_part, _, frag = target.partition("#")
+    dest = md if not path_part else (md.parent / path_part).resolve()
+    if not dest.exists():
+        return f"link target does not exist: {target}"
+    if frag and dest.suffix == ".md" and frag not in heading_slugs(dest):
+        return f"anchor #{frag} not found in {path_part or md.name}"
+    return None
+
+
+def resolve_dotted(name: str) -> str | None:
+    """Import the longest module prefix, then getattr the rest."""
+    parts = name.split(".")
+    mod, i = None, 0
+    for i in range(len(parts), 0, -1):
+        try:
+            mod = importlib.import_module(".".join(parts[:i]))
+            break
+        except ImportError:
+            continue
+    if mod is None:
+        return f"cannot import any prefix of {name}"
+    obj = mod
+    for attr in parts[i:]:
+        try:
+            obj = getattr(obj, attr)
+        except AttributeError:
+            return f"{'.'.join(parts[:i])} has no attribute " \
+                   f"{'.'.join(parts[i:])}"
+    return None
+
+
+def check_code_span(span: str) -> str | None:
+    span = span.strip()
+    if DOTTED_RE.match(span):
+        return resolve_dotted(span)
+    if PATH_RE.match(span) and not span.startswith("."):
+        if not (ROOT / span).exists():
+            return f"path does not exist: {span}"
+    return None
+
+
+def main() -> int:
+    errors = []
+    for md in DOC_FILES:
+        if not md.exists():
+            errors.append(f"{md.relative_to(ROOT)}: file missing")
+            continue
+        body = strip_fences(md.read_text())
+        for target in LINK_RE.findall(body):
+            err = check_link(md, target)
+            if err:
+                errors.append(f"{md.relative_to(ROOT)}: {err}")
+        for span in CODE_RE.findall(body):
+            err = check_code_span(span)
+            if err:
+                errors.append(f"{md.relative_to(ROOT)}: {err}")
+    for e in errors:
+        print(f"[check-docs] FAIL: {e}", flush=True)
+    if not errors:
+        n = sum(1 for _ in DOC_FILES)
+        print(f"[check-docs] OK: {n} files, links and code references "
+              f"resolve", flush=True)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

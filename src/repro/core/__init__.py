@@ -5,7 +5,9 @@ modules, layered as planner (:mod:`.plan`) / executors (:mod:`.executors`)
 """
 
 from .schema import Attribute, EntityType, Relationship, Schema
-from .database import RelationalDB, synth_db, paper_benchmark_db, PAPER_DATASETS
+from .database import (RelationalDB, ShardedDatabase, NotRoutableError,
+                       shard_database, synth_db, paper_benchmark_db,
+                       PAPER_DATASETS)
 from .variables import (Var, Atom, CtVar, LatticePoint, attr_var, edge_var,
                         rind_var, build_lattice, point_from_rels)
 from .ct import CtTable
@@ -13,6 +15,9 @@ from .contract import CostStats, positive_ct, entity_hist
 from .plan import ContractionPlan, compile_plan, group_by_signature
 from .executors import (DenseExecutor, Executor, SparseExecutor, EXECUTORS,
                         make_executor, plan_input_arrays, plan_stack_key)
+from .distributed import (ShardedSparseExecutor, sharded_positive_ct,
+                          sharded_sparse_positive_ct)  # registers the
+                          # "sparse_sharded" backend in EXECUTORS on import
 from .cache import CtCache
 from .engine import (CountingEngine, CachedFullPositives, OnDemandPositives,
                      TupleIdPositives)
@@ -24,13 +29,15 @@ from .search import StructureSearch, discover_model, BNModel
 
 __all__ = [
     "Attribute", "EntityType", "Relationship", "Schema",
-    "RelationalDB", "synth_db", "paper_benchmark_db", "PAPER_DATASETS",
+    "RelationalDB", "ShardedDatabase", "NotRoutableError", "shard_database",
+    "synth_db", "paper_benchmark_db", "PAPER_DATASETS",
     "Var", "Atom", "CtVar", "LatticePoint", "attr_var", "edge_var", "rind_var",
     "build_lattice", "point_from_rels", "CtTable",
     "CostStats", "positive_ct", "entity_hist",
     "ContractionPlan", "compile_plan", "group_by_signature",
-    "Executor", "DenseExecutor", "SparseExecutor", "EXECUTORS", "make_executor",
-    "plan_input_arrays", "plan_stack_key",
+    "Executor", "DenseExecutor", "SparseExecutor", "ShardedSparseExecutor",
+    "EXECUTORS", "make_executor", "plan_input_arrays", "plan_stack_key",
+    "sharded_positive_ct", "sharded_sparse_positive_ct",
     "CtCache", "CountingEngine",
     "CachedFullPositives", "OnDemandPositives", "TupleIdPositives",
     "complete_ct", "positive_queries", "superset_mobius",

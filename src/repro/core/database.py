@@ -13,8 +13,9 @@ benchmarks dial ``rows`` up to the paper's Visual Genome scale (15.8M rows).
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, Mapping, Tuple
+import zlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
@@ -129,6 +130,190 @@ def synth_db(schema: Schema,
     db = RelationalDB(schema, entities, relations)
     db.validate()
     return db
+
+
+# ---------------------------------------------------------------------------
+# Horizontal partitioning: ShardedDatabase
+# ---------------------------------------------------------------------------
+
+class NotRoutableError(ValueError):
+    """A counting query cannot be answered by fan-out + count addition over
+    the shards of a :class:`ShardedDatabase` (see
+    :meth:`ShardedDatabase.route` for the exact condition)."""
+
+
+def _shard_hash(ids: np.ndarray, n_shards: int) -> np.ndarray:
+    """Deterministic multiplicative hash of entity ids onto shard indices
+    (Knuth's 2654435761 mod 2^32) — stable across processes and platforms,
+    unlike Python's salted ``hash``."""
+    h = (ids.astype(np.int64) * 2654435761) & 0xFFFFFFFF
+    return (h % n_shards).astype(np.int64)
+
+
+def _route_key(point) -> int:
+    """Stable small hash of a lattice point, used only to spread
+    replicated-only queries across shards."""
+    return zlib.crc32(str(point).encode())
+
+
+@dataclass
+class ShardedDatabase:
+    """A horizontally partitioned :class:`RelationalDB`.
+
+    Every shard is itself a complete, valid ``RelationalDB`` over the SAME
+    schema and the SAME entity-id space:
+
+    * **entity tables are replicated** on every shard (they are the small
+      attribute tables — ``n_entities`` rows each — and replication keeps
+      every edge index valid everywhere);
+    * **relationship tables incident to ``root_etype``** are
+      hash-partitioned by the ``root_etype`` endpoint of each edge
+      (``src`` for self-relationships): every edge lives on exactly one
+      shard, and all edges touching the same root entity live together;
+    * **other relationship tables are replicated** (every shard sees every
+      edge).
+
+    Positive-count queries are answered by running the ordinary counting
+    stack per shard and merging tables at a front-end
+    (:class:`repro.serve.router.CountingRouter`); :meth:`route` decides,
+    per query, whether the merge is a fan-out **sum** or a **single-shard**
+    lookup.  Use :func:`shard_database` to build one.
+
+    Usage::
+
+        sdb = shard_database(db, n_shards=4)
+        assert sdb.route(point)[0] in ("fanout", "single")
+    """
+
+    schema: Schema
+    shards: Tuple[RelationalDB, ...]
+    root_etype: str
+    partitioned: frozenset = field(default_factory=frozenset)  # rel names
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    def _partition_side_var(self, atom) -> "object":
+        """The variable at the partition-key endpoint of a partitioned
+        atom: the ``root_etype`` end of the relationship (``src`` wins for
+        self-relationships, matching :func:`shard_database`)."""
+        rel = self.schema.relationship(atom.rel)
+        return atom.src if rel.src == self.root_etype else atom.dst
+
+    def route(self, point) -> Tuple[str, Optional[int]]:
+        """Decide how a positive-count query over ``point`` is answered.
+
+        Per-shard counts sum to the true count exactly when every satisfied
+        grounding finds ALL of its partitioned edges on one shard.  That
+        holds in exactly two cases:
+
+        * no atom of the point uses a partitioned relationship — every
+          shard holds the full (replicated) data, so the query is answered
+          by ONE shard (summing would over-count ``n_shards``-fold);
+        * every partitioned atom touches the *same* first-order variable at
+          its partition-key endpoint — that grounding value hashes all the
+          edges of the grounding onto one shard, so fan-out + sum is exact.
+
+        Args:
+            point: a :class:`~repro.core.variables.LatticePoint`.
+
+        Returns:
+            ``("fanout", None)`` — query every shard, add the tables; or
+            ``("single", shard_index)`` — query that one shard.
+
+        Raises:
+            NotRoutableError: partitioned atoms disagree on the
+                partition-key variable (e.g. a chain entering the root
+                entity type at two different variables); no additive
+                merge over this partitioning exists.
+        """
+        part_atoms = [a for a in point.atoms if a.rel in self.partitioned]
+        if not part_atoms:
+            return ("single", _route_key(point) % self.n_shards)
+        side_vars = {self._partition_side_var(a) for a in part_atoms}
+        if len(side_vars) > 1:
+            raise NotRoutableError(
+                f"point {point} joins partitioned relationships "
+                f"{sorted(a.rel for a in part_atoms)} at different "
+                f"{self.root_etype!r} variables {sorted(map(str, side_vars))}; "
+                f"per-shard counts are not additive under this partitioning "
+                f"(re-shard with a different root_etype or replicate one "
+                f"of the relationships)")
+        return ("fanout", None)
+
+
+def shard_database(db: RelationalDB, n_shards: int,
+                   root_etype: Optional[str] = None) -> ShardedDatabase:
+    """Hash-partition ``db`` into ``n_shards`` complete sub-databases.
+
+    Relationship tables incident to ``root_etype`` are split by the hash of
+    their ``root_etype`` endpoint (the *root entity* of a counting query);
+    entity tables and the remaining relationship tables are replicated —
+    see :class:`ShardedDatabase` for the exact layout and the merge
+    semantics it buys.
+
+    Args:
+        db: the database to partition (left untouched; shards share its
+            entity/replicated arrays and hold views of partitioned ones).
+        n_shards: number of shards (>= 1).
+        root_etype: entity type whose ids are the partition key.  Defaults
+            to the type incident to the most relationships (ties broken by
+            larger table, then name) — the type most queries root at.
+
+    Returns:
+        A :class:`ShardedDatabase` whose shards each pass
+        :meth:`RelationalDB.validate`.
+
+    Raises:
+        ValueError: ``n_shards < 1``, or ``root_etype`` names no entity
+            type / touches no relationship.
+
+    Usage::
+
+        sdb = shard_database(paper_benchmark_db("UW"), n_shards=2)
+        assert sum(s.relations["Registered"].num_edges
+                   for s in sdb.shards) == db.relations["Registered"].num_edges
+    """
+    if n_shards < 1:
+        raise ValueError("n_shards must be >= 1")
+    incident: Dict[str, int] = {et.name: 0 for et in db.schema.entities}
+    for rt in db.schema.relationships:
+        incident[rt.src] += 1
+        if rt.dst != rt.src:
+            incident[rt.dst] += 1
+    if root_etype is None:
+        root_etype = max(incident,
+                         key=lambda n: (incident[n],
+                                        db.schema.entity(n).size, n))
+    elif root_etype not in incident:
+        raise ValueError(f"unknown entity type {root_etype!r}")
+    if incident[root_etype] == 0:
+        raise ValueError(f"root_etype {root_etype!r} touches no relationship; "
+                         f"nothing would be partitioned")
+
+    partitioned = frozenset(rt.name for rt in db.schema.relationships
+                            if root_etype in (rt.src, rt.dst))
+    assign: Dict[str, np.ndarray] = {}         # hash each edge list once
+    for name in partitioned:
+        tab = db.relations[name]
+        key_ids = tab.src if tab.type.src == root_etype else tab.dst
+        assign[name] = _shard_hash(np.asarray(key_ids), n_shards)
+    shards: List[RelationalDB] = []
+    for s in range(n_shards):
+        relations: Dict[str, RelationTable] = {}
+        for name, tab in db.relations.items():
+            if name not in partitioned:
+                relations[name] = tab          # replicated: shared reference
+                continue
+            mask = assign[name] == s
+            relations[name] = RelationTable(
+                tab.type, tab.src[mask], tab.dst[mask],
+                {a: col[mask] for a, col in tab.attrs.items()})
+        shard = RelationalDB(db.schema, db.entities, relations)
+        shard.validate()
+        shards.append(shard)
+    return ShardedDatabase(db.schema, tuple(shards), root_etype, partitioned)
 
 
 # ---------------------------------------------------------------------------

@@ -8,9 +8,24 @@ run the gather -> one-hot multiply -> segment-sum hop on local rows, and
 sharded over ``model`` for the Möbius/projection phase, which is elementwise
 across the attribute axes.
 
+Two mesh-sharded paths live here, mirroring the two executors:
+
+* :func:`sharded_positive_ct` — the dense one-hot path, written directly
+  against the database (predates the planner);
+* :class:`ShardedSparseExecutor` — the O(nnz) path: a drop-in
+  :class:`~repro.core.executors.SparseExecutor` whose mixed-radix
+  segment-sum hops run under ``shard_map`` over the ``data`` axis.  It
+  walks :class:`~repro.core.plan.ContractionPlan` unchanged — only the two
+  device primitives (edge scatter-add, root combine) are replaced, so it
+  inherits every strategy/Möbius/cache behaviour and is property-tested
+  against the oracle like any registered executor
+  (``EXECUTORS["sparse_sharded"]``).
+
 This is the scale-out path for the paper's technique: the 15.8M-row Visual
 Genome sweep becomes 15.8M / (pods x data) rows per chip with one all-reduce
-per hop.
+per hop.  For scaling beyond one mesh — horizontally partitioned
+*databases*, one service per shard — see :mod:`repro.core.database`
+(``ShardedDatabase``) and :mod:`repro.serve.router`.
 """
 
 from __future__ import annotations
@@ -27,6 +42,7 @@ from ..compat import shard_map
 from .contract import CostStats, entity_onehot, _onehot, _expand
 from .ct import CtTable
 from .database import RelationalDB
+from .executors import EXECUTORS, SparseExecutor, _kr_segment_sum
 from .variables import Atom, CtVar, LatticePoint, Var, edge_var
 
 
@@ -72,11 +88,33 @@ def sharded_positive_ct(db: RelationalDB, point: LatticePoint,
                         *, mesh: Mesh, axis: str = "data",
                         dtype=jnp.float32,
                         stats: Optional[CostStats] = None) -> CtTable:
-    """Positive ct-table with edge tables sharded over ``axis`` of ``mesh``.
+    """Positive ct-table (dense one-hot path) with edge tables sharded
+    over ``axis`` of ``mesh``.
 
-    Semantically identical to :func:`repro.core.contract.positive_ct` (tested
-    against it); each tree hop performs local partial counts followed by one
-    ``psum``."""
+    Semantically identical to :func:`repro.core.contract.positive_ct`
+    (tested against it); each tree hop performs local partial counts
+    followed by one ``psum``.  When the mesh also has a ``model`` axis
+    that divides a hop's value-space width, that hop's columns are
+    sharded over it too (the otherwise-idle TP ranks join the sweep).
+
+    Args:
+        db: the database to count over.
+        point: lattice point (>= 1 relationship atom).
+        keep: ct-table axes to keep; defaults to every entity/edge
+            attribute of the point (no indicator axes — positives only).
+        mesh: the device mesh (keyword-only).
+        axis: mesh axis to shard edge rows over.
+        dtype: accumulation dtype of the counts.
+        stats: optional :class:`~repro.core.contract.CostStats` to record
+            join/row accounting into.
+
+    Returns:
+        The positive :class:`~repro.core.ct.CtTable` over ``keep``.
+
+    Usage::
+
+        tab = sharded_positive_ct(db, point, mesh=mesh, axis="data")
+    """
     schema = db.schema
     if keep is None:
         keep = [v for v in point.all_ct_vars(schema, include_rind=False)]
@@ -136,11 +174,206 @@ def sharded_positive_ct(db: RelationalDB, point: LatticePoint,
     return tab.transpose_to(order) if order != tab.vars else tab
 
 
+# ---------------------------------------------------------------------------
+# sharded sparse executor: the O(nnz) path over a device mesh
+# ---------------------------------------------------------------------------
+
+class ShardedSparseExecutor(SparseExecutor):
+    """:class:`~repro.core.executors.SparseExecutor` with its segment-sum
+    device steps sharded over one mesh axis.
+
+    The plan walk, the mixed-radix code arithmetic and the caching semantics
+    are inherited unchanged; only the two device primitives change:
+
+    * **edge scatter-add** (:meth:`_edge_segment_sum`) — the per-hop edge
+      list (padded to a multiple of the shard count) is split over
+      ``axis``; each rank ``segment_sum``-s its local rows into the full
+      ``(parent, code)`` segment space and the partials merge with a single
+      ``psum``.  This is the Möbius-join parallelisation of Qian & Schulte:
+      sufficient statistics are sums over data partitions.
+    * **root combine** (:meth:`_reduce_by_code`) — entity rows (root codes
+      + factor matrices) are split over ``axis`` the same way; one
+      ``psum`` of the ``(root_card, D)`` partial tables merges them.
+
+    Counts are integer-valued, so the per-rank reordering is exact: sharded
+    results are numerically identical to :class:`SparseExecutor`
+    (property-tested in ``tests/test_distributed_counting.py``).
+
+    Stacked/vmapped batch dispatch is intentionally NOT sharded
+    (``positive_batch`` falls back to per-plan sharded execution):
+    scaling out a *flood* of queries is the database-sharding router's job
+    (:mod:`repro.serve.router`), while this class scales out one large
+    contraction.
+
+    Args:
+        dtype / mobius_fn / use_pallas_mobius: as for
+            :class:`~repro.core.executors.Executor`.
+        mesh: the device mesh; defaults to a 1-D mesh over every visible
+            device named ``(axis,)``.
+        axis: mesh axis name to shard edge/entity rows over.
+
+    Raises:
+        ValueError: ``axis`` is not an axis of ``mesh``.
+
+    Usage::
+
+        ex = ShardedSparseExecutor(mesh=jax.make_mesh((8,), ("data",)))
+        tab = CountingEngine(db, ex).contract(point, keep)
+    """
+
+    name = "sparse_sharded"
+
+    def __init__(self, dtype=jnp.float32, mobius_fn=None,
+                 use_pallas_mobius: bool = False,
+                 mesh: Optional[Mesh] = None, axis: str = "data"):
+        super().__init__(dtype=dtype, mobius_fn=mobius_fn,
+                         use_pallas_mobius=use_pallas_mobius)
+        if mesh is None:
+            mesh = Mesh(np.asarray(jax.devices()), (axis,))
+        if axis not in mesh.axis_names:
+            raise ValueError(f"axis {axis!r} not in mesh axes "
+                             f"{mesh.axis_names}")
+        self.mesh = mesh
+        self.axis = axis
+        self.n_ranks = int(mesh.shape[axis])
+
+    # -- device primitives, sharded -----------------------------------------
+    def _edge_segment_sum(self, seg_np: np.ndarray,
+                          rows: Optional[jnp.ndarray],
+                          total: int) -> jnp.ndarray:
+        if self.n_ranks == 1:
+            return super()._edge_segment_sum(seg_np, rows, total)
+        ax = self.axis
+        seg, w = _pad_to(seg_np, self.n_ranks)
+        if rows is None:
+            def ones_hop(seg_l, w_l):
+                out = jax.ops.segment_sum(w_l.astype(self.dtype), seg_l,
+                                          num_segments=total)
+                return jax.lax.psum(out, ax)
+
+            fn = shard_map(ones_hop, mesh=self.mesh,
+                           in_specs=(P(ax), P(ax)), out_specs=P(None),
+                           check_vma=False)
+            return fn(jnp.asarray(seg), jnp.asarray(w))
+
+        rows_p = jnp.pad(rows, ((0, seg.shape[0] - rows.shape[0]), (0, 0)))
+
+        def dense_hop(seg_l, rows_l):
+            out = jax.ops.segment_sum(rows_l, seg_l, num_segments=total)
+            return jax.lax.psum(out, ax)
+
+        fn = shard_map(dense_hop, mesh=self.mesh,
+                       in_specs=(P(ax), P(ax, None)),
+                       out_specs=P(None, None), check_vma=False)
+        return fn(jnp.asarray(seg), rows_p)
+
+    def _reduce_by_code(self, code, ds: int, n: int,
+                        factors: Sequence[jnp.ndarray]) -> jnp.ndarray:
+        if self.n_ranks == 1:
+            return super()._reduce_by_code(code, ds, n, factors)
+        ax = self.axis
+        code_np = (np.zeros((n,), dtype=np.int32) if code is None
+                   else np.asarray(code))
+        code_p, w = _pad_to(code_np, self.n_ranks)
+        if not factors:
+            def ones_reduce(c_l, w_l):
+                out = jax.ops.segment_sum(w_l.astype(self.dtype), c_l,
+                                          num_segments=ds)
+                return jax.lax.psum(out, ax)
+
+            fn = shard_map(ones_reduce, mesh=self.mesh,
+                           in_specs=(P(ax), P(ax)), out_specs=P(None),
+                           check_vma=False)
+            return fn(jnp.asarray(code_p), jnp.asarray(w))
+
+        n_pad = int(code_p.shape[0])
+        # no weight mask here: the factor rows are zero-padded, so padding
+        # contributes nothing to segment 0
+        mats = [jnp.pad(f, ((0, n_pad - n), (0, 0))) for f in factors]
+
+        def kr_reduce(c_l, *ms):
+            return jax.lax.psum(
+                _kr_segment_sum(c_l, list(ms), ds, self.dtype), ax)
+
+        in_specs = (P(ax),) + (P(ax, None),) * len(mats)
+        fn = shard_map(kr_reduce, mesh=self.mesh, in_specs=in_specs,
+                       out_specs=P(None, None), check_vma=False)
+        return fn(jnp.asarray(code_p), *mats).reshape(-1)
+
+    # -- batching -----------------------------------------------------------
+    def _positive_stacked(self, db, plans, stats):
+        # vmap over shard_map is deliberately avoided: per-plan execution is
+        # already mesh-parallel, and query-level fan-out belongs to the
+        # serve router.  positive_batch's loop fallback handles this.  On a
+        # 1-rank mesh nothing is sharded, so the inherited stacked path
+        # (bit-identical there) keeps flood dispatch fast.
+        if self.n_ranks == 1:
+            return super()._positive_stacked(db, plans, stats)
+        raise NotImplementedError("sharded sparse plans run one at a time")
+
+
+EXECUTORS["sparse_sharded"] = ShardedSparseExecutor
+
+
+def sharded_sparse_positive_ct(db: RelationalDB, point: LatticePoint,
+                               keep: Optional[Sequence[CtVar]] = None,
+                               *, mesh: Optional[Mesh] = None,
+                               axis: str = "data", dtype=jnp.float32,
+                               stats: Optional[CostStats] = None) -> CtTable:
+    """Positive ct-table via the sparse O(nnz) path, edge lists sharded
+    over ``axis`` of ``mesh``.
+
+    Convenience wrapper: compiles the :class:`~repro.core.plan
+    .ContractionPlan` for ``(point, keep)`` and evaluates it with a
+    :class:`ShardedSparseExecutor`.  Numerically identical to the
+    single-device sparse executor (and to :func:`sharded_positive_ct`,
+    the dense path).
+
+    Args:
+        db: the database to count over.
+        point: lattice point (>= 1 relationship atom).
+        keep: ct-table axes to keep; defaults to every entity/edge
+            attribute of the point (no indicator axes — positives only).
+        mesh / axis: device mesh and the axis to shard rows over;
+            ``mesh=None`` builds a 1-D mesh over all visible devices.
+        dtype: accumulation dtype of the counts.
+        stats: optional :class:`~repro.core.contract.CostStats` to record
+            join/row accounting into.
+
+    Returns:
+        The positive :class:`~repro.core.ct.CtTable` over ``keep``.
+
+    Usage::
+
+        tab = sharded_sparse_positive_ct(db, point, mesh=mesh)
+    """
+    from .plan import compile_plan_cached
+    if keep is None:
+        keep = point.all_ct_vars(db.schema, include_rind=False)
+    ex = ShardedSparseExecutor(dtype=dtype, mesh=mesh, axis=axis)
+    plan = compile_plan_cached(db.schema, point, tuple(keep))
+    return ex.positive(db, plan, stats)
+
+
 def superset_mobius_sharded(stack: jnp.ndarray, k: int, *, mesh: Mesh,
                             axis: str = "model") -> jnp.ndarray:
     """Möbius butterfly with the flattened attribute axis sharded over
     ``axis``: the transform is elementwise across attributes, so no
-    communication is needed — only the layout constraint."""
+    communication is needed — only the layout constraint.
+
+    Args:
+        stack: the butterfly input; the leading ``k`` axes are the binary
+            indicator axes, the rest is the attribute value space.
+        k: number of leading indicator axes to transform over.
+        mesh / axis: device mesh and the axis to shard attributes over.
+
+    Returns:
+        The transformed stack, same shape as ``stack``.
+
+    Usage::
+
+        neg = superset_mobius_sharded(stack, k, mesh=mesh, axis="model")
+    """
     lead = stack.shape[:k]
     d = int(np.prod(stack.shape[k:])) if stack.ndim > k else 1
     x = stack.reshape(lead + (d,))

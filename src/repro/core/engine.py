@@ -4,7 +4,11 @@ This is the machinery layer of the planner/executor/cache architecture.
 A :class:`CountingEngine` owns
 
 * the database handle,
-* one :class:`~repro.core.executors.Executor` (dense or sparse backend),
+* one :class:`~repro.core.executors.Executor` (``"dense"``, ``"sparse"``,
+  or ``"sparse_sharded"`` — the mesh-parallel sparse backend from
+  :mod:`repro.core.distributed`; in a horizontally partitioned deployment
+  each shard of a :class:`~repro.core.database.ShardedDatabase` gets its
+  own engine, see :mod:`repro.serve.router`),
 * one :class:`~repro.core.cache.CtCache` (byte-budgeted LRU, shared by all
   namespaces: positives, messages, family tables, histograms),
 * the shared :class:`~repro.core.contract.CostStats` instrumentation.

@@ -117,9 +117,27 @@ class Executor:
         axis cards) have their input arrays stacked along a new batch axis
         and run through ONE jitted+vmapped evaluation; groups smaller than
         ``min_stack`` (and backends without a traced evaluator) fall back
-        to :meth:`positive` per plan.  Results are positionally aligned
-        with ``plans`` and numerically identical to the unbatched path
-        (counts are integer-valued, so the op reordering is exact)."""
+        to :meth:`positive` per plan.
+
+        Args:
+            db: the database the plans were compiled against.
+            plans: compiled :class:`~repro.core.plan.ContractionPlan`
+                sequence (any mix of signatures).
+            stats: optional :class:`~repro.core.contract.CostStats`; join
+                and row accounting matches the unbatched path exactly.
+            min_stack: smallest group worth tracing a stacked evaluator
+                for.
+
+        Returns:
+            One :class:`~repro.core.ct.CtTable` per plan, positionally
+            aligned with ``plans`` and numerically identical to the
+            unbatched path (counts are integer-valued, so the op
+            reordering is exact).
+
+        Usage::
+
+            tabs = executor.positive_batch(db, plans)
+        """
         results: List[Optional[CtTable]] = [None] * len(plans)
         groups: "dict" = {}
         for i, plan in enumerate(plans):
@@ -480,6 +498,27 @@ def _np_codes(cols: List[np.ndarray], cards: List[int]) -> np.ndarray:
     return code
 
 
+def _kr_segment_sum(code, mats: Sequence[jnp.ndarray], ds: int,
+                    dtype) -> jnp.ndarray:
+    """Chunked Khatri-Rao expansion + segment-sum accumulation:
+    ``out[c, :] = sum_{i: code[i]=c} ⊗_m mats[m][i, :]`` as a ``(ds,
+    prod_D)`` table, chunking rows so the expansion never materialises
+    more than ``_MAX_CHUNK_CELLS`` cells.  Pure jnp — also traced inside
+    the sharded executor's ``shard_map`` body."""
+    d_prod = int(np.prod([m.shape[1] for m in mats], dtype=np.int64))
+    n = int(mats[0].shape[0])
+    chunk = max(64, min(max(n, 1), _MAX_CHUNK_CELLS // max(d_prod, 1)))
+    out = jnp.zeros((ds, d_prod), dtype=dtype)
+    for s in range(0, n, chunk):
+        kr = mats[0][s:s + chunk]
+        for m in mats[1:]:
+            blk = m[s:s + chunk]
+            kr = (kr[:, :, None] * blk[:, None, :]).reshape(kr.shape[0], -1)
+        out = out + jax.ops.segment_sum(kr, code[s:s + chunk],
+                                        num_segments=ds)
+    return out
+
+
 class SparseExecutor(Executor):
     name = "sparse"
 
@@ -525,23 +564,38 @@ class SparseExecutor(Executor):
             raise OverflowError(
                 f"sparse hop segment space {total} exceeds int32; use the "
                 f"dense executor or reduce kept axes")
-        seg = jnp.asarray((np.asarray(scatter_idx).astype(np.int64) * ds
-                           + ecode).astype(np.int32))
+        seg_np = (np.asarray(scatter_idx).astype(np.int64) * ds
+                  + ecode).astype(np.int32)
         if msg.dense is None:
-            flat = jax.ops.segment_sum(
-                jnp.ones((n_edges,), dtype=self.dtype), seg,
-                num_segments=total)
+            flat = self._edge_segment_sum(seg_np, None, total)
             out = flat.reshape(n_parent, ds)
             out_vars = svars
         else:
             rows = msg.dense[jnp.asarray(gather_np)]       # (edges, Dd)
-            agg = jax.ops.segment_sum(rows, seg, num_segments=total)
+            agg = self._edge_segment_sum(seg_np, rows, total)
             out = agg.reshape(n_parent, ds * msg.dense.shape[1])
             out_vars = svars + tuple(msg.dvars)
         if stats is not None:
             stats.joins += 1
             stats.rows_scanned += n_edges
         return out, out_vars
+
+    def _edge_segment_sum(self, seg_np: np.ndarray,
+                          rows: Optional[jnp.ndarray],
+                          total: int) -> jnp.ndarray:
+        """Device step of one sparse hop: scatter-add per-edge contributions
+        into the flattened ``(parent, code)`` segment space.  ``rows`` is
+        ``None`` for a leaf hop (each edge contributes 1) or the gathered
+        dense block ``(edges, Dd)``.  The single-device base runs one
+        ``jax.ops.segment_sum``; :class:`~repro.core.distributed
+        .ShardedSparseExecutor` overrides this with an edge-sharded
+        ``shard_map`` + ``psum``."""
+        seg = jnp.asarray(seg_np)
+        if rows is None:
+            return jax.ops.segment_sum(
+                jnp.ones((seg_np.shape[0],), dtype=self.dtype), seg,
+                num_segments=total)
+        return jax.ops.segment_sum(rows, seg, num_segments=total)
 
     def _node_message(self, db: RelationalDB, node: NodeSpec,
                       stats: Optional[CostStats]) -> _SparseMsg:
@@ -573,18 +627,7 @@ class SparseExecutor(Executor):
         if len(factors) == 1:
             return jax.ops.segment_sum(factors[0], code,
                                        num_segments=ds).reshape(-1)
-        d_prod = int(np.prod([f.shape[1] for f in factors], dtype=np.int64))
-        chunk = max(64, min(n, _MAX_CHUNK_CELLS // max(d_prod, 1)))
-        out = jnp.zeros((ds, d_prod), dtype=self.dtype)
-        for s in range(0, n, chunk):
-            kr = factors[0][s:s + chunk]
-            for f in factors[1:]:
-                blk = f[s:s + chunk]
-                kr = (kr[:, :, None] * blk[:, None, :]).reshape(
-                    kr.shape[0], -1)
-            out = out + jax.ops.segment_sum(kr, code[s:s + chunk],
-                                            num_segments=ds)
-        return out.reshape(-1)
+        return _kr_segment_sum(code, factors, ds, self.dtype).reshape(-1)
 
     def hop_message(self, db: RelationalDB, hop: HopSpec,
                     stats: Optional[CostStats] = None

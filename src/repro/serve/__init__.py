@@ -1,21 +1,30 @@
 """Counting query service: signature-bucketed micro-batching over the
-planner/executor/cache engine (:mod:`repro.core`).
+planner/executor/cache engine (:mod:`repro.core`), with cross-database
+routing when the data is horizontally partitioned.
 
 Layering::
 
     clients (structure search / external threads / benchmarks)
-        -> CountingService   (queue, buckets, backpressure)  service.py
-        -> execute_bucketed  (shape-signature micro-batches) batching.py
-        -> Executor.positive_batch (stacked/vmapped plans)   core/executors.py
-        -> CtCache           (shared byte-budgeted storage)  core/cache.py
+        -> CountingRouter    (shard fan-out, count merging)   router.py
+        -> CountingService   (queue, buckets, backpressure)   service.py
+        -> execute_bucketed  (shape-signature micro-batches)  batching.py
+        -> Executor.positive_batch (stacked/vmapped plans)    core/executors.py
+        -> CtCache           (shared byte-budgeted storage)   core/cache.py
+
+A single-database deployment talks to one :class:`CountingService`
+directly; a sharded deployment (:func:`~repro.core.database
+.shard_database`) puts one :class:`CountingRouter` in front of one service
+per shard.  See ``docs/serving.md`` for the full API walkthrough.
 """
 
 from .batching import execute_bucketed, plan_input_arrays, plan_stack_key
-from .metrics import BucketMetrics, ServiceMetrics
+from .metrics import BucketMetrics, RouterMetrics, ServiceMetrics
+from .router import CountingRouter, NotRoutableError, RouterTicket
 from .service import CountingService, CountTicket
 
 __all__ = [
     "CountingService", "CountTicket",
-    "ServiceMetrics", "BucketMetrics",
+    "CountingRouter", "RouterTicket", "NotRoutableError",
+    "ServiceMetrics", "BucketMetrics", "RouterMetrics",
     "execute_bucketed", "plan_input_arrays", "plan_stack_key",
 ]

@@ -39,6 +39,24 @@ def execute_bucketed(executor: Executor, db: RelationalDB,
     Results align positionally with ``plans`` and are numerically identical
     to per-plan :meth:`~repro.core.executors.Executor.positive` execution;
     only the dispatch granularity changes.
+
+    Args:
+        executor: the backend to evaluate with.
+        db: the database the plans were compiled against.
+        plans: compiled :class:`~repro.core.plan.ContractionPlan` list.
+        stats: optional :class:`~repro.core.contract.CostStats` for
+            join/row accounting.
+        max_batch_size: cap per micro-batch (``None``/0 = one batch per
+            signature bucket).
+        metrics: optional :class:`~repro.serve.metrics.ServiceMetrics`
+            that receives one ``observe_batch`` per micro-batch.
+
+    Returns:
+        One :class:`~repro.core.ct.CtTable` per plan, in input order.
+
+    Usage::
+
+        tabs = execute_bucketed(engine.executor, db, plans, engine.stats)
     """
     results: List[Optional[CtTable]] = [None] * len(plans)
     for sig, idxs in group_by_signature(plans, key="shape").items():

@@ -10,12 +10,19 @@ actually got (batching efficiency), and what each bucket's execution
 latency/throughput looks like.  Everything is plain counters — cheap
 enough to stay on in production — and :meth:`ServiceMetrics.snapshot`
 renders one JSON-able dict for dashboards/benchmarks.
+
+When one front-end routes over many database shards
+(:class:`~repro.serve.router.CountingRouter`), each shard's service keeps
+its own :class:`ServiceMetrics`; :meth:`ServiceMetrics.merged` rolls the
+per-shard counters (and their signature buckets) up into one aggregate
+view, and :class:`RouterMetrics` adds the routing-level counters on top.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 from ..core.cache import CtCache
 
@@ -77,6 +84,41 @@ class ServiceMetrics:
     def qps(self) -> float:
         return self.batched_queries / self.exec_s if self.exec_s > 0 else 0.0
 
+    @classmethod
+    def merged(cls, many: Sequence["ServiceMetrics"]) -> "ServiceMetrics":
+        """Roll several services' counters up into one aggregate view.
+
+        Scalar counters and timers sum; signature buckets with the same
+        signature merge (queries/batches/time sum, ``max_batch`` takes the
+        max).  The inputs are not modified.
+
+        Args:
+            many: the per-shard :class:`ServiceMetrics` instances.
+
+        Returns:
+            A fresh aggregate ``ServiceMetrics`` (not registered with any
+            service).
+
+        Usage::
+
+            agg = ServiceMetrics.merged([svc.metrics for svc in shards])
+        """
+        out = cls()
+        scalar = [f.name for f in dataclasses.fields(cls)
+                  if f.name != "buckets"]       # future counters sum too
+        for m in many:
+            for name in scalar:
+                setattr(out, name, getattr(out, name) + getattr(m, name))
+            for sig, b in m.buckets.items():
+                agg = out.buckets.get(sig)
+                if agg is None:
+                    agg = out.buckets[sig] = BucketMetrics(sig)
+                agg.queries += b.queries
+                agg.batches += b.batches
+                agg.max_batch = max(agg.max_batch, b.max_batch)
+                agg.exec_s += b.exec_s
+        return out
+
     def snapshot(self, cache: Optional[CtCache] = None) -> dict:
         """One JSON-able health dict; pass the engine's cache to include
         its hit/miss/eviction/dropped counters alongside service counters."""
@@ -94,3 +136,24 @@ class ServiceMetrics:
         if cache is not None:
             out["cache"] = cache.info()
         return out
+
+
+@dataclass
+class RouterMetrics:
+    """Routing-level counters of one :class:`~repro.serve.router
+    .CountingRouter` — what happens *above* the per-shard services."""
+    requests: int = 0             # router submit() calls
+    fanout_requests: int = 0      # fanned out to every shard, tables summed
+    single_shard_requests: int = 0  # answered by one shard (replicated data)
+    merged_tables: int = 0        # per-shard tables merged into answers
+    not_routable: int = 0         # rejected with NotRoutableError
+
+    def snapshot(self) -> dict:
+        """JSON-able dict of the routing counters (one flat level; the
+        per-shard service counters live in
+        :meth:`~repro.serve.router.CountingRouter.stats`)."""
+        return dict(requests=self.requests,
+                    fanout_requests=self.fanout_requests,
+                    single_shard_requests=self.single_shard_requests,
+                    merged_tables=self.merged_tables,
+                    not_routable=self.not_routable)

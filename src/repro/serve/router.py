@@ -1,0 +1,247 @@
+"""Cross-database routing: one counting service per shard, merged answers.
+
+This is the horizontal-scaling front-end over a
+:class:`~repro.core.database.ShardedDatabase`: the database no longer fits
+one machine (or one device mesh), so it is hash-partitioned by root entity
+and each shard runs its OWN planner/executor/cache stack behind its own
+:class:`~repro.serve.service.CountingService`.  The
+:class:`CountingRouter` is the thin layer clients talk to instead:
+
+* each positive-count query is routed per
+  :meth:`~repro.core.database.ShardedDatabase.route` — **fan-out** (every
+  shard computes its partial table; the router sums them: sufficient
+  statistics are additive over data partitions, Qian & Schulte's
+  parallelisation) or **single-shard** (the query touches only replicated
+  tables, so any one shard has the exact answer);
+* shard services keep all of their batching machinery: a flood of router
+  queries becomes per-shard signature-bucketed stacked dispatches;
+* per-shard :class:`~repro.serve.metrics.ServiceMetrics` roll up into one
+  aggregate view (:meth:`CountingRouter.stats`), with routing-level
+  counters (:class:`~repro.serve.metrics.RouterMetrics`) on top.
+
+Merging is exact, not approximate: counts are integer-valued and every
+satisfied grounding is counted on exactly one shard (see
+``ShardedDatabase.route`` for the routability condition; unroutable
+queries raise :class:`~repro.core.database.NotRoutableError` instead of
+returning a wrong sum).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from ..core.contract import CostStats
+from ..core.ct import CtTable
+from ..core.database import NotRoutableError, ShardedDatabase
+from ..core.engine import CountingEngine
+from ..core.executors import make_executor
+from ..core.variables import CtVar, LatticePoint
+from .metrics import RouterMetrics, ServiceMetrics
+from .service import CountingService, CountTicket
+
+__all__ = ["CountingRouter", "RouterTicket", "NotRoutableError"]
+
+
+class RouterTicket:
+    """Handle for a routed query: one per-shard
+    :class:`~repro.serve.service.CountTicket` per participating shard.
+    ``result()`` blocks on every shard ticket and merges the tables."""
+
+    def __init__(self, router: "CountingRouter",
+                 tickets: Sequence[CountTicket], merge: bool):
+        self._router = router
+        self._tickets = list(tickets)
+        self._merge = merge
+        self._result: Optional[CtTable] = None
+
+    @property
+    def done(self) -> bool:
+        return self._result is not None or all(t.done for t in self._tickets)
+
+    def result(self, timeout: Optional[float] = None) -> CtTable:
+        """The merged count table.
+
+        Args:
+            timeout: per-shard wait bound in seconds (None = wait forever).
+
+        Returns:
+            The single-database-equivalent :class:`~repro.core.ct.CtTable`:
+            the sum of the per-shard tables for a fan-out query, the one
+            shard's table otherwise.
+
+        Raises:
+            TimeoutError: a shard did not answer within ``timeout``.
+            BaseException: whatever a shard's batch execution raised.
+        """
+        if self._result is None:
+            tabs = [t.result(timeout) for t in self._tickets]
+            out = tabs[0]
+            for tab in tabs[1:]:
+                out = out + tab
+            if self._merge and len(tabs) > 1:
+                with self._router._lock:
+                    self._router.metrics.merged_tables += len(tabs)
+            self._result = out
+        return self._result
+
+
+class CountingRouter:
+    """Fan-out/merge front-end over one
+    :class:`~repro.serve.service.CountingService` per database shard.
+
+    Args:
+        sdb: the partitioned database (see
+            :func:`~repro.core.database.shard_database`).
+        executor: backend name (``"dense"`` / ``"sparse"`` /
+            ``"sparse_sharded"``) — one executor INSTANCE is built per
+            shard so jit/batch caches never alias across shard databases —
+            or a ready :class:`~repro.core.executors.Executor` instance,
+            which is then shared by every shard engine.
+        max_batch_size / max_wait_s / max_in_flight / max_pending_bytes:
+            per-shard service knobs, passed through to every
+            :class:`~repro.serve.service.CountingService`.
+        cache_budget_bytes: per-shard ct-cache budget (each shard engine
+            owns an independent cache).
+        dtype: accumulation dtype for every shard engine.
+        metrics: routing-level counters; defaults to a fresh
+            :class:`~repro.serve.metrics.RouterMetrics`.
+
+    Usage::
+
+        router = CountingRouter(shard_database(db, 4), executor="sparse")
+        tab = router.count(point)          # == single-DB answer, exactly
+    """
+
+    def __init__(self, sdb: ShardedDatabase, executor="sparse",
+                 max_batch_size: int = 64,
+                 max_wait_s: Optional[float] = None,
+                 max_in_flight: int = 1024,
+                 max_pending_bytes: Optional[int] = None,
+                 cache_budget_bytes: Optional[int] = None,
+                 dtype=jnp.float32,
+                 metrics: Optional[RouterMetrics] = None):
+        self.sdb = sdb
+        self.metrics = metrics if metrics is not None else RouterMetrics()
+        self._lock = threading.Lock()      # guards metrics bumps only
+        self.engines: List[CountingEngine] = []
+        self.services: List[CountingService] = []
+        for shard in sdb.shards:
+            ex = (executor if not isinstance(executor, str)
+                  else make_executor(executor, dtype=dtype))
+            eng = CountingEngine(shard, ex, CostStats(),
+                                 cache_budget_bytes=cache_budget_bytes,
+                                 dtype=dtype)
+            self.engines.append(eng)
+            self.services.append(CountingService(
+                eng, max_batch_size=max_batch_size, max_wait_s=max_wait_s,
+                max_in_flight=max_in_flight,
+                max_pending_bytes=max_pending_bytes))
+
+    @property
+    def n_shards(self) -> int:
+        return self.sdb.n_shards
+
+    # -- client API ---------------------------------------------------------
+    def submit(self, point: LatticePoint,
+               keep: Optional[Sequence[CtVar]] = None) -> RouterTicket:
+        """Route one positive-count query; returns immediately.
+
+        Fan-out queries enqueue on EVERY shard service (each applies its
+        own batching/backpressure); single-shard queries enqueue on the
+        shard that holds the full answer.
+
+        Args:
+            point: lattice point to count (>= 1 atom).
+            keep: ct-table axes; defaults to all entity/edge attributes of
+                the point.
+
+        Returns:
+            A :class:`RouterTicket`; call ``.result()`` for the merged
+            table.
+
+        Raises:
+            NotRoutableError: no additive merge exists for this query
+                under the database's partitioning (see
+                :meth:`~repro.core.database.ShardedDatabase.route`).
+        """
+        try:
+            mode, shard = self.sdb.route(point)
+        except NotRoutableError:
+            with self._lock:
+                self.metrics.requests += 1
+                self.metrics.not_routable += 1
+            raise
+        with self._lock:
+            self.metrics.requests += 1
+            if mode == "fanout":
+                self.metrics.fanout_requests += 1
+            else:
+                self.metrics.single_shard_requests += 1
+        if mode == "fanout":
+            tickets = [svc.submit(point, keep) for svc in self.services]
+            return RouterTicket(self, tickets, merge=True)
+        return RouterTicket(self, [self.services[shard].submit(point, keep)],
+                            merge=False)
+
+    def count(self, point: LatticePoint,
+              keep: Optional[Sequence[CtVar]] = None) -> CtTable:
+        """Synchronous convenience: :meth:`submit` + merged ``result()``."""
+        return self.submit(point, keep).result()
+
+    def count_many(self, queries: Sequence[Tuple[LatticePoint,
+                                                 Optional[Sequence[CtVar]]]]
+                   ) -> List[CtTable]:
+        """Submit a whole query list, flush every shard, return merged
+        tables in submission order — the per-shard services see the full
+        flood at once, so same-signature queries stack per shard.
+
+        Usage::
+
+            tabs = router.count_many([(p, None) for p in lattice])
+
+        Raises:
+            NotRoutableError: some query has no additive merge — raised
+                BEFORE anything is enqueued, so a bad query in the list
+                never strands partial work on the shard queues.
+        """
+        for point, _ in queries:       # validate up front, enqueue nothing
+            self.sdb.route(point)      # on a mixed good/bad list
+        tickets = [self.submit(point, keep) for point, keep in queries]
+        self.flush()
+        return [t.result() for t in tickets]
+
+    # -- scheduling ---------------------------------------------------------
+    def flush(self) -> None:
+        """Drain every shard service's pending queue."""
+        for svc in self.services:
+            svc.flush()
+
+    def pending(self) -> int:
+        """Total queries pending across all shard services."""
+        return sum(svc.pending() for svc in self.services)
+
+    # -- observability ------------------------------------------------------
+    def stats(self) -> dict:
+        """Health snapshot: routing counters, the per-shard service
+        snapshots, and their roll-up.
+
+        Returns:
+            ``{"router": ..., "aggregate": ..., "shards": [...]}`` where
+            ``aggregate`` is the :meth:`~repro.serve.metrics.ServiceMetrics
+            .merged` view of all shard services plus the key-wise sum of
+            the shard cache counters.
+        """
+        shard_snaps = [svc.stats() for svc in self.services]
+        agg = ServiceMetrics.merged(
+            [svc.metrics for svc in self.services]).snapshot()
+        cache_agg: dict = {}
+        for snap in shard_snaps:
+            for k, v in snap.get("cache", {}).items():
+                if isinstance(v, (int, float)) and not isinstance(v, bool):
+                    cache_agg[k] = cache_agg.get(k, 0) + v
+        agg["cache"] = cache_agg
+        return {"router": self.metrics.snapshot(), "aggregate": agg,
+                "shards": shard_snaps}

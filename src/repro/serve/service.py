@@ -72,7 +72,13 @@ class _Pending:
 
 class CountTicket:
     """Handle for a submitted query; ``result()`` blocks (flushing the
-    service if needed) until the count table is available."""
+    service if needed) until the count table is available.
+
+    Usage::
+
+        ticket = service.submit(point)
+        tab = ticket.result(timeout=30.0)
+    """
 
     def __init__(self, service: "CountingService",
                  entry: Optional[_Pending] = None,
@@ -87,6 +93,20 @@ class CountTicket:
             self._entry is not None and self._entry.event.is_set())
 
     def result(self, timeout: Optional[float] = None) -> CtTable:
+        """The count table for this query.
+
+        Args:
+            timeout: seconds to wait after flushing (None = forever).
+
+        Returns:
+            The positive :class:`~repro.core.ct.CtTable` over the query's
+            ``keep`` axes.
+
+        Raises:
+            TimeoutError: the query did not complete within ``timeout``.
+            BaseException: whatever the executing batch raised — every
+                waiter of a failed batch sees the same exception.
+        """
         if self._result is not None:
             return self._result
         assert self._entry is not None
@@ -102,7 +122,29 @@ class CountTicket:
 
 class CountingService:
     """Signature-bucketed micro-batching scheduler over a
-    :class:`~repro.core.engine.CountingEngine`."""
+    :class:`~repro.core.engine.CountingEngine`.
+
+    Args:
+        engine: the planner/executor/cache stack to execute against.
+        max_batch_size: dispatch a signature bucket at this many queries.
+        max_wait_s: dispatch everything once the oldest pending query is
+            this stale (checked on submit; ``None`` disables the trigger).
+        max_in_flight: backpressure — force a full drain beyond this many
+            pending queries.
+        max_pending_bytes: backpressure — force a full drain beyond this
+            many estimated result bytes pending (defaults to the engine's
+            cache budget).
+        metrics: counters sink; defaults to a fresh
+            :class:`~repro.serve.metrics.ServiceMetrics`.
+
+    Raises:
+        ValueError: ``max_batch_size < 1``.
+
+    Usage::
+
+        svc = CountingService(CountingEngine(db, "sparse"), max_batch_size=32)
+        tab = svc.count(point)
+    """
 
     def __init__(self, engine: CountingEngine,
                  max_batch_size: int = 64,
@@ -134,7 +176,21 @@ class CountingService:
         With no ``sink`` the result is cached under the engine's on-demand
         positive key (and cache-resident queries short-circuit here); a
         ``sink(point, keep, tab)`` callback routes the result elsewhere
-        (e.g. a strategy policy's absorb hook)."""
+        (e.g. a strategy policy's absorb hook).
+
+        Args:
+            point: lattice point to count (>= 1 relationship atom).
+            keep: ct-table axes; defaults to every entity/edge attribute
+                of the point.
+            sink: optional result callback, called during batch execution.
+
+        Returns:
+            A :class:`CountTicket` (already ``done`` on a cache hit).
+
+        Usage::
+
+            ticket = svc.submit(point, keep)
+        """
         plan = self.engine.plan(point, keep)
         keep_t = plan.keep
         to_execute: List[_Pending] = []
@@ -170,7 +226,12 @@ class CountingService:
 
     def count(self, point: LatticePoint,
               keep: Optional[Sequence[CtVar]] = None) -> CtTable:
-        """Synchronous convenience: submit + wait."""
+        """Synchronous convenience: :meth:`submit` + blocking ``result()``.
+
+        Usage::
+
+            tab = svc.count(point)
+        """
         return self.submit(point, keep).result()
 
     def count_many(self, queries: Sequence[Tuple[LatticePoint,
@@ -178,7 +239,19 @@ class CountingService:
                    ) -> List[CtTable]:
         """Submit a whole query list, dispatch it bucketed, return results
         in submission order — the natural API for a client that has its
-        round's frontier in hand."""
+        round's frontier in hand.
+
+        Args:
+            queries: ``(point, keep)`` pairs (``keep=None`` = all axes).
+
+        Returns:
+            One :class:`~repro.core.ct.CtTable` per query, positionally
+            aligned with ``queries``.
+
+        Usage::
+
+            tabs = svc.count_many([(p, None) for p in lattice])
+        """
         tickets = [self.submit(point, keep) for point, keep in queries]
         self.flush()
         return [t.result() for t in tickets]
@@ -190,7 +263,21 @@ class CountingService:
         ``queries`` it would have to contract from data
         (:meth:`~repro.core.engine._Policy.batchable_misses`), execute those
         in signature buckets, and hand each result back through the
-        policy's absorb hook.  Returns the number of queries executed."""
+        policy's absorb hook.
+
+        Args:
+            policy: a positive policy from :mod:`repro.core.engine`
+                (``batchable_misses``/``absorb`` protocol).
+            queries: the ``(point, keep)`` positive sub-queries about to
+                be issued (see :func:`repro.core.mobius.positive_queries`).
+
+        Returns:
+            The number of queries actually executed (cache misses).
+
+        Usage::
+
+            n = svc.prefetch(strategy.provider, positive_queries(point, keep))
+        """
         todo = policy.batchable_misses(list(queries))
         if not todo:
             return 0
@@ -208,6 +295,7 @@ class CountingService:
             self._execute(entries)
 
     def pending(self) -> int:
+        """Number of queries currently queued (not yet dispatched)."""
         with self._lock:
             return len(self._pending)
 
@@ -297,5 +385,11 @@ class CountingService:
         return int(np.prod(plan.out_shape, dtype=np.int64)) * itemsize
 
     def stats(self) -> dict:
-        """Service + cache health snapshot."""
+        """Service + cache health snapshot (JSON-able; see
+        :meth:`~repro.serve.metrics.ServiceMetrics.snapshot`).
+
+        Usage::
+
+            print(svc.stats()["qps"], svc.stats()["cache"]["hits"])
+        """
         return self.metrics.snapshot(self.engine.cache)
