@@ -18,6 +18,10 @@ plus the serve-layer dimensions:
   * service_flood — same-signature query flood, per-query executor
     dispatch vs the CountingService's signature-bucketed stacked path
     (the serve subsystem's headline speedup).
+  * negative_flood — same-signature COMPLETE-CT flood (positive + Möbius
+    negative phase): per-family ``complete_ct`` dispatch vs the
+    service's fully batched complete path (stacked positives + one
+    butterfly transform per shape group).
   * sharded_flood (``--shards``) — the same flood against a horizontally
     hash-partitioned database behind the CountingRouter (one service per
     shard, counts merged at the front-end) vs the single-database
@@ -299,6 +303,90 @@ def bench_service_flood(n_rels: int = 16, edges: int = 2000,
     return out
 
 
+def bench_negative_flood(n_rels: int = 16, edges: int = 2000,
+                         rounds: int = 5,
+                         executors: Sequence[str] = ("dense", "sparse"),
+                         seed: int = 0) -> List[dict]:
+    """Same-signature complete-CT flood: per-family Möbius joins vs the
+    service's fully batched complete path.
+
+    Each query asks for the COMPLETE table (attribute + relationship
+    indicator axes — the butterfly case the paper says must be
+    post-counted).  The per-family baseline answers them one
+    :func:`~repro.core.mobius.complete_ct` at a time (per-query positive
+    contraction + per-query transform); the batched side routes the same
+    flood through :meth:`~repro.serve.service.CountingService
+    .complete_many` (stacked positive dispatches + ONE butterfly
+    transform per shape group).  The ct-cache is cleared between rounds,
+    so every round re-executes both phases.  Reports queries/s per mode
+    and the batched-over-per-family speedup.
+    """
+    from repro.core.engine import OnDemandPositives
+    from repro.core.mobius import complete_ct
+    from repro.serve import CountingService
+
+    db = _flood_db(n_rels, edges, seed=seed)
+    lattice = build_lattice(db.schema, 1)
+    # attr + indicator axes: a kept edge-attr axis would force the
+    # blockwise join on both sides (complete_ct semantics, not batching)
+    keeps = [tuple(v for v in p.all_ct_vars(db.schema, include_rind=True)
+                   if v.kind != "edge") for p in lattice]
+    queries = list(zip(lattice, keeps))
+    n_queries = rounds * len(queries)
+    config = f"negflood{n_rels}x{edges}r{rounds}"
+    out: List[dict] = []
+    for ex in executors:
+        # ---- per-family dispatch (warm one round, then timed) ------------
+        eng = CountingEngine(db, ex, CostStats())
+        policy = OnDemandPositives(eng)
+
+        def per_family_round():
+            eng.cache.evict_all()
+            jax.block_until_ready([complete_ct(p, k, policy,
+                                               mobius_fn=eng.mobius_fn()
+                                               ).counts
+                                   for p, k in queries])
+
+        per_family_round()
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            per_family_round()
+        wall_pf = time.perf_counter() - t0
+        qps_pf = n_queries / wall_pf
+
+        # ---- service-batched complete path (cold cache every round) ------
+        eng_b = CountingEngine(db, ex, CostStats())
+        svc = CountingService(eng_b, max_batch_size=max(n_rels, 1))
+
+        def batched_round():
+            eng_b.cache.evict_all()
+            jax.block_until_ready([t.counts
+                                   for t in svc.complete_many(queries)])
+
+        batched_round()
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            batched_round()
+        wall_b = time.perf_counter() - t0
+        qps_b = n_queries / wall_b
+
+        speedup = qps_b / qps_pf if qps_pf > 0 else float("inf")
+        print(f"[negflood] {config} {ex:6s} per_family={qps_pf:8.1f} q/s  "
+              f"batched={qps_b:8.1f} q/s  speedup={speedup:5.2f}x",
+              flush=True)
+        for mode, wall, qps in (("per_family", wall_pf, qps_pf),
+                                ("batched", wall_b, qps_b)):
+            rec = {"bench": "negative_flood", "config": config,
+                   "dataset": "synthflood", "strategy": "SERVICE",
+                   "executor": ex, "mode": mode, "queries": n_queries,
+                   "wall_s": round(wall, 4), "qps": round(qps, 1),
+                   "completed": True}
+            if mode == "batched":
+                rec["speedup_vs_per_family"] = round(speedup, 3)
+            out.append(rec)
+    return out
+
+
 def bench_sharded_flood(n_shards: int = 2, n_rels: int = 16,
                         edges: int = 2000, rounds: int = 5,
                         seed: int = 0) -> List[dict]:
@@ -344,7 +432,9 @@ def bench_sharded_flood(n_shards: int = 2, n_rels: int = 16,
     for _ in range(rounds):
         for e in router.engines:
             e.cache.evict_all()
-        jax.block_until_ready([t.counts for t in router.count_many(queries)])
+        router.invalidate()      # keep measuring fan-out+merge, not the
+        jax.block_until_ready([  # router's own result cache
+            t.counts for t in router.count_many(queries)])
     wall_sharded = time.perf_counter() - t0
     qps_sharded = n_queries / wall_sharded
 
@@ -400,6 +490,8 @@ def main(out_dir: str = "results/bench", scale: Optional[float] = None,
          executors: Sequence[str] = ("dense", "sparse"),
          flood: bool = True,
          flood_kw: Optional[dict] = None,
+         neg_flood: bool = True,
+         neg_flood_kw: Optional[dict] = None,
          shards: Sequence[int] = (),
          shard_kw: Optional[dict] = None,
          bench_json: Optional[str] = "BENCH_counting.json") -> dict:
@@ -431,13 +523,19 @@ def main(out_dir: str = "results/bench", scale: Optional[float] = None,
         flood_recs = bench_service_flood(executors=tuple(executors),
                                          **(flood_kw or {}))
         art["service_flood"] = flood_recs
+    neg_recs: List[dict] = []
+    if neg_flood:
+        neg_recs = bench_negative_flood(executors=tuple(executors),
+                                        **(neg_flood_kw or {}))
+        art["negative_flood"] = neg_recs
     shard_recs: List[dict] = []
     for n in shards:
         shard_recs.extend(bench_sharded_flood(n_shards=int(n),
                                               **(shard_kw or {})))
     if shard_recs:
         art["sharded_flood"] = shard_recs
-    art["trajectory"] = bench_trajectory(recs) + flood_recs + shard_recs
+    art["trajectory"] = (bench_trajectory(recs) + flood_recs + neg_recs
+                         + shard_recs)
     write_outputs(art, out_dir=out_dir, bench_json=bench_json)
     return art
 
@@ -451,6 +549,7 @@ if __name__ == "__main__":
     ap.add_argument("--budget-s", type=float, default=TIME_BUDGET_S)
     ap.add_argument("--no-spotlight", action="store_true")
     ap.add_argument("--no-flood", action="store_true")
+    ap.add_argument("--no-neg-flood", action="store_true")
     ap.add_argument("--shards", type=int, nargs="*", default=[],
                     metavar="N",
                     help="also run the sharded-vs-single sparse flood for "
@@ -458,4 +557,5 @@ if __name__ == "__main__":
     args = ap.parse_args()
     main(scale=args.scale, datasets=tuple(args.datasets),
          budget_s=args.budget_s, spotlight=not args.no_spotlight,
-         flood=not args.no_flood, shards=tuple(args.shards))
+         flood=not args.no_flood, neg_flood=not args.no_neg_flood,
+         shards=tuple(args.shards))

@@ -33,6 +33,10 @@ BENCH_JSON = "BENCH_counting.json"
 REGRESSION_FACTOR = 2.0
 SMOKE_FLOOD = dict(n_rels=8, edges=800, rounds=3)
 MIN_BATCHED_SPEEDUP = 2.0     # the serve layer's reason to exist
+# the complete-CT (negative-phase) flood is gated the same way: batched
+# positive + batched Möbius transform must beat per-family dispatch
+SMOKE_NEG_FLOOD = dict(n_rels=8, edges=800, rounds=3)
+MIN_NEG_BATCHED_SPEEDUP = 2.0
 # sharded-vs-single is recorded (trajectory dimension), not gated: on one
 # CI host the router measures merge overhead, not the n-hosts scan win
 SMOKE_SHARDS = (2,)
@@ -44,17 +48,23 @@ def flood_config_tag() -> str:
     return f"flood{f['n_rels']}x{f['edges']}r{f['rounds']}"
 
 
-def prior_batched_speedup(history: list, config: str) -> dict:
-    """Best recorded batched speedup per executor for this flood config."""
+def neg_flood_config_tag() -> str:
+    f = SMOKE_NEG_FLOOD
+    return f"negflood{f['n_rels']}x{f['edges']}r{f['rounds']}"
+
+
+def prior_batched_speedup(history: list, config: str,
+                          bench: str = "service_flood",
+                          field: str = "speedup_vs_per_query") -> dict:
+    """Best recorded batched speedup per executor for one flood config."""
     best: dict = {}
     for rec in history:
-        if (rec.get("bench") == "service_flood"
+        if (rec.get("bench") == bench
                 and rec.get("mode") == "batched"
                 and rec.get("config") == config
-                and "speedup_vs_per_query" in rec):
+                and field in rec):
             ex = rec.get("executor")
-            best[ex] = max(best.get(ex, 0.0),
-                           float(rec["speedup_vs_per_query"]))
+            best[ex] = max(best.get(ex, 0.0), float(rec[field]))
     return best
 
 
@@ -67,29 +77,38 @@ def main() -> int:
         except json.JSONDecodeError:
             history = []
     baseline = prior_batched_speedup(history, flood_config_tag())
+    neg_baseline = prior_batched_speedup(
+        history, neg_flood_config_tag(), bench="negative_flood",
+        field="speedup_vs_per_family")
 
     art = bench_counting.main(
         datasets=("UW",), scale=0.25, budget_s=120.0, spotlight=False,
         flood=True, flood_kw=dict(SMOKE_FLOOD),
+        neg_flood=True, neg_flood_kw=dict(SMOKE_NEG_FLOOD),
         shards=SMOKE_SHARDS, shard_kw=dict(SMOKE_SHARD_KW),
         bench_json=BENCH_JSON)
 
     failures = []
-    for rec in art.get("service_flood", []):
-        if rec.get("mode") != "batched":
-            continue
-        ex = rec["executor"]
-        speedup = float(rec.get("speedup_vs_per_query", 0.0))
-        if speedup < MIN_BATCHED_SPEEDUP:
-            failures.append(
-                f"{ex}: batched speedup {speedup:.2f}x is below the "
-                f"{MIN_BATCHED_SPEEDUP:.0f}x bar")
-        prior = baseline.get(ex)
-        if prior and speedup * REGRESSION_FACTOR < prior:
-            failures.append(
-                f"{ex}: batched speedup {speedup:.2f}x is a "
-                f">{REGRESSION_FACTOR:.0f}x regression vs recorded "
-                f"{prior:.2f}x")
+    gates = (("service_flood", "speedup_vs_per_query",
+              MIN_BATCHED_SPEEDUP, baseline),
+             ("negative_flood", "speedup_vs_per_family",
+              MIN_NEG_BATCHED_SPEEDUP, neg_baseline))
+    for bench, field, min_speedup, prior_best in gates:
+        for rec in art.get(bench, []):
+            if rec.get("mode") != "batched":
+                continue
+            ex = rec["executor"]
+            speedup = float(rec.get(field, 0.0))
+            if speedup < min_speedup:
+                failures.append(
+                    f"{bench}/{ex}: batched speedup {speedup:.2f}x is "
+                    f"below the {min_speedup:.0f}x bar")
+            prior = prior_best.get(ex)
+            if prior and speedup * REGRESSION_FACTOR < prior:
+                failures.append(
+                    f"{bench}/{ex}: batched speedup {speedup:.2f}x is a "
+                    f">{REGRESSION_FACTOR:.0f}x regression vs recorded "
+                    f"{prior:.2f}x")
     for rec in art["runs"]:
         if not rec["completed"]:
             failures.append(
@@ -100,8 +119,11 @@ def main() -> int:
         for f in failures:
             print(f"[perf-smoke] FAIL: {f}", flush=True)
         return 1
-    gated = ", ".join(f"{ex}>={s / REGRESSION_FACTOR:.1f}x"
-                      for ex, s in baseline.items()) or "baseline recorded"
+    gated = ", ".join(
+        f"{bench}:{ex}>={s / REGRESSION_FACTOR:.1f}x"
+        for bench, prior_best in (("flood", baseline),
+                                  ("negflood", neg_baseline))
+        for ex, s in prior_best.items()) or "baseline recorded"
     print(f"[perf-smoke] OK (speedup gate: {gated})", flush=True)
     return 0
 

@@ -21,7 +21,8 @@ from .distributed import (ShardedSparseExecutor, sharded_positive_ct,
 from .cache import CtCache
 from .engine import (CountingEngine, CachedFullPositives, OnDemandPositives,
                      TupleIdPositives)
-from .mobius import complete_ct, positive_queries, superset_mobius
+from .mobius import (butterfly_batch, complete_ct, complete_ct_many,
+                     positive_queries, superset_mobius)
 from .strategies import (Strategy, Precount, OnDemand, Hybrid, TupleId,
                          make_strategy, STRATEGIES)
 from .bdeu import bdeu_score_2d, bdeu_score_batch, family_score
@@ -40,7 +41,8 @@ __all__ = [
     "sharded_positive_ct", "sharded_sparse_positive_ct",
     "CtCache", "CountingEngine",
     "CachedFullPositives", "OnDemandPositives", "TupleIdPositives",
-    "complete_ct", "positive_queries", "superset_mobius",
+    "butterfly_batch", "complete_ct", "complete_ct_many",
+    "positive_queries", "superset_mobius",
     "Strategy", "Precount", "OnDemand", "Hybrid", "TupleId",
     "make_strategy", "STRATEGIES",
     "bdeu_score_2d", "bdeu_score_batch", "family_score",

@@ -75,8 +75,35 @@ class CostStats:
             setattr(self.stats, f"time_{self.which}",
                     getattr(self.stats, f"time_{self.which}") + dt)
 
+    class _DisjointTimer(_Timer):
+        """Time a phase EXCLUDING nested work that times itself into
+        another bucket — the Fig. 3 decomposition must stay disjoint
+        (e.g. a Möbius join timed as ``negative`` whose cache misses
+        re-contract positives that time themselves as ``positive``)."""
+
+        def __init__(self, stats: "CostStats", which: str,
+                     nested: str) -> None:
+            super().__init__(stats, which)
+            self.nested = nested
+
+        def __enter__(self):
+            self.nested0 = getattr(self.stats, f"time_{self.nested}")
+            return super().__enter__()
+
+        def __exit__(self, *exc):
+            super().__exit__(*exc)
+            grown = getattr(self.stats, f"time_{self.nested}") - self.nested0
+            setattr(self.stats, f"time_{self.which}",
+                    getattr(self.stats, f"time_{self.which}") - grown)
+
     def timer(self, which: str) -> "CostStats._Timer":
         return CostStats._Timer(self, which)
+
+    def disjoint_timer(self, which: str,
+                       nested: str = "positive") -> "CostStats._Timer":
+        """A :meth:`timer` for ``which`` that subtracts whatever nested
+        work added to ``time_<nested>`` while it ran."""
+        return CostStats._DisjointTimer(self, which, nested)
 
     def as_dict(self) -> Dict[str, float]:
         return dict(joins=self.joins, rows_scanned=self.rows_scanned,

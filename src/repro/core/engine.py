@@ -96,6 +96,15 @@ class CountingEngine:
         """The executor's negative-phase step, ``(stack, k) -> stack``."""
         return self.executor.mobius
 
+    def mobius_batch_fn(self):
+        """The executor's BATCHED negative-phase step,
+        ``(stacks, k) -> [stack]`` — one jitted transform over many
+        same-shape butterfly stacks (see :meth:`~repro.core.executors
+        .Executor.mobius_batch`).  This is what lets a serving layer or a
+        search round pay one negative-phase dispatch per stack *shape*
+        rather than one per family."""
+        return self.executor.mobius_batch
+
 
 class _Policy:
     """Base: delegate histograms; subclasses implement ``positive``.

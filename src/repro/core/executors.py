@@ -97,6 +97,55 @@ class Executor:
         from .mobius import superset_mobius
         return superset_mobius(stack, k)
 
+    def mobius_batch(self, stacks: Sequence[jnp.ndarray],
+                     k: int) -> List[jnp.ndarray]:
+        """Batched negative phase: one jitted transform over MANY same-shape
+        butterfly stacks.
+
+        The stacks are stacked along a new batch axis which is then moved
+        to the trailing (attribute) side, so the single-stack step
+        (:meth:`mobius` — the Pallas kernel under ``use_pallas_mobius``,
+        the pure-jnp mirror otherwise) runs once over the widened
+        attribute space; one dispatch replaces ``len(stacks)``.  The batch
+        axis is padded to the next power of two (padding replays the first
+        stack) so the jit cache is keyed by a handful of sizes, and the
+        traced evaluator is kept in ``_batch_cache`` like the stacked
+        positive path.  Results are bit-identical to per-stack
+        :meth:`mobius` (the transform is elementwise across the batch
+        axis).
+
+        Args:
+            stacks: same-shape arrays, each ``(2,)*k + attr_shape``.
+            k: number of leading indicator axes.
+
+        Returns:
+            One transformed array per input, in input order.
+
+        Usage::
+
+            outs = executor.mobius_batch(stacks, k)
+        """
+        stacks = list(stacks)
+        if not stacks:
+            return []
+        if len(stacks) == 1:
+            return [self.mobius(stacks[0], k)]
+        shape = tuple(stacks[0].shape)
+        b = len(stacks)
+        b_pad = 1 << max(b - 1, 0).bit_length()
+        key = ("mobius_batch", shape, k, b_pad)
+        fn = self._batch_cache.get(key)
+        if fn is None:
+            from .mobius import trailing_batch_transform
+
+            def run(batch):
+                return trailing_batch_transform(batch, k, self.mobius)
+
+            fn = self._batch_cache[key] = jax.jit(run)
+        batch = jnp.stack(stacks + [stacks[0]] * (b_pad - b))
+        out = fn(batch)
+        return [out[i] for i in range(b)]
+
     # -- positive phase -----------------------------------------------------
     def positive(self, db: RelationalDB, plan: ContractionPlan,
                  stats: Optional[CostStats] = None) -> CtTable:
@@ -614,6 +663,22 @@ class SparseExecutor(Executor):
                 dvars = dvars + hvars
         return _SparseMsg(code, ds, tuple(node.own.attrs), dense, dvars)
 
+    def _ones_segment_sum(self, code: jnp.ndarray, ds: int) -> jnp.ndarray:
+        """Jitted ``segment_sum`` of ones — the histogram primitive.  An
+        eager scatter dispatch costs milliseconds on CPU and histograms
+        are recomputed on every cache miss, so the compiled kernel is
+        cached per ``(n, ds)`` in ``_batch_cache``."""
+        n = int(code.shape[0])
+        key = ("ones_seg", n, ds)
+        fn = self._batch_cache.get(key)
+        if fn is None:
+            def run(c):
+                return jax.ops.segment_sum(
+                    jnp.ones((n,), dtype=self.dtype), c, num_segments=ds)
+
+            fn = self._batch_cache[key] = jax.jit(run)
+        return fn(code)
+
     def _reduce_by_code(self, code: Optional[jnp.ndarray], ds: int, n: int,
                         factors: Sequence[jnp.ndarray]) -> jnp.ndarray:
         """``out[c, :] = sum_{i: code[i]=c} ⊗_f factors[f][i, :]`` —
@@ -622,8 +687,7 @@ class SparseExecutor(Executor):
         if code is None:
             code = jnp.zeros((n,), dtype=jnp.int32)
         if not factors:
-            return jax.ops.segment_sum(
-                jnp.ones((n,), dtype=self.dtype), code, num_segments=ds)
+            return self._ones_segment_sum(jnp.asarray(code), ds)
         if len(factors) == 1:
             return jax.ops.segment_sum(factors[0], code,
                                        num_segments=ds).reshape(-1)

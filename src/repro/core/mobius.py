@@ -26,6 +26,14 @@ Two equivalent evaluation orders are implemented:
   (:meth:`repro.core.executors.Executor.mobius`), which dispatches to the
   Pallas kernel when the executor was built with ``use_pallas_mobius``.
 
+The butterfly path also batches ACROSS queries: butterfly input stacks of
+same-``tree_signature`` families are same-shape by construction, so
+:func:`complete_ct_many` stacks them into one ``[B, 2^k, D]`` tensor and
+runs a single transform per shape group (:func:`butterfly_batch`, or the
+executor's jitted :meth:`~repro.core.executors.Executor.mobius_batch`) —
+one negative-phase dispatch for a whole hill-climbing round instead of one
+per family.
+
 The transform output is integral and non-negative (counts); property tests
 assert both.
 """
@@ -68,6 +76,135 @@ def superset_mobius(stack: jnp.ndarray, k: int) -> jnp.ndarray:
         x1 = jnp.take(x, 1, axis=i)
         x = jnp.stack([x0, x1], axis=i)
     return x
+
+
+def butterfly_batch(stacks: Sequence[jnp.ndarray], k: int,
+                    mobius_fn: Optional[Callable[[jnp.ndarray, int],
+                                                 jnp.ndarray]] = None
+                    ) -> List[jnp.ndarray]:
+    """Apply the superset Möbius transform to MANY same-shape butterfly
+    stacks in one dispatch.
+
+    The transform only acts on the leading ``k`` binary axes and is
+    elementwise over everything else, so batching is a layout trick: the
+    stacks are stacked into ``[B, 2, ..., 2, attrs]``, the batch axis is
+    moved to the *trailing* (attribute) side, and ``mobius_fn`` — any
+    single-stack transform, the pure-jnp :func:`superset_mobius` or the
+    Pallas kernel adapter — runs once over the widened attribute space.
+    Results are bit-identical to per-stack application (the transform is
+    elementwise across the batch axis; no op reordering occurs).
+
+    Args:
+        stacks: same-shape arrays, each ``(2,)*k + attr_shape``.
+        k: number of leading indicator axes.
+        mobius_fn: single-stack transform ``(stack, k) -> stack``; defaults
+            to :func:`superset_mobius`.
+
+    Returns:
+        One transformed array per input, in input order.
+
+    Usage::
+
+        outs = butterfly_batch([s1, s2, s3], k)
+    """
+    stacks = list(stacks)
+    if not stacks:
+        return []
+    fn = mobius_fn if mobius_fn is not None else superset_mobius
+    if len(stacks) == 1:
+        return [fn(stacks[0], k)]
+    out = trailing_batch_transform(jnp.stack(stacks), k, fn)
+    return [out[i] for i in range(len(stacks))]
+
+
+def trailing_batch_transform(batch: jnp.ndarray, k: int,
+                             fn: Callable[[jnp.ndarray, int], jnp.ndarray]
+                             ) -> jnp.ndarray:
+    """The batching layout trick shared by :func:`butterfly_batch` and
+    :meth:`~repro.core.executors.Executor.mobius_batch`: move the leading
+    batch axis of ``[B, 2..2, attrs]`` to the trailing (attribute) side —
+    where the transform is elementwise — apply the single-stack ``fn``
+    once, and move it back."""
+    moved = jnp.moveaxis(batch, 0, -1)              # [2..2, attrs, B]
+    return jnp.moveaxis(fn(moved, k), -1, 0)
+
+
+# --------------------------------------------------------------------------
+# butterfly plumbing shared by the per-query and batched complete-CT paths
+# --------------------------------------------------------------------------
+
+class _ButterflyPlan:
+    """Static description of one butterfly-eligible complete-CT query:
+    the kept axes split into attrs vs indicator relations, plus the final
+    transpose from transform layout to request layout."""
+
+    __slots__ = ("keep", "kept_attrs", "effective", "k", "perm")
+
+    def __init__(self, keep, kept_attrs, effective, k, perm):
+        self.keep, self.kept_attrs = keep, kept_attrs
+        self.effective, self.k, self.perm = effective, k, perm
+
+
+def _butterfly_plan(point: LatticePoint,
+                    keep: Tuple[CtVar, ...]) -> Optional[_ButterflyPlan]:
+    """The butterfly evaluation plan for ``(point, keep)``, or ``None``
+    when the query is not butterfly-eligible (kept edge-attr axes need the
+    blockwise N/A-slot handling; ``k == 0`` has no indicator axes to
+    transform)."""
+    kept_attrs = tuple(v for v in keep if v.kind == "attr")
+    kept_edges = [v for v in keep if v.kind == "edge"]
+    kept_rinds = {v.owner[0] for v in keep if v.kind == "rind"}
+    effective = tuple(sorted(kept_rinds))
+    k = len(effective)
+    if kept_edges or k == 0:
+        return None
+    # rind axis i = effective[i] ({0:F, 1:T} matches the rind_var
+    # convention), attr axis k+j = kept_attrs[j]; one transpose replaces
+    # 2^k scatter dispatches (§Perf H3 it.1).
+    src_axis = ({rind_var(r).owner: i for i, r in enumerate(effective)}
+                | {v.owner: k + j for j, v in enumerate(kept_attrs)})
+    perm = tuple(src_axis[v.owner] for v in keep)
+    return _ButterflyPlan(keep, kept_attrs, effective, k, perm)
+
+
+def _butterfly_stack(point: LatticePoint, bp: _ButterflyPlan,
+                     provider: PositiveProvider,
+                     memo: Optional[Dict] = None) -> jnp.ndarray:
+    """The transform input: Y[c in {*,T}^k] = ct_+(T-set of c), stacked to
+    ``(2,)*k + attr_shape`` (positive phase of the Möbius join).
+
+    ``memo`` (used by :func:`complete_ct_many`) caches the aligned block
+    arrays across a batch of queries: a same-signature flood shares its
+    sub-pattern tables — most notably the all-unconstrained block, a pure
+    product of histograms identical for every family over the same
+    variables — so the per-query assembly glue runs once per DISTINCT
+    block, not once per family."""
+    blocks = []
+    for bits in itertools.product((0, 1), repeat=bp.k):
+        X = {r for r, b in zip(bp.effective, bits) if b == 1}
+        blk = None
+        mkey = None
+        if memo is not None:
+            # everything the block depends on: the sub-pattern's atoms,
+            # the point's var set (histogram factors), the kept axes
+            mkey = (tuple(a for a in point.atoms if a.rel in X),
+                    tuple(point.vars), bp.kept_attrs)
+            blk = memo.get(mkey)
+        if blk is None:
+            t = _pattern_table(point, X, bp.kept_attrs, provider)
+            blk = t.transpose_to(bp.kept_attrs).counts
+            if memo is not None:
+                memo[mkey] = blk
+        blocks.append(blk)
+    attr_shape = tuple(v.card for v in bp.kept_attrs)
+    return jnp.stack(blocks).reshape((2,) * bp.k + attr_shape)
+
+
+def _butterfly_finalise(bp: _ButterflyPlan, out: jnp.ndarray) -> CtTable:
+    """Transform output -> the complete ct-table in request axis order."""
+    final = jnp.transpose(out, bp.perm) \
+        if bp.perm != tuple(range(len(bp.perm))) else out
+    return CtTable(bp.keep, final)
 
 
 # --------------------------------------------------------------------------
@@ -223,27 +360,14 @@ def complete_ct(point: LatticePoint, keep: Sequence[CtVar],
             idx = tuple(slice(st, st + sh) for st, sh in zip(starts, shape))
             final = final.at[idx].add(block)
 
-    no_edge_axes = not kept_edges
-    if use_butterfly and no_edge_axes and k > 0:
-        # stack Y[c in {*,T}^k] = ct_+(T-set of c), butterfly to {F,T}^k
-        fn = mobius_fn or superset_mobius
-        blocks = []
-        for bits in itertools.product((0, 1), repeat=k):
-            X = {r for r, b in zip(effective, bits) if b == 1}
-            t = _pattern_table(point, X, kept_attrs, provider)
-            blocks.append(t.transpose_to(kept_attrs).counts)
-        attr_shape = tuple(v.card for v in kept_attrs)
-        stack = jnp.stack(blocks).reshape((2,) * k + attr_shape)
-        out = fn(stack, k)
+    bp = _butterfly_plan(point, keep) if use_butterfly else None
+    if bp is not None:
+        # stack Y[c in {*,T}^k] = ct_+(T-set of c), butterfly to {F,T}^k;
         # with no edge axes the complete table IS the transform output, up
-        # to axis order: rind axis i = effective[i] ({0:F, 1:T} matches the
-        # rind_var convention), attr axis k+j = kept_attrs[j].  One
-        # transpose replaces 2^k scatter dispatches (§Perf H3 it.1).
-        src_axis = ({rind_var(r).owner: i for i, r in enumerate(effective)}
-                    | {v.owner: k + j for j, v in enumerate(kept_attrs)})
-        perm = tuple(src_axis[v.owner] for v in keep)
-        final = jnp.transpose(out, perm) \
-            if perm != tuple(range(len(perm))) else out
+        # to axis order.
+        fn = mobius_fn or superset_mobius
+        stack = _butterfly_stack(point, bp, provider)
+        final = _butterfly_finalise(bp, fn(stack, bp.k)).counts
     else:
         for r_bits in itertools.product((0, 1), repeat=k):
             A = {r for r, b in zip(effective, r_bits) if b == 1}
@@ -264,3 +388,78 @@ def complete_ct(point: LatticePoint, keep: Sequence[CtVar],
     if stats is not None:
         stats.ct_cells += tab.size
     return tab
+
+
+def complete_ct_many(queries: Sequence[Tuple[LatticePoint,
+                                             Sequence[CtVar]]],
+                     provider: PositiveProvider,
+                     stats: Optional[CostStats] = None,
+                     use_butterfly: bool = True,
+                     mobius_fn: Optional[Callable[[jnp.ndarray, int],
+                                                  jnp.ndarray]] = None,
+                     mobius_batch_fn: Optional[Callable[
+                         [Sequence[jnp.ndarray], int],
+                         List[jnp.ndarray]]] = None) -> List[CtTable]:
+    """Complete ct-tables for many ``(point, keep)`` queries, with the
+    Möbius negative phase batched across same-shape butterfly stacks.
+
+    Butterfly-eligible queries (no kept edge-attr axes, ``k > 0``) have
+    their input stacks assembled first — the positive phase, ideally
+    pre-warmed through :meth:`~repro.serve.service.CountingService
+    .prefetch` — then grouped by ``(stack shape, k)``; same-signature
+    families are same-shape by construction, so each group runs ONE
+    transform via ``mobius_batch_fn`` (normally the executor's jitted
+    :meth:`~repro.core.executors.Executor.mobius_batch`).  Everything else
+    (blockwise queries, ``k == 0``, no batch fn) falls back to
+    :func:`complete_ct` per query.
+
+    Args:
+        queries: ``(point, keep)`` pairs; ``keep`` may contain attr and
+            rind axes of the point (edge-attr axes force the blockwise
+            fallback, exactly as in :func:`complete_ct`).
+        provider: positive-table source (a policy from
+            :mod:`repro.core.engine`).
+        stats: optional :class:`~repro.core.contract.CostStats`;
+            ``ct_cells`` accounting matches the per-query path.
+        use_butterfly / mobius_fn: as for :func:`complete_ct`.
+        mobius_batch_fn: batched transform ``(stacks, k) -> [stack]``;
+            defaults to :func:`butterfly_batch` over ``mobius_fn``.
+
+    Returns:
+        One :class:`~repro.core.ct.CtTable` per query, positionally
+        aligned with ``queries`` and numerically identical to per-query
+        :func:`complete_ct`.
+
+    Usage::
+
+        tabs = complete_ct_many([(point, keep) for keep in keeps], policy,
+                                mobius_batch_fn=executor.mobius_batch)
+    """
+    queries = [(point, tuple(keep)) for point, keep in queries]
+    if mobius_batch_fn is None:
+        mobius_batch_fn = lambda stacks, k: butterfly_batch(
+            stacks, k, mobius_fn)
+    results: List[Optional[CtTable]] = [None] * len(queries)
+    eligible: List[Tuple[int, _ButterflyPlan, jnp.ndarray]] = []
+    memo: Dict = {}          # cross-query block reuse within this batch
+    for i, (point, keep) in enumerate(queries):
+        bp = _butterfly_plan(point, keep) if use_butterfly else None
+        if bp is None:
+            results[i] = complete_ct(point, keep, provider, stats,
+                                     use_butterfly=use_butterfly,
+                                     mobius_fn=mobius_fn)
+        else:
+            eligible.append((i, bp,
+                             _butterfly_stack(point, bp, provider, memo)))
+    groups: Dict[Tuple, List[Tuple[int, _ButterflyPlan, jnp.ndarray]]] = {}
+    for item in eligible:
+        _, bp, stack = item
+        groups.setdefault((tuple(stack.shape), bp.k), []).append(item)
+    for (_, k), members in groups.items():
+        outs = mobius_batch_fn([s for _, _, s in members], k)
+        for (i, bp, _), out in zip(members, outs):
+            tab = _butterfly_finalise(bp, out)
+            if stats is not None:
+                stats.ct_cells += tab.size
+            results[i] = tab
+    return results

@@ -45,7 +45,8 @@ from .ct import CtTable
 from .database import RelationalDB
 from .engine import (CachedFullPositives, CountingEngine, OnDemandPositives,
                      TupleIdPositives)
-from .mobius import complete_ct, positive_queries
+from .mobius import (butterfly_batch, complete_ct, complete_ct_many,
+                     positive_queries)
 from .variables import CtVar, LatticePoint
 
 
@@ -110,15 +111,12 @@ class Strategy:
                         keep: Tuple[CtVar, ...]) -> CtTable:
         """Möbius join timed as negative-phase work; positive contractions
         nested inside it (ONDEMAND joins, eviction recomputes) time
-        themselves in the policy, so subtract that growth to keep the
-        Fig. 3 decomposition disjoint."""
-        pos_before = self.stats.time_positive
-        with self.stats.timer("negative"):
-            tab = complete_ct(point, keep, self.provider, self.stats,
-                              use_butterfly=self.use_butterfly,
-                              mobius_fn=self._mobius_fn())
-        self.stats.time_negative -= self.stats.time_positive - pos_before
-        return tab
+        themselves in the policy, so the disjoint timer subtracts that
+        growth to keep the Fig. 3 decomposition disjoint."""
+        with self.stats.disjoint_timer("negative"):
+            return complete_ct(point, keep, self.provider, self.stats,
+                               use_butterfly=self.use_butterfly,
+                               mobius_fn=self._mobius_fn())
 
     def _complete_full(self, point: LatticePoint) -> CtTable:
         """Complete (positive+negative) table over *all* axes of a point —
@@ -158,30 +156,62 @@ class Strategy:
             svc = self._service = CountingService(self.engine)
         return svc
 
+    def _mobius_batch_fn(self):
+        """The batched negative-phase step, honouring a ``mobius_fn``
+        override the same way :meth:`_mobius_fn` does."""
+        if self.mobius_fn is not None:
+            return lambda stacks, k: butterfly_batch(stacks, k,
+                                                     self.mobius_fn)
+        return self.engine.executor.mobius_batch
+
     def family_ct_many(self, point: LatticePoint,
                        keeps: Sequence[Sequence[CtVar]]) -> list:
-        """Fetch a whole round of family tables at once.
+        """Fetch a whole round of family tables at once — both Möbius
+        phases batched.
 
         The positive sub-queries every missing family's Möbius join will
         issue are enumerated up front (:func:`~repro.core.mobius
         .positive_queries`), filtered to what the positive policy would
         actually contract from data, and executed through the counting
-        service in signature-bucketed stacked dispatches.  Each family
-        table is then assembled by the ordinary :meth:`family_ct` path
-        against the warmed cache — so results (and, under eviction, the
-        recompute semantics) are identical to the unbatched path."""
+        service in signature-bucketed stacked dispatches.  The *negative*
+        phase of the missing families then runs through
+        :func:`~repro.core.mobius.complete_ct_many`: butterfly input
+        stacks are grouped by shape (same-signature families are
+        same-shape by construction) and each group is transformed in ONE
+        jitted dispatch (:meth:`~repro.core.executors.Executor
+        .mobius_batch`).  Results — including the recompute semantics
+        under cache eviction — are numerically identical to per-family
+        :meth:`family_ct`, which serves the final answers from the warmed
+        ``"fam"`` cache."""
         keeps = [tuple(k) for k in keeps]
-        if (not self._precount_complete and len(keeps) > 1
-                and self.provider.supports_batch_prefetch):
-            cache = self.engine.cache
+        if self._precount_complete or len(keeps) <= 1:
+            return [self.family_ct(point, keep) for keep in keeps]
+        cache = self.engine.cache
+        missing = [keep for keep in keeps
+                   if ("fam",) + _freeze(point, keep) not in cache]
+        missing = list(dict.fromkeys(missing))
+        if missing and self.provider.supports_batch_prefetch:
             queries = []
-            for keep in keeps:
-                if ("fam",) + _freeze(point, keep) not in cache:
-                    queries.extend(positive_queries(point, keep,
-                                                    self.use_butterfly))
-            if queries:
-                self.service().prefetch(self.provider, queries)
-        return [self.family_ct(point, keep) for keep in keeps]
+            for keep in missing:
+                queries.extend(positive_queries(point, keep,
+                                                self.use_butterfly))
+            self.service().prefetch(self.provider, queries)
+        fresh = {}
+        if missing:
+            with self.stats.disjoint_timer("negative"):
+                tabs = complete_ct_many(
+                    [(point, keep) for keep in missing], self.provider,
+                    self.stats, use_butterfly=self.use_butterfly,
+                    mobius_fn=self._mobius_fn(),
+                    mobius_batch_fn=self._mobius_batch_fn())
+            for keep, tab in zip(missing, tabs):
+                cache.put(("fam",) + _freeze(point, keep), tab)
+                fresh[keep] = tab      # return directly: under a tight
+                                       # budget the puts may evict each
+                                       # other, and a cache round-trip
+                                       # would recompute per family
+        return [fresh[keep] if keep in fresh
+                else self.family_ct(point, keep) for keep in keeps]
 
 
 class OnDemand(Strategy):

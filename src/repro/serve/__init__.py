@@ -17,14 +17,16 @@ directly; a sharded deployment (:func:`~repro.core.database
 per shard.  See ``docs/serving.md`` for the full API walkthrough.
 """
 
-from .batching import execute_bucketed, plan_input_arrays, plan_stack_key
+from .batching import (execute_bucketed, execute_complete_bucketed,
+                       plan_input_arrays, plan_stack_key)
 from .metrics import BucketMetrics, RouterMetrics, ServiceMetrics
 from .router import CountingRouter, NotRoutableError, RouterTicket
-from .service import CountingService, CountTicket
+from .service import CountingService, CountTicket, ServiceShutdown
 
 __all__ = [
-    "CountingService", "CountTicket",
+    "CountingService", "CountTicket", "ServiceShutdown",
     "CountingRouter", "RouterTicket", "NotRoutableError",
     "ServiceMetrics", "BucketMetrics", "RouterMetrics",
-    "execute_bucketed", "plan_input_arrays", "plan_stack_key",
+    "execute_bucketed", "execute_complete_bucketed",
+    "plan_input_arrays", "plan_stack_key",
 ]

@@ -1,5 +1,5 @@
 """Bucketed plan execution: the bridge between the service scheduler and
-the executors' stacked entry point.
+the executors' stacked entry points.
 
 The scheduler (:mod:`repro.serve.service`) thinks in *shape signatures*
 (:meth:`~repro.core.plan.ContractionPlan.shape_signature` — its quota and
@@ -11,21 +11,35 @@ arbitrary mix of compiled plans into same-shape micro-batches of at most
 :meth:`~repro.core.executors.Executor.positive_batch` (which re-groups by
 stack key and vmaps what it can, loops what it can't), and reports each
 micro-batch's latency to the service metrics.
+
+:func:`execute_complete_bucketed` is the same bridge for **complete-CT
+queries** (positive + Möbius negative phase): the positive sub-queries of
+every complete query are enumerated up front
+(:func:`~repro.core.mobius.positive_queries`), deduplicated through the
+positive policy, and executed via :func:`execute_bucketed`; the negative
+phase then runs through :func:`~repro.core.mobius.complete_ct_many`,
+which groups same-shape butterfly stacks and transforms each group in ONE
+jitted dispatch (:meth:`~repro.core.executors.Executor.mobius_batch`).
 """
 
 from __future__ import annotations
 
 import time
-from typing import List, Optional, Sequence
+from contextlib import nullcontext
+from typing import List, Optional, Sequence, Tuple
 
 from ..core.contract import CostStats
 from ..core.ct import CtTable
 from ..core.database import RelationalDB
+from ..core.engine import CountingEngine
 from ..core.executors import Executor, plan_input_arrays, plan_stack_key
+from ..core.mobius import complete_ct_many, positive_queries
 from ..core.plan import ContractionPlan, group_by_signature
+from ..core.variables import CtVar, LatticePoint
 from .metrics import ServiceMetrics
 
-__all__ = ["execute_bucketed", "plan_input_arrays", "plan_stack_key"]
+__all__ = ["execute_bucketed", "execute_complete_bucketed",
+           "plan_input_arrays", "plan_stack_key"]
 
 
 def execute_bucketed(executor: Executor, db: RelationalDB,
@@ -72,3 +86,84 @@ def execute_bucketed(executor: Executor, db: RelationalDB,
             for i, tab in zip(chunk, tabs):
                 results[i] = tab
     return results
+
+
+def execute_complete_bucketed(engine: CountingEngine, policy,
+                              queries: Sequence[Tuple[LatticePoint,
+                                                      Sequence[CtVar]]],
+                              stats: Optional[CostStats] = None,
+                              max_batch_size: Optional[int] = None,
+                              metrics: Optional[ServiceMetrics] = None,
+                              use_butterfly: bool = True) -> List[CtTable]:
+    """Evaluate complete-CT queries (positive + negative phases) batched.
+
+    Phase 1 (positive): the positive sub-queries every query's Möbius join
+    will issue are enumerated, filtered to what ``policy`` would contract
+    from data (:meth:`~repro.core.engine._Policy.batchable_misses`),
+    executed through :func:`execute_bucketed` in signature-bucketed
+    stacked dispatches, and absorbed back into the policy's cache.  Phase
+    2 (negative): :func:`~repro.core.mobius.complete_ct_many` assembles
+    each query's butterfly stack from the warmed cache and transforms
+    same-shape groups in one jitted dispatch each.
+
+    Results align positionally with ``queries`` and are numerically
+    identical to per-query :func:`~repro.core.mobius.complete_ct`.  Time
+    accounting matches the strategy path: data access lands in
+    ``time_positive``, the transform in ``time_negative`` (disjointly).
+
+    Args:
+        engine: the planner/executor/cache stack to execute against.
+        policy: a positive policy from :mod:`repro.core.engine`
+            (``batchable_misses``/``absorb``/``positive``/``hist``).
+        queries: ``(point, keep)`` pairs; ``keep`` may contain attr and
+            rind axes (edge-attr axes fall back to blockwise per query).
+        stats: optional :class:`~repro.core.contract.CostStats`.
+        max_batch_size: positive-phase micro-batch cap (see
+            :func:`execute_bucketed`).
+        metrics: optional :class:`~repro.serve.metrics.ServiceMetrics`;
+            receives ``observe_batch`` per positive micro-batch and
+            ``observe_mobius`` per batched transform dispatch.
+        use_butterfly: evaluation order, as in
+            :func:`~repro.core.mobius.complete_ct`.
+
+    Returns:
+        One complete :class:`~repro.core.ct.CtTable` per query.
+
+    Usage::
+
+        tabs = execute_complete_bucketed(engine, policy, queries)
+    """
+    queries = [(point, tuple(keep)) for point, keep in queries]
+    timer = ((lambda which: stats.timer(which)) if stats is not None
+             else (lambda which: nullcontext()))
+    pos: List[Tuple[LatticePoint, Tuple[CtVar, ...]]] = []
+    for point, keep in queries:
+        pos.extend(positive_queries(point, keep, use_butterfly))
+    todo = policy.batchable_misses(pos)
+    if todo:
+        plans = [engine.plan(p, k) for p, k in todo]
+        with timer("positive"):
+            tabs = execute_bucketed(engine.executor, engine.db, plans,
+                                    stats, max_batch_size, metrics)
+        for (p, _), plan, tab in zip(todo, plans, tabs):
+            policy.absorb(p, plan.keep, tab)
+
+    batch_fn = engine.mobius_batch_fn()
+    if metrics is not None:
+        inner = batch_fn
+
+        def batch_fn(stacks, k):
+            t0 = time.perf_counter()
+            out = inner(stacks, k)
+            metrics.observe_mobius(len(stacks), time.perf_counter() - t0)
+            return out
+
+    # any residual data access (unwarmed misses, eviction recomputes) times
+    # itself in the policy; the disjoint timer subtracts its growth to
+    # keep the Fig. 3 decomposition disjoint
+    with (stats.disjoint_timer("negative") if stats is not None
+          else nullcontext()):
+        return complete_ct_many(queries, policy, stats,
+                                use_butterfly=use_butterfly,
+                                mobius_fn=engine.mobius_fn(),
+                                mobius_batch_fn=batch_fn)

@@ -50,7 +50,8 @@ class BucketMetrics:
 class ServiceMetrics:
     """Aggregate counters for one :class:`~repro.serve.service
     .CountingService` instance."""
-    requests: int = 0             # submit() calls
+    requests: int = 0             # submit()/submit_complete() calls
+    complete_requests: int = 0    # submit_complete() calls (also in requests)
     cache_hits: int = 0           # resolved from the CtCache without queueing
     coalesced: int = 0            # merged into an identical in-flight request
     enqueued: int = 0             # entered the request queue
@@ -60,9 +61,19 @@ class ServiceMetrics:
     backpressure_flushes: int = 0  # triggered by in-flight/byte limits
     batches: int = 0              # positive_batch dispatches
     batched_queries: int = 0      # queries that went through a batch dispatch
+    mobius_batches: int = 0       # batched negative-phase (Möbius) dispatches
+    mobius_stacked: int = 0       # butterfly stacks transformed through them
+    mobius_exec_s: float = 0.0    # total batched-transform wall time
     exec_s: float = 0.0           # total bucket execution wall time
     wait_s: float = 0.0           # total queue residency across requests
     buckets: Dict[Tuple, BucketMetrics] = field(default_factory=dict)
+
+    def observe_mobius(self, n_stacks: int, dt: float) -> None:
+        """Record one batched negative-phase dispatch covering
+        ``n_stacks`` same-shape butterfly stacks."""
+        self.mobius_batches += 1
+        self.mobius_stacked += n_stacks
+        self.mobius_exec_s += dt
 
     def observe_batch(self, signature: Tuple, n_queries: int,
                       dt: float) -> None:
@@ -123,12 +134,16 @@ class ServiceMetrics:
         """One JSON-able health dict; pass the engine's cache to include
         its hit/miss/eviction/dropped counters alongside service counters."""
         out = dict(
-            requests=self.requests, cache_hits=self.cache_hits,
+            requests=self.requests, complete_requests=self.complete_requests,
+            cache_hits=self.cache_hits,
             coalesced=self.coalesced, enqueued=self.enqueued,
             flushes=self.flushes, size_flushes=self.size_flushes,
             wait_flushes=self.wait_flushes,
             backpressure_flushes=self.backpressure_flushes,
             batches=self.batches, batched_queries=self.batched_queries,
+            mobius_batches=self.mobius_batches,
+            mobius_stacked=self.mobius_stacked,
+            mobius_exec_s=round(self.mobius_exec_s, 6),
             exec_s=round(self.exec_s, 6), wait_s=round(self.wait_s, 6),
             qps=round(self.qps, 1),
             buckets=[b.as_dict() for b in self.buckets.values()],
@@ -147,6 +162,8 @@ class RouterMetrics:
     single_shard_requests: int = 0  # answered by one shard (replicated data)
     merged_tables: int = 0        # per-shard tables merged into answers
     not_routable: int = 0         # rejected with NotRoutableError
+    cache_hits: int = 0           # served from the router's own result cache
+    coalesced: int = 0            # joined an identical in-flight fan-out
 
     def snapshot(self) -> dict:
         """JSON-able dict of the routing counters (one flat level; the
@@ -156,4 +173,6 @@ class RouterMetrics:
                     fanout_requests=self.fanout_requests,
                     single_shard_requests=self.single_shard_requests,
                     merged_tables=self.merged_tables,
-                    not_routable=self.not_routable)
+                    not_routable=self.not_routable,
+                    cache_hits=self.cache_hits,
+                    coalesced=self.coalesced)

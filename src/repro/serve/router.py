@@ -15,6 +15,10 @@ and each shard runs its OWN planner/executor/cache stack behind its own
   tables, so any one shard has the exact answer);
 * shard services keep all of their batching machinery: a flood of router
   queries becomes per-shard signature-bucketed stacked dispatches;
+* the router keeps its OWN result cache and in-flight table: a repeated
+  query is answered from the merged-result cache without touching any
+  shard, and identical *concurrent* fan-out queries coalesce onto one
+  in-flight ticket instead of re-executing and re-merging per caller;
 * per-shard :class:`~repro.serve.metrics.ServiceMetrics` roll up into one
   aggregate view (:meth:`CountingRouter.stats`), with routing-level
   counters (:class:`~repro.serve.metrics.RouterMetrics`) on top.
@@ -29,7 +33,9 @@ returning a wrong sum).
 from __future__ import annotations
 
 import threading
-from typing import List, Optional, Sequence, Tuple
+import time
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
@@ -48,14 +54,25 @@ __all__ = ["CountingRouter", "RouterTicket", "NotRoutableError"]
 class RouterTicket:
     """Handle for a routed query: one per-shard
     :class:`~repro.serve.service.CountTicket` per participating shard.
-    ``result()`` blocks on every shard ticket and merges the tables."""
+    ``result()`` blocks on every shard ticket and merges the tables.
+
+    A ticket may be shared by several callers (identical concurrent
+    queries coalesce onto one in-flight ticket), so the merge runs once
+    under a per-ticket lock; every caller gets the same table.  The
+    merged result is published to the router's result cache."""
 
     def __init__(self, router: "CountingRouter",
-                 tickets: Sequence[CountTicket], merge: bool):
+                 tickets: Sequence[CountTicket], merge: bool,
+                 key: Optional[Tuple] = None,
+                 result: Optional[CtTable] = None,
+                 epoch: int = 0):
         self._router = router
         self._tickets = list(tickets)
         self._merge = merge
-        self._result: Optional[CtTable] = None
+        self._key = key
+        self._epoch = epoch            # cache generation at submit time
+        self._result: Optional[CtTable] = result
+        self._resolve_lock = threading.Lock()
 
     @property
     def done(self) -> bool:
@@ -65,7 +82,13 @@ class RouterTicket:
         """The merged count table.
 
         Args:
-            timeout: per-shard wait bound in seconds (None = wait forever).
+            timeout: total wait bound in seconds for THIS call (None =
+                wait forever) — one deadline across the lock acquire and
+                every shard ticket, not a per-shard allowance.  Best
+                effort: a shard wait first flushes that shard's queue
+                synchronously (see :meth:`~repro.serve.service
+                .CountTicket.result`), and an in-progress flush runs to
+                completion before the deadline is re-checked.
 
         Returns:
             The single-database-equivalent :class:`~repro.core.ct.CtTable`:
@@ -73,18 +96,40 @@ class RouterTicket:
             shard's table otherwise.
 
         Raises:
-            TimeoutError: a shard did not answer within ``timeout``.
+            TimeoutError: the merged table was not ready within
+                ``timeout``.
             BaseException: whatever a shard's batch execution raised.
         """
-        if self._result is None:
-            tabs = [t.result(timeout) for t in self._tickets]
-            out = tabs[0]
-            for tab in tabs[1:]:
-                out = out + tab
-            if self._merge and len(tabs) > 1:
-                with self._router._lock:
-                    self._router.metrics.merged_tables += len(tabs)
-            self._result = out
+        if self._result is not None:
+            return self._result
+        deadline = None if timeout is None else time.monotonic() + timeout
+
+        def remaining() -> Optional[float]:
+            return None if deadline is None \
+                else max(deadline - time.monotonic(), 0.0)
+
+        # coalesced callers merge ONCE; the lock acquire honours the
+        # caller's deadline even while another caller is mid-merge
+        if not self._resolve_lock.acquire(
+                timeout=-1 if timeout is None else remaining()):
+            raise TimeoutError("merged count did not resolve in time")
+        try:
+            if self._result is None:
+                try:
+                    tabs = [t.result(remaining()) for t in self._tickets]
+                except BaseException:
+                    self._router._forget(self._key)   # later submits retry
+                    raise
+                out = tabs[0]
+                for tab in tabs[1:]:
+                    out = out + tab
+                if self._merge and len(tabs) > 1:
+                    with self._router._lock:
+                        self._router.metrics.merged_tables += len(tabs)
+                self._router._settle(self._key, out, self._epoch)
+                self._result = out
+        finally:
+            self._resolve_lock.release()
         return self._result
 
 
@@ -105,6 +150,12 @@ class CountingRouter:
             :class:`~repro.serve.service.CountingService`.
         cache_budget_bytes: per-shard ct-cache budget (each shard engine
             owns an independent cache).
+        cache_entries: size of the router's own merged-result cache (LRU
+            by entry count; ``0`` disables router-level caching).  This
+            cache exists to skip the fan-out + merge entirely on repeats.
+        cache_result_bytes: byte bound on the same cache (LRU-trimmed
+            when either limit is crossed), so a flood of LARGE merged
+            tables cannot pin unbounded front-end memory.
         dtype: accumulation dtype for every shard engine.
         metrics: routing-level counters; defaults to a fresh
             :class:`~repro.serve.metrics.RouterMetrics`.
@@ -121,11 +172,19 @@ class CountingRouter:
                  max_in_flight: int = 1024,
                  max_pending_bytes: Optional[int] = None,
                  cache_budget_bytes: Optional[int] = None,
+                 cache_entries: int = 1024,
+                 cache_result_bytes: int = 64 << 20,
                  dtype=jnp.float32,
                  metrics: Optional[RouterMetrics] = None):
         self.sdb = sdb
+        self.cache_entries = cache_entries
+        self.cache_result_bytes = cache_result_bytes
         self.metrics = metrics if metrics is not None else RouterMetrics()
-        self._lock = threading.Lock()      # guards metrics bumps only
+        self._lock = threading.Lock()      # metrics + router cache state
+        self._results: "OrderedDict[Tuple, CtTable]" = OrderedDict()
+        self._results_bytes = 0
+        self._epoch = 0                    # bumped by invalidate()
+        self._inflight: Dict[Tuple, "RouterTicket"] = {}
         self.engines: List[CountingEngine] = []
         self.services: List[CountingService] = []
         for shard in sdb.shards:
@@ -151,7 +210,11 @@ class CountingRouter:
 
         Fan-out queries enqueue on EVERY shard service (each applies its
         own batching/backpressure); single-shard queries enqueue on the
-        shard that holds the full answer.
+        shard that holds the full answer.  A query whose merged result is
+        already in the router cache short-circuits without touching any
+        shard; an identical query already in flight returns the SAME
+        ticket (the fan-out executes and merges once, not once per
+        caller).
 
         Args:
             point: lattice point to count (>= 1 atom).
@@ -167,24 +230,44 @@ class CountingRouter:
                 under the database's partitioning (see
                 :meth:`~repro.core.database.ShardedDatabase.route`).
         """
+        key = (point.atoms, self.engines[0].plan(point, keep).keep)
+        with self._lock:
+            self.metrics.requests += 1
+            epoch = self._epoch
+            hit = self._results.get(key)
+            if hit is not None:
+                self._results.move_to_end(key)
+                self.metrics.cache_hits += 1
+                return RouterTicket(self, (), merge=False, result=hit)
+            inflight = self._inflight.get(key)
+            if inflight is not None:
+                self.metrics.coalesced += 1
+                return inflight
         try:
             mode, shard = self.sdb.route(point)
         except NotRoutableError:
             with self._lock:
-                self.metrics.requests += 1
                 self.metrics.not_routable += 1
             raise
         with self._lock:
-            self.metrics.requests += 1
             if mode == "fanout":
                 self.metrics.fanout_requests += 1
             else:
                 self.metrics.single_shard_requests += 1
         if mode == "fanout":
             tickets = [svc.submit(point, keep) for svc in self.services]
-            return RouterTicket(self, tickets, merge=True)
-        return RouterTicket(self, [self.services[shard].submit(point, keep)],
-                            merge=False)
+            ticket = RouterTicket(self, tickets, merge=True, key=key,
+                                  epoch=epoch)
+        else:
+            ticket = RouterTicket(
+                self, [self.services[shard].submit(point, keep)],
+                merge=False, key=key, epoch=epoch)
+        with self._lock:
+            # benign race: a concurrent identical submit may have landed
+            # first — keep the first ticket; shard-level coalescing already
+            # dedupes the underlying work
+            ticket = self._inflight.setdefault(key, ticket)
+        return ticket
 
     def count(self, point: LatticePoint,
               keep: Optional[Sequence[CtVar]] = None) -> CtTable:
@@ -222,6 +305,47 @@ class CountingRouter:
     def pending(self) -> int:
         """Total queries pending across all shard services."""
         return sum(svc.pending() for svc in self.services)
+
+    # -- router-level result cache -------------------------------------------
+    def invalidate(self) -> None:
+        """Drop every cached merged result (e.g. after a data refresh).
+        Live in-flight tickets still settle their waiters normally, but
+        their (pre-invalidate) tables are NOT re-published into the
+        cache — the epoch bump keeps stale data out."""
+        with self._lock:
+            self._results.clear()
+            self._results_bytes = 0
+            self._epoch += 1
+
+    def _settle(self, key: Optional[Tuple], tab: CtTable,
+                epoch: int) -> None:
+        """Publish a merged result: cache it (LRU-trimmed by entry count
+        AND bytes) and clear the in-flight slot so later identical
+        submits hit the cache.  Results from a pre-``invalidate`` epoch
+        settle their waiters but are not cached."""
+        if key is None:
+            return
+        with self._lock:
+            self._inflight.pop(key, None)
+            if (epoch != self._epoch or self.cache_entries <= 0
+                    or tab.nbytes > self.cache_result_bytes):
+                return
+            old = self._results.pop(key, None)
+            if old is not None:
+                self._results_bytes -= old.nbytes
+            self._results[key] = tab
+            self._results_bytes += tab.nbytes
+            while (len(self._results) > self.cache_entries
+                   or self._results_bytes > self.cache_result_bytes):
+                _, dropped = self._results.popitem(last=False)
+                self._results_bytes -= dropped.nbytes
+
+    def _forget(self, key: Optional[Tuple]) -> None:
+        """Drop a failed query's in-flight slot so later submits retry."""
+        if key is None:
+            return
+        with self._lock:
+            self._inflight.pop(key, None)
 
     # -- observability ------------------------------------------------------
     def stats(self) -> dict:

@@ -10,6 +10,12 @@ shared byte-budgeted :class:`~repro.core.cache.CtCache`:
 * ``submit(point, keep)`` returns a :class:`CountTicket` immediately.
   Queries already resident in the cache short-circuit without queueing;
   identical in-flight queries are coalesced onto one pending entry.
+* ``submit_complete(point, keep)`` queues a **complete-CT** query
+  (positive + Möbius negative phase, ``keep`` may include relationship
+  indicator axes).  Complete queries ride the same scheduler; dispatch
+  batches their positive sub-queries in signature buckets AND their
+  negative-phase butterfly transforms in same-shape groups
+  (:func:`~repro.serve.batching.execute_complete_bucketed`).
 * Pending queries are bucketed by
   :meth:`~repro.core.plan.ContractionPlan.shape_signature`.  A bucket is
   dispatched when it reaches ``max_batch_size``, when the oldest pending
@@ -21,6 +27,12 @@ shared byte-budgeted :class:`~repro.core.cache.CtCache`:
 * **Backpressure**: the queue is bounded by ``max_in_flight`` queries and
   by the estimated bytes of pending results (default: the cache budget);
   exceeding either limit drains the queue instead of growing it.
+* **Dispatcher thread** (:meth:`CountingService.start`, or
+  ``dispatcher=True``): a dedicated scheduler thread that fires the
+  ``max_wait_s`` deadline *without* requiring a subsequent submit — the
+  asynchronous front-end a real service needs.  :meth:`CountingService
+  .shutdown` stops it and either drains the queue or fails every pending
+  waiter with :class:`ServiceShutdown` (no ticket is ever left hanging).
 
 Locking: the queue lock only guards scheduler state — triggered batches
 execute *after* it is released, so submits keep flowing while a batch
@@ -43,25 +55,35 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.ct import CtTable
-from ..core.engine import CountingEngine
+from ..core.engine import CountingEngine, OnDemandPositives
 from ..core.plan import ContractionPlan
 from ..core.variables import CtVar, LatticePoint
-from .batching import execute_bucketed
+from .batching import execute_bucketed, execute_complete_bucketed
 from .metrics import ServiceMetrics
 
 Sink = Callable[[LatticePoint, Tuple[CtVar, ...], CtTable], None]
 
 
+class ServiceShutdown(RuntimeError):
+    """The service was shut down: raised by new submits after
+    :meth:`CountingService.shutdown`, and propagated to every waiter whose
+    query was still pending when a non-draining shutdown ran."""
+
+
 class _Pending:
     """One in-flight query: a compiled plan plus everyone waiting on it."""
 
-    __slots__ = ("point", "keep", "plan", "sig", "sinks", "cache_result",
-                 "enqueued_at", "event", "result", "error")
+    __slots__ = ("point", "keep", "plan", "sig", "complete", "sinks",
+                 "cache_result", "enqueued_at", "event", "result", "error")
 
     def __init__(self, point: LatticePoint, keep: Tuple[CtVar, ...],
-                 plan: ContractionPlan):
+                 plan: ContractionPlan, complete: bool = False):
         self.point, self.keep, self.plan = point, keep, plan
-        self.sig = plan.shape_signature()
+        self.complete = complete
+        # complete-CT buckets never mix with positive buckets, even when
+        # the output shapes coincide: the execution semantics differ
+        self.sig = ("complete" if complete else "pos",
+                    plan.shape_signature())
         self.sinks: List[Sink] = []
         self.cache_result = False      # a sink-less client wants it cached
         self.enqueued_at = time.perf_counter()
@@ -128,12 +150,19 @@ class CountingService:
         engine: the planner/executor/cache stack to execute against.
         max_batch_size: dispatch a signature bucket at this many queries.
         max_wait_s: dispatch everything once the oldest pending query is
-            this stale (checked on submit; ``None`` disables the trigger).
+            this stale.  Checked on submit; with the dispatcher thread
+            running (:meth:`start` / ``dispatcher=True``) the deadline
+            fires on its own, no submit needed.  ``None`` disables the
+            trigger.
         max_in_flight: backpressure — force a full drain beyond this many
             pending queries.
         max_pending_bytes: backpressure — force a full drain beyond this
             many estimated result bytes pending (defaults to the engine's
             cache budget).
+        dispatcher: start the dispatcher thread immediately (equivalent
+            to calling :meth:`start` after construction).
+        use_butterfly: Möbius evaluation order for complete-CT queries
+            (see :func:`~repro.core.mobius.complete_ct`).
         metrics: counters sink; defaults to a fresh
             :class:`~repro.serve.metrics.ServiceMetrics`.
 
@@ -151,6 +180,8 @@ class CountingService:
                  max_wait_s: Optional[float] = None,
                  max_in_flight: int = 1024,
                  max_pending_bytes: Optional[int] = None,
+                 dispatcher: bool = False,
+                 use_butterfly: bool = True,
                  metrics: Optional[ServiceMetrics] = None):
         if max_batch_size < 1:
             raise ValueError("max_batch_size must be >= 1")
@@ -160,12 +191,19 @@ class CountingService:
         self.max_in_flight = max_in_flight
         self.max_pending_bytes = (max_pending_bytes if max_pending_bytes
                                   is not None else engine.cache.budget_bytes)
+        self.use_butterfly = use_butterfly
         self.metrics = metrics if metrics is not None else ServiceMetrics()
         self._lock = threading.RLock()         # queue state
         self._exec_lock = threading.Lock()     # execution + cache writes
+        self._wake = threading.Condition(self._lock)  # dispatcher wake-ups
         self._pending: Dict[Tuple, _Pending] = {}
         self._by_sig: Dict[Tuple, List[Tuple]] = {}   # sig -> [req_key]
         self._pending_bytes = 0
+        self._policy: Optional[OnDemandPositives] = None  # complete-CT path
+        self._dispatcher_thread: Optional[threading.Thread] = None
+        self._shut_down = False
+        if dispatcher:
+            self.start()
 
     # -- client API ---------------------------------------------------------
     def submit(self, point: LatticePoint,
@@ -192,16 +230,60 @@ class CountingService:
             ticket = svc.submit(point, keep)
         """
         plan = self.engine.plan(point, keep)
-        keep_t = plan.keep
+        return self._enqueue(point, plan.keep, plan, sink, complete=False)
+
+    def submit_complete(self, point: LatticePoint,
+                        keep: Optional[Sequence[CtVar]] = None,
+                        sink: Optional[Sink] = None) -> CountTicket:
+        """Enqueue one complete-CT query (positive + Möbius negative
+        phase); returns immediately.
+
+        ``keep`` may contain entity-attr axes AND relationship indicator
+        axes of the point (edge-attr axes are legal too; they fall back
+        to the blockwise Möbius join per query).  The result is cached
+        under the same ``"fam"`` key the strategies' :meth:`~repro.core
+        .strategies.Strategy.family_ct` uses, so a structure search
+        sharing the engine is served from the warmed cache.
+
+        Args:
+            point: lattice point to count (>= 1 relationship atom).
+            keep: ct-table axes; defaults to every entity/edge attribute
+                plus every relationship indicator of the point.
+            sink: optional result callback, called during batch execution.
+
+        Returns:
+            A :class:`CountTicket` (already ``done`` on a cache hit).
+
+        Usage::
+
+            tab = svc.submit_complete(point, keep).result()
+        """
+        if keep is None:
+            keep = point.all_ct_vars(self.engine.db.schema,
+                                     include_rind=True)
+        keep_t = tuple(keep)
+        plan = self.engine.plan(point, keep_t)   # signature + byte estimate
+        return self._enqueue(point, keep_t, plan, sink, complete=True)
+
+    def _enqueue(self, point: LatticePoint, keep_t: Tuple[CtVar, ...],
+                 plan: ContractionPlan, sink: Optional[Sink],
+                 complete: bool) -> CountTicket:
         to_execute: List[_Pending] = []
         with self._lock:
+            if self._shut_down:
+                raise ServiceShutdown("submit on a shut-down service")
             self.metrics.requests += 1
+            if complete:
+                self.metrics.complete_requests += 1
             if sink is None:
-                hit = self.engine.cache.get(self._cache_key(point, keep_t))
+                cache_key = (self._complete_key(point, keep_t) if complete
+                             else self._cache_key(point, keep_t))
+                hit = self.engine.cache.get(cache_key)
                 if hit is not None:
                     self.metrics.cache_hits += 1
                     return CountTicket(self, result=hit)
-            req_key = (point.atoms, keep_t)
+            req_key = ("complete" if complete else "pos",
+                       point.atoms, keep_t)
             entry = self._pending.get(req_key)
             if entry is not None:
                 if sink is not None:
@@ -210,7 +292,7 @@ class CountingService:
                     entry.cache_result = True
                 self.metrics.coalesced += 1
                 return CountTicket(self, entry=entry)
-            entry = _Pending(point, keep_t, plan)
+            entry = _Pending(point, keep_t, plan, complete)
             entry.cache_result = sink is None
             if sink is not None:
                 entry.sinks.append(sink)
@@ -220,6 +302,7 @@ class CountingService:
             self.metrics.enqueued += 1
             ticket = CountTicket(self, entry=entry)
             to_execute = self._drain_triggered(entry)
+            self._wake.notify_all()      # dispatcher re-arms its deadline
         if to_execute:       # run OUTSIDE the lock: submits keep flowing
             self._execute(to_execute)
         return ticket
@@ -256,6 +339,40 @@ class CountingService:
         self.flush()
         return [t.result() for t in tickets]
 
+    def count_complete(self, point: LatticePoint,
+                       keep: Optional[Sequence[CtVar]] = None) -> CtTable:
+        """Synchronous complete-CT convenience: :meth:`submit_complete` +
+        blocking ``result()``.
+
+        Usage::
+
+            tab = svc.count_complete(point)
+        """
+        return self.submit_complete(point, keep).result()
+
+    def complete_many(self, queries: Sequence[Tuple[LatticePoint,
+                                                    Optional[Sequence[CtVar]]]]
+                      ) -> List[CtTable]:
+        """Submit a whole complete-CT query list, dispatch it bucketed
+        (both phases), return results in submission order.
+
+        Args:
+            queries: ``(point, keep)`` pairs (``keep=None`` = all
+                attribute + indicator axes).
+
+        Returns:
+            One complete :class:`~repro.core.ct.CtTable` per query,
+            positionally aligned with ``queries``.
+
+        Usage::
+
+            tabs = svc.complete_many([(p, None) for p in lattice])
+        """
+        tickets = [self.submit_complete(point, keep)
+                   for point, keep in queries]
+        self.flush()
+        return [t.result() for t in tickets]
+
     def prefetch(self, policy, queries: Sequence[Tuple[LatticePoint,
                                                        Tuple[CtVar, ...]]]
                  ) -> int:
@@ -285,6 +402,115 @@ class CountingService:
             self.submit(point, keep, sink=policy.absorb)
         self.flush()
         return len(todo)
+
+    # -- dispatcher lifecycle -----------------------------------------------
+    def start(self) -> "CountingService":
+        """Start the dispatcher thread (idempotent).
+
+        The dispatcher sleeps until the oldest pending query's
+        ``max_wait_s`` deadline, then drains and executes the queue on its
+        own — no subsequent submit needed.  Submits wake it so the
+        deadline is always armed against the current oldest entry.  With
+        ``max_wait_s=None`` the thread stays parked until :meth:`shutdown`
+        (all other triggers run on the submitting thread).
+
+        Returns:
+            ``self``, for chaining.
+
+        Raises:
+            ServiceShutdown: the service was already shut down.
+
+        Usage::
+
+            svc = CountingService(engine, max_wait_s=0.01).start()
+        """
+        with self._lock:
+            if self._shut_down:
+                raise ServiceShutdown("start on a shut-down service")
+            if self._dispatcher_thread is not None:
+                return self
+            t = threading.Thread(target=self._dispatch_loop,
+                                 name="counting-dispatcher", daemon=True)
+            self._dispatcher_thread = t
+        t.start()
+        return self
+
+    @property
+    def running(self) -> bool:
+        """Whether the dispatcher thread is alive."""
+        t = self._dispatcher_thread
+        return t is not None and t.is_alive()
+
+    def shutdown(self, drain: bool = True,
+                 timeout: Optional[float] = None) -> None:
+        """Stop the service: halt the dispatcher thread and settle every
+        pending query.  Idempotent; subsequent submits raise
+        :class:`ServiceShutdown`.
+
+        Args:
+            drain: ``True`` executes the remaining queue before returning
+                (every waiter gets its result); ``False`` fails every
+                pending waiter with :class:`ServiceShutdown` immediately —
+                a clean error, never a hang.
+            timeout: seconds to wait for the dispatcher thread to exit
+                (``None`` = forever).
+
+        Usage::
+
+            svc.shutdown()                 # graceful: drain, then stop
+            svc.shutdown(drain=False)      # fast: fail pending waiters
+        """
+        with self._lock:
+            if self._shut_down:
+                return
+            self._shut_down = True
+            entries = self._drain_all()
+            self._wake.notify_all()
+            thread, self._dispatcher_thread = self._dispatcher_thread, None
+        if thread is not None:
+            thread.join(timeout)
+        if not entries:
+            return
+        if drain:
+            try:
+                self._execute(entries)
+            except BaseException:      # noqa: BLE001 — each waiter already
+                pass                   # holds the batch's error; shutdown
+                                       # itself must not throw (callers
+                                       # run it in finally blocks)
+            return
+        err = ServiceShutdown(
+            f"counting service shut down with {len(entries)} queries "
+            f"pending")
+        for e in entries:
+            e.error = err
+            e.event.set()
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            entries: List[_Pending] = []
+            with self._lock:
+                if self._shut_down:
+                    return
+                timeout = None
+                if self.max_wait_s is not None and self._pending:
+                    oldest = min(e.enqueued_at
+                                 for e in self._pending.values())
+                    due = self.max_wait_s - (time.perf_counter() - oldest)
+                    if due <= 0:
+                        self.metrics.wait_flushes += 1
+                        entries = self._drain_all()
+                    else:
+                        timeout = due
+                if not entries:
+                    self._wake.wait(timeout)
+                    continue
+            try:
+                self._execute(entries)
+            except BaseException:      # noqa: BLE001 — waiters already got
+                pass                   # the error via their tickets; the
+                                       # dispatcher survives to serve the
+                                       # next deadline
 
     # -- scheduler ----------------------------------------------------------
     def flush(self) -> None:
@@ -351,19 +577,26 @@ class CountingService:
                 now = time.perf_counter()
                 for e in entries:
                     self.metrics.observe_wait(now - e.enqueued_at)
-                with eng.stats.timer("positive"):
-                    tabs = execute_bucketed(
-                        eng.executor, eng.db, [e.plan for e in entries],
+                positives = [e for e in entries if not e.complete]
+                completes = [e for e in entries if e.complete]
+                if positives:
+                    with eng.stats.timer("positive"):
+                        tabs = execute_bucketed(
+                            eng.executor, eng.db,
+                            [e.plan for e in positives],
+                            eng.stats, max_batch_size=self.max_batch_size,
+                            metrics=self.metrics)
+                    for e, tab in zip(positives, tabs):
+                        self._deliver(e, tab)
+                if completes:
+                    tabs = execute_complete_bucketed(
+                        eng, self._complete_policy(),
+                        [(e.point, e.keep) for e in completes],
                         eng.stats, max_batch_size=self.max_batch_size,
-                        metrics=self.metrics)
-                for e, tab in zip(entries, tabs):
-                    for sink in e.sinks:
-                        sink(e.point, e.keep, tab)
-                    if e.cache_result or not e.sinks:
-                        key = self._cache_key(e.point, e.keep)
-                        eng.count_rows_once(key, tab)
-                        eng.cache.put(key, tab)
-                    e.result = tab
+                        metrics=self.metrics,
+                        use_butterfly=self.use_butterfly)
+                    for e, tab in zip(completes, tabs):
+                        self._deliver(e, tab)
         except BaseException as err:
             for e in entries:
                 if e.result is None and e.error is None:
@@ -373,12 +606,42 @@ class CountingService:
             for e in entries:
                 e.event.set()
 
+    def _deliver(self, e: _Pending, tab: CtTable) -> None:
+        """Route one finished query: sinks, cache write, result slot."""
+        eng = self.engine
+        for sink in e.sinks:
+            sink(e.point, e.keep, tab)
+        if e.cache_result or not e.sinks:
+            if e.complete:
+                # family-table namespace; the positives inside already did
+                # their own ct_rows accounting through the policy
+                eng.cache.put(self._complete_key(e.point, e.keep), tab)
+            else:
+                key = self._cache_key(e.point, e.keep)
+                eng.count_rows_once(key, tab)
+                eng.cache.put(key, tab)
+        e.result = tab
+
     # -- bookkeeping --------------------------------------------------------
     def _cache_key(self, point: LatticePoint,
                    keep: Tuple[CtVar, ...]) -> Tuple:
         # same namespace as OnDemandPositives: a search sharing this engine
         # is served straight from the warmed cache
         return ("pos", self.engine.executor.name, point.atoms, tuple(keep))
+
+    def _complete_key(self, point: LatticePoint,
+                      keep: Tuple[CtVar, ...]) -> Tuple:
+        # same namespace as Strategy.family_ct: a search sharing this
+        # engine is served straight from the warmed family cache
+        return ("fam", point.atoms, tuple(keep))
+
+    def _complete_policy(self) -> OnDemandPositives:
+        """The positive policy backing complete-CT queries (lazy; shares
+        the engine's cache and row accounting with any co-resident
+        search)."""
+        if self._policy is None:
+            self._policy = OnDemandPositives(self.engine)
+        return self._policy
 
     def _estimate_bytes(self, plan: ContractionPlan) -> int:
         itemsize = np.dtype(self.engine.dtype).itemsize

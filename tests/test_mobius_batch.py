@@ -1,0 +1,179 @@
+"""Batched Möbius negative phase == unbatched == oracle.
+
+Three layers are pinned down:
+
+* the pure transform: :func:`repro.core.mobius.butterfly_batch` and the
+  executors' jitted :meth:`~repro.core.executors.Executor.mobius_batch`
+  are bit-identical to per-stack :func:`~repro.core.mobius
+  .superset_mobius` (including the Pallas kernel path and non-power-of-two
+  batch sizes, which exercise the padding);
+* the assembly: :func:`repro.core.mobius.complete_ct_many` equals
+  per-query :func:`~repro.core.mobius.complete_ct` under BOTH evaluation
+  orders (butterfly and blockwise);
+* the strategies: ``family_ct_many`` (which now routes whole rounds
+  through the batched negative phase) == per-family ``family_ct`` ==
+  brute-force oracle for all four strategies × both executors, including
+  ``k == 0`` keeps (no indicator axes — nothing to transform) and card-1
+  attribute domains.
+"""
+
+import itertools
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (CostStats, CountingEngine, build_lattice,
+                        butterfly_batch, complete_ct, complete_ct_many,
+                        make_strategy, superset_mobius)
+from repro.core.engine import OnDemandPositives
+from repro.core.executors import make_executor
+from repro.core.oracle import oracle_ct
+from repro.core.strategies import STRATEGIES
+from tests.test_executor_edge_cases import edge_case_db
+from tests.test_engine_equivalence import random_db, random_keeps
+from tests.test_serve import mixed_db
+
+STRAT_X_EXEC = list(itertools.product(sorted(STRATEGIES),
+                                      ("dense", "sparse")))
+
+
+# ------------------------------------------------------------ transform ----
+
+def _random_stacks(rng, b, k, attr_shape):
+    return [jnp.asarray(rng.integers(0, 50, size=(2,) * k + attr_shape)
+                        .astype(np.float32)) for _ in range(b)]
+
+
+@pytest.mark.parametrize("b,k,attr_shape", [
+    (1, 1, (3,)), (2, 2, (3, 2)), (3, 1, ()), (5, 3, (4,)), (8, 2, (2, 1)),
+])
+def test_butterfly_batch_equals_per_stack(b, k, attr_shape):
+    rng = np.random.default_rng(b * 10 + k)
+    stacks = _random_stacks(rng, b, k, attr_shape)
+    want = [superset_mobius(s, k) for s in stacks]
+    got = butterfly_batch(stacks, k)
+    assert len(got) == b
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_executor_mobius_batch_identical_to_mobius(use_pallas):
+    """The jitted batched step == the per-stack step, for the pure-jnp
+    mirror and the Pallas kernel, across batch sizes that do and do not
+    hit the power-of-two padding."""
+    ex = make_executor("sparse", use_pallas_mobius=use_pallas)
+    rng = np.random.default_rng(7)
+    for b, k, attr_shape in ((1, 1, (3,)), (3, 2, (2, 3)), (4, 1, (5,)),
+                             (7, 2, ())):
+        stacks = _random_stacks(rng, b, k, attr_shape)
+        want = [ex.mobius(s, k) for s in stacks]
+        got = ex.mobius_batch(stacks, k)
+        for w, g in zip(want, got):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       atol=1e-4)
+    assert ex.mobius_batch([], 1) == []
+
+
+def test_mobius_batch_jit_cache_is_keyed_by_shape():
+    ex = make_executor("dense")
+    rng = np.random.default_rng(3)
+    ex.mobius_batch(_random_stacks(rng, 3, 1, (2,)), 1)
+    n_keys = len(ex._batch_cache)
+    ex.mobius_batch(_random_stacks(rng, 4, 1, (2,)), 1)   # same pad bucket
+    assert len(ex._batch_cache) == n_keys
+    ex.mobius_batch(_random_stacks(rng, 3, 2, (2,)), 2)   # new shape
+    assert len(ex._batch_cache) == n_keys + 1
+
+
+# ------------------------------------------------------------- assembly ----
+
+@pytest.mark.parametrize("ex", ["dense", "sparse"])
+def test_complete_ct_many_equals_complete_ct_both_orders(ex):
+    db = mixed_db()
+    lattice = build_lattice(db.schema, 2)
+    rng = np.random.default_rng(5)
+    queries = []
+    for point in (lattice[0], lattice[-1]):
+        pool = list(point.all_ct_vars(db.schema, include_rind=True))
+        queries.append((point, tuple(pool)))
+        queries.append((point, ()))                       # k == 0, scalar
+        queries.append((point, tuple(v for v in pool
+                                     if v.kind == "attr")))  # k == 0
+        for _ in range(3):
+            k = rng.integers(1, len(pool) + 1)
+            pick = rng.choice(len(pool), size=k, replace=False)
+            queries.append((point, tuple(pool[i] for i in sorted(pick))))
+
+    for use_butterfly in (True, False):
+        eng = CountingEngine(db, ex, CostStats())
+        policy = OnDemandPositives(eng)
+        got = complete_ct_many(queries, policy, use_butterfly=use_butterfly,
+                               mobius_batch_fn=eng.executor.mobius_batch)
+        ref_eng = CountingEngine(db, ex, CostStats())
+        ref_policy = OnDemandPositives(ref_eng)
+        for (point, keep), g in zip(queries, got):
+            want = complete_ct(point, keep, ref_policy,
+                               use_butterfly=use_butterfly)
+            assert g.vars == want.vars
+            np.testing.assert_allclose(
+                np.asarray(g.counts), np.asarray(want.counts), atol=1e-3,
+                err_msg=f"{ex} butterfly={use_butterfly} "
+                        f"keep={[str(v) for v in keep]}")
+
+
+# ------------------------------------------------------------ strategies ----
+
+@pytest.mark.parametrize("sname,ex", STRAT_X_EXEC)
+def test_batched_rounds_match_unbatched_and_oracle(sname, ex):
+    """family_ct_many (batched negative phase) == per-family butterfly ==
+    per-family blockwise == oracle, on a random schema."""
+    db = random_db(0)
+    lattice = build_lattice(db.schema, 2)
+    point = lattice[-1]
+    rng = np.random.default_rng(11)
+    keeps = random_keeps(rng, point, db.schema)
+    keeps.append(())
+
+    batched = make_strategy(sname, executor=ex)
+    batched.prepare(db, lattice)
+    got = batched.family_ct_many(point, keeps)
+
+    butterfly = make_strategy(sname, executor=ex)
+    butterfly.prepare(db, lattice)
+    blockwise = make_strategy(sname, executor=ex, use_butterfly=False)
+    blockwise.prepare(db, lattice)
+    for keep, g in zip(keeps, got):
+        want = oracle_ct(db, point, keep)
+        msg = f"{sname}/{ex} keep={[str(v) for v in keep]}"
+        np.testing.assert_allclose(np.asarray(g.counts), want, atol=1e-3,
+                                   err_msg=msg)
+        for ref in (butterfly, blockwise):
+            w = ref.family_ct(point, keep)
+            assert w.vars == g.vars
+            np.testing.assert_allclose(np.asarray(g.counts),
+                                       np.asarray(w.counts), atol=1e-3,
+                                       err_msg=msg)
+
+
+@pytest.mark.parametrize("sname,ex", STRAT_X_EXEC)
+def test_batched_rounds_card1_domains(sname, ex):
+    """Card-1 attribute domains and an empty relationship table through
+    the batched negative phase."""
+    db = edge_case_db()
+    lattice = build_lattice(db.schema, 2)
+    point = lattice[-1]
+    pool = list(point.all_ct_vars(db.schema, include_rind=True))
+    keeps = [tuple(pool), (),
+             tuple(v for v in pool if v.kind == "attr"),
+             tuple(v for v in pool if v.kind in ("attr", "rind"))]
+    st = make_strategy(sname, executor=ex)
+    st.prepare(db, lattice)
+    got = st.family_ct_many(point, keeps)
+    for keep, g in zip(keeps, got):
+        want = oracle_ct(db, point, keep)
+        np.testing.assert_allclose(
+            np.asarray(g.counts), want, atol=1e-3,
+            err_msg=f"{sname}/{ex} keep={[str(v) for v in keep]}")

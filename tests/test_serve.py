@@ -13,17 +13,19 @@
 
 import itertools
 import threading
+import time
 
 import numpy as np
 import pytest
 
 from repro.core import (Attribute, EntityType, Relationship, Schema,
                         CostStats, CountingEngine, build_lattice,
-                        make_strategy, synth_db)
+                        complete_ct, make_strategy, synth_db)
+from repro.core.engine import OnDemandPositives
 from repro.core.executors import EXECUTORS, plan_stack_key
 from repro.core.plan import compile_plan, group_by_signature
 from repro.core.strategies import STRATEGIES
-from repro.serve import CountingService, ServiceMetrics
+from repro.serve import CountingService, ServiceMetrics, ServiceShutdown
 
 att = Attribute
 ALL_COMBOS = list(itertools.product(sorted(STRATEGIES), sorted(EXECUTORS)))
@@ -308,6 +310,214 @@ def test_positive_queries_predicts_complete_ct_requests(use_butterfly):
                                                         use_butterfly))
         assert sorted(recorded) == predicted, \
             f"butterfly={use_butterfly} keep={[str(v) for v in keep]}"
+
+
+# ------------------------------------------------- complete-CT serving ----
+
+@pytest.mark.parametrize("ex", sorted(EXECUTORS))
+def test_service_complete_many_matches_complete_ct(ex):
+    """Complete-CT queries through the service (batched positive AND
+    negative phases) == per-query complete_ct."""
+    db = mixed_db()
+    eng = CountingEngine(db, ex, CostStats())
+    svc = CountingService(eng, max_batch_size=16)
+    lattice = build_lattice(db.schema, 2)
+    queries = [(p, None) for p in lattice]
+    tabs = svc.complete_many(queries)
+    ref = OnDemandPositives(CountingEngine(db, ex, CostStats()))
+    for (p, _), tab in zip(queries, tabs):
+        keep = tuple(p.all_ct_vars(db.schema, include_rind=True))
+        want = complete_ct(p, keep, ref)
+        assert tab.vars == want.vars
+        np.testing.assert_allclose(np.asarray(tab.counts),
+                                   np.asarray(want.counts), atol=1e-3,
+                                   err_msg=f"{ex} {p}")
+    snap = svc.stats()
+    assert snap["complete_requests"] == len(queries)
+    assert snap["requests"] == len(queries)
+
+
+def test_service_complete_flood_batches_negative_phase():
+    """A same-signature complete-CT flood runs ONE batched transform
+    dispatch, not one per family."""
+    db = flood_db()
+    eng = CountingEngine(db, "sparse", CostStats())
+    svc = CountingService(eng, max_batch_size=16)
+    points = build_lattice(db.schema, 1)       # 5 same-shape k=1 queries
+    # attr + indicator axes (a kept edge-attr axis would force the
+    # blockwise fallback — that is complete_ct semantics, not batching's)
+    keeps = [tuple(v for v in p.all_ct_vars(db.schema, include_rind=True)
+                   if v.kind != "edge") for p in points]
+    tabs = svc.complete_many(list(zip(points, keeps)))
+    snap = svc.stats()
+    assert snap["mobius_batches"] == 1
+    assert snap["mobius_stacked"] == len(points)
+    ref = OnDemandPositives(CountingEngine(db, "sparse", CostStats()))
+    for p, keep, tab in zip(points, keeps, tabs):
+        want = complete_ct(p, keep, ref)
+        np.testing.assert_allclose(np.asarray(tab.counts),
+                                   np.asarray(want.counts), atol=1e-3)
+    # resident now: a repeat short-circuits on the family cache
+    t = svc.submit_complete(points[0], keeps[0])
+    assert t.done and svc.metrics.cache_hits >= 1
+
+
+def test_service_complete_coalesces_and_buckets_separately():
+    """Identical in-flight complete queries coalesce; complete and
+    positive queries with the same point never share a bucket."""
+    db = flood_db()
+    eng = CountingEngine(db, "sparse", CostStats())
+    svc = CountingService(eng, max_batch_size=16)
+    point = build_lattice(db.schema, 1)[0]
+    keep = tuple(point.all_ct_vars(db.schema, include_rind=False))
+    c1 = svc.submit_complete(point, keep)
+    c2 = svc.submit_complete(point, keep)      # identical -> coalesced
+    p1 = svc.submit(point, keep)               # same axes, positive query
+    assert svc.metrics.coalesced == 1
+    assert svc.pending() == 2                  # complete + positive entries
+    svc.flush()
+    np.testing.assert_array_equal(np.asarray(c1.result().counts),
+                                  np.asarray(c2.result().counts))
+    # k=0 complete over attrs-only axes counts ALL groundings (the
+    # indicator is summed out), not just the positive ones
+    assert c1.result().total() >= p1.result().total()
+
+
+# --------------------------------------------------- dispatcher thread ----
+
+def test_dispatcher_fires_max_wait_without_submit():
+    """Acceptance: max_wait_s fires with NO subsequent submit — the
+    dispatcher thread drains the queue on its own."""
+    db = flood_db()
+    eng = CountingEngine(db, "sparse", CostStats())
+    svc = CountingService(eng, max_batch_size=64, max_wait_s=0.05,
+                          dispatcher=True)
+    try:
+        assert svc.running
+        ticket = svc.submit(build_lattice(db.schema, 1)[0])
+        assert not ticket.done                 # below every other trigger
+        deadline = time.perf_counter() + 5.0
+        while not ticket.done and time.perf_counter() < deadline:
+            time.sleep(0.005)                  # NO submit, NO flush
+        assert ticket.done, "dispatcher never fired the max_wait deadline"
+        assert svc.metrics.wait_flushes >= 1
+        ref = eng.executor.positive(db, eng.plan(
+            build_lattice(db.schema, 1)[0], None))
+        np.testing.assert_array_equal(np.asarray(ticket.result().counts),
+                                      np.asarray(ref.counts))
+    finally:
+        svc.shutdown()
+    assert not svc.running
+
+
+def test_dispatcher_start_idempotent_and_rearms_on_submit():
+    db = flood_db()
+    svc = CountingService(CountingEngine(db, "sparse", CostStats()),
+                          max_wait_s=0.02)
+    try:
+        svc.start()
+        first = svc._dispatcher_thread
+        assert svc.start() is svc              # idempotent
+        assert svc._dispatcher_thread is first
+        points = build_lattice(db.schema, 1)
+        tickets = [svc.submit(p) for p in points[:2]]
+        deadline = time.perf_counter() + 5.0
+        while (not all(t.done for t in tickets)
+               and time.perf_counter() < deadline):
+            time.sleep(0.005)
+        assert all(t.done for t in tickets)
+    finally:
+        svc.shutdown()
+
+
+def test_dispatcher_survives_failed_batch():
+    """A batch that raises (e.g. a client sink throws) fails its own
+    waiters but must NOT kill the dispatcher thread."""
+    db = flood_db()
+    svc = CountingService(CountingEngine(db, "sparse", CostStats()),
+                          max_wait_s=0.02, dispatcher=True)
+    try:
+        points = build_lattice(db.schema, 1)
+        boom = svc.submit(points[0], None,
+                          sink=lambda p, k, t: (_ for _ in ()).throw(
+                              RuntimeError("sink boom")))
+        deadline = time.perf_counter() + 5.0
+        while not boom.done and time.perf_counter() < deadline:
+            time.sleep(0.005)
+        assert boom.done
+        with pytest.raises(RuntimeError, match="sink boom"):
+            boom.result(timeout=1.0)
+        assert svc.running                     # the dispatcher survived …
+        ok = svc.submit(points[1])
+        deadline = time.perf_counter() + 5.0
+        while not ok.done and time.perf_counter() < deadline:
+            time.sleep(0.005)
+        assert ok.done                         # … and still fires deadlines
+    finally:
+        svc.shutdown()
+
+
+# ------------------------------------------------------------ shutdown ----
+
+def test_shutdown_drains_pending_waiters():
+    db = flood_db()
+    eng = CountingEngine(db, "sparse", CostStats())
+    svc = CountingService(eng, max_batch_size=64, max_wait_s=10.0,
+                          dispatcher=True)
+    points = build_lattice(db.schema, 1)
+    tickets = [svc.submit(p) for p in points]
+    assert svc.pending() == len(points)
+    svc.shutdown()                             # drain=True executes them
+    for p, t in zip(points, tickets):
+        assert t.done
+        ref = eng.executor.positive(db, eng.plan(p, None))
+        np.testing.assert_array_equal(np.asarray(t.result().counts),
+                                      np.asarray(ref.counts))
+
+
+def test_shutdown_fails_pending_waiters_cleanly():
+    """Regression: shutdown with queries pending must propagate a clean
+    error to every waiter — no ticket may hang."""
+    db = flood_db()
+    svc = CountingService(CountingEngine(db, "sparse", CostStats()),
+                          max_batch_size=64, max_wait_s=10.0,
+                          dispatcher=True)
+    points = build_lattice(db.schema, 1)
+    tickets = [svc.submit(p) for p in points]
+    assert svc.pending() == len(points)
+    # one waiter is already parked on the raw completion event when the
+    # shutdown lands — it must be signalled, not left hanging
+    parked = {}
+
+    def park(t):
+        parked["signalled"] = t._entry.event.wait(5.0)
+
+    th = threading.Thread(target=park, args=(tickets[0],))
+    th.start()
+    svc.shutdown(drain=False)
+    th.join(timeout=5.0)
+    assert not th.is_alive(), "waiter hung through shutdown"
+    assert parked["signalled"]
+    results = {}
+
+    def waiter(i, t):
+        try:
+            results[i] = t.result(timeout=5.0)
+        except BaseException as e:             # noqa: BLE001 — recording
+            results[i] = e
+
+    threads = [threading.Thread(target=waiter, args=(i, t))
+               for i, t in enumerate(tickets)]
+    for w in threads:
+        w.start()
+    for w in threads:
+        w.join(timeout=5.0)
+        assert not w.is_alive(), "waiter hung through shutdown"
+    for i in range(len(tickets)):
+        assert isinstance(results[i], ServiceShutdown)
+    with pytest.raises(ServiceShutdown):       # and new submits are refused
+        svc.submit(points[0])
+    svc.shutdown()                             # idempotent
 
 
 def test_service_metrics_snapshot_shape():
