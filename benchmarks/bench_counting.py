@@ -26,6 +26,11 @@ plus the serve-layer dimensions:
     hash-partitioned database behind the CountingRouter (one service per
     shard, counts merged at the front-end) vs the single-database
     service, sparse executor on both sides.
+  * mutation_flood — an insert-heavy write flood against warmed caches:
+    delta count maintenance (fine-grained invalidation + in-place
+    updates over just the delta edges) vs recount-from-scratch (the
+    pre-mutations freshness model: every write flushes the cache and the
+    next read re-contracts from raw data).
 
 Output layout: ``results/bench/counting.json`` is the ONE canonical
 artifact (runs, paper views, flood records, and the ``trajectory``
@@ -457,6 +462,110 @@ def bench_sharded_flood(n_shards: int = 2, n_rels: int = 16,
     return out
 
 
+def _fresh_edge_batches(db: RelationalDB, rels: Sequence[str], rounds: int,
+                        delta_edges: int, seed: int) -> List[dict]:
+    """Pre-generated insert batches (new (src, dst) pairs + random attrs),
+    identical across the modes being compared."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    have = {r: db.relations[r].pair_set() for r in rels}
+    out: List[dict] = []
+    for _ in range(rounds):
+        per = {}
+        for r in rels:
+            tab = db.relations[r]
+            ns = db.entities[tab.type.src].size
+            nd = db.entities[tab.type.dst].size
+            pairs = []
+            while len(pairs) < delta_edges:
+                s, d = int(rng.integers(ns)), int(rng.integers(nd))
+                if (s, d) not in have[r]:
+                    have[r].add((s, d))
+                    pairs.append((s, d))
+            per[r] = (np.array([p[0] for p in pairs], np.int32),
+                      np.array([p[1] for p in pairs], np.int32),
+                      {a.name: rng.integers(0, a.card, size=delta_edges)
+                       .astype(np.int32) for a in tab.type.attrs})
+        out.append(per)
+    return out
+
+
+def bench_mutation_flood(n_rels: int = 6, edges: int = 100000,
+                         delta_edges: int = 128, rounds: int = 3,
+                         executors: Sequence[str] = ("dense", "sparse"),
+                         seed: int = 0) -> List[dict]:
+    """Insert-heavy mutation flood: delta count maintenance vs
+    recount-from-scratch (the ``mutflood`` trajectory dimension).
+
+    The workload interleaves writes with reads against warmed caches:
+    every write inserts ``delta_edges`` fresh edges into one
+    relationship, then the full single-atom query set is re-read.  Two
+    freshness models answer it:
+
+    * **delta** — ``CountingService.insert_facts``: fenced write +
+      fine-grained cache reconcile; the affected positive table is
+      updated in place by one contraction over just the delta edges, and
+      every read is a cache hit.
+    * **recount** — the pre-mutations model: each write flushes the
+      whole ct-cache (all-or-nothing invalidation was the only safe
+      answer when entries carried no dependency metadata), so every
+      read after a write re-contracts from the full edge lists.
+
+    Both modes serve identical queries on identical data (same
+    pre-generated edge batches).  Reports wall time and writes+reads/s
+    per mode, and the delta-over-recount speedup.
+    """
+    from repro.serve import CountingService
+
+    config = f"mutflood{n_rels}x{edges}d{delta_edges}r{rounds}"
+    rels = [f"F{i}" for i in range(n_rels)]
+    out: List[dict] = []
+    for ex in executors:
+        walls = {}
+        for mode in ("delta", "recount"):
+            db = _flood_db(n_rels, edges, seed=seed)
+            batches = _fresh_edge_batches(db, rels, rounds, delta_edges,
+                                          seed=seed + 1)
+            eng = CountingEngine(db, ex, CostStats())
+            svc = CountingService(eng, max_batch_size=max(n_rels, 1))
+            lattice = build_lattice(db.schema, 1)
+            queries = [(p, None) for p in lattice]
+            jax.block_until_ready([t.counts                    # warm
+                                   for t in svc.count_many(queries)])
+            t0 = time.perf_counter()
+            for rnd in batches:
+                for r in rels:
+                    src, dst, attrs = rnd[r]
+                    if mode == "delta":
+                        svc.insert_facts(r, src, dst, attrs)
+                    else:
+                        with svc.fence():
+                            eng.db.insert_facts(r, src, dst, attrs)
+                            eng.cache.invalidate()   # all-or-nothing flush
+                    jax.block_until_ready(
+                        [t.counts for t in svc.count_many(queries)])
+            walls[mode] = time.perf_counter() - t0
+        n_ops = rounds * n_rels * (1 + len(rels))    # writes + reads
+        speedup = (walls["recount"] / walls["delta"]
+                   if walls["delta"] > 0 else float("inf"))
+        print(f"[mutflood] {config} {ex:6s} "
+              f"delta={walls['delta']:7.3f}s  "
+              f"recount={walls['recount']:7.3f}s  "
+              f"speedup={speedup:5.2f}x", flush=True)
+        for mode in ("delta", "recount"):
+            rec = {"bench": "mutation_flood", "config": config,
+                   "dataset": "synthflood", "strategy": "SERVICE",
+                   "executor": ex, "mode": mode,
+                   "queries": n_ops, "wall_s": round(walls[mode], 4),
+                   "qps": round(n_ops / walls[mode], 1)
+                   if walls[mode] > 0 else 0.0,
+                   "completed": True}
+            if mode == "delta":
+                rec["speedup_vs_recount"] = round(speedup, 3)
+            out.append(rec)
+    return out
+
+
 def write_outputs(art: dict, out_dir: str = "results/bench",
                   bench_json: Optional[str] = "BENCH_counting.json") -> None:
     """One canonical artifact; the root trajectory file is derived.
@@ -494,6 +603,8 @@ def main(out_dir: str = "results/bench", scale: Optional[float] = None,
          neg_flood_kw: Optional[dict] = None,
          shards: Sequence[int] = (),
          shard_kw: Optional[dict] = None,
+         mut_flood: bool = True,
+         mut_flood_kw: Optional[dict] = None,
          bench_json: Optional[str] = "BENCH_counting.json") -> dict:
     recs = run_all(datasets=datasets, scale=scale, budget_s=budget_s,
                    executors=executors)
@@ -534,8 +645,13 @@ def main(out_dir: str = "results/bench", scale: Optional[float] = None,
                                               **(shard_kw or {})))
     if shard_recs:
         art["sharded_flood"] = shard_recs
+    mut_recs: List[dict] = []
+    if mut_flood:
+        mut_recs = bench_mutation_flood(executors=tuple(executors),
+                                        **(mut_flood_kw or {}))
+        art["mutation_flood"] = mut_recs
     art["trajectory"] = (bench_trajectory(recs) + flood_recs + neg_recs
-                         + shard_recs)
+                         + shard_recs + mut_recs)
     write_outputs(art, out_dir=out_dir, bench_json=bench_json)
     return art
 
@@ -550,6 +666,7 @@ if __name__ == "__main__":
     ap.add_argument("--no-spotlight", action="store_true")
     ap.add_argument("--no-flood", action="store_true")
     ap.add_argument("--no-neg-flood", action="store_true")
+    ap.add_argument("--no-mut-flood", action="store_true")
     ap.add_argument("--shards", type=int, nargs="*", default=[],
                     metavar="N",
                     help="also run the sharded-vs-single sparse flood for "
@@ -558,4 +675,4 @@ if __name__ == "__main__":
     main(scale=args.scale, datasets=tuple(args.datasets),
          budget_s=args.budget_s, spotlight=not args.no_spotlight,
          flood=not args.no_flood, neg_flood=not args.no_neg_flood,
-         shards=tuple(args.shards))
+         shards=tuple(args.shards), mut_flood=not args.no_mut_flood)

@@ -41,6 +41,10 @@ MIN_NEG_BATCHED_SPEEDUP = 2.0
 # CI host the router measures merge overhead, not the n-hosts scan win
 SMOKE_SHARDS = (2,)
 SMOKE_SHARD_KW = dict(n_rels=8, edges=800, rounds=3)
+# the mutation flood gates the freshness model: fenced delta maintenance
+# must beat flush-and-recount on an insert-heavy write/read mix
+SMOKE_MUT_FLOOD = dict(n_rels=6, edges=100000, delta_edges=128, rounds=2)
+MIN_MUT_SPEEDUP = 2.0
 
 
 def flood_config_tag() -> str:
@@ -53,14 +57,21 @@ def neg_flood_config_tag() -> str:
     return f"negflood{f['n_rels']}x{f['edges']}r{f['rounds']}"
 
 
+def mut_flood_config_tag() -> str:
+    f = SMOKE_MUT_FLOOD
+    return (f"mutflood{f['n_rels']}x{f['edges']}"
+            f"d{f['delta_edges']}r{f['rounds']}")
+
+
 def prior_batched_speedup(history: list, config: str,
                           bench: str = "service_flood",
-                          field: str = "speedup_vs_per_query") -> dict:
-    """Best recorded batched speedup per executor for one flood config."""
+                          field: str = "speedup_vs_per_query",
+                          mode: str = "batched") -> dict:
+    """Best recorded speedup per executor for one flood config+mode."""
     best: dict = {}
     for rec in history:
         if (rec.get("bench") == bench
-                and rec.get("mode") == "batched"
+                and rec.get("mode") == mode
                 and rec.get("config") == config
                 and field in rec):
             ex = rec.get("executor")
@@ -80,22 +91,28 @@ def main() -> int:
     neg_baseline = prior_batched_speedup(
         history, neg_flood_config_tag(), bench="negative_flood",
         field="speedup_vs_per_family")
+    mut_baseline = prior_batched_speedup(
+        history, mut_flood_config_tag(), bench="mutation_flood",
+        field="speedup_vs_recount", mode="delta")
 
     art = bench_counting.main(
         datasets=("UW",), scale=0.25, budget_s=120.0, spotlight=False,
         flood=True, flood_kw=dict(SMOKE_FLOOD),
         neg_flood=True, neg_flood_kw=dict(SMOKE_NEG_FLOOD),
         shards=SMOKE_SHARDS, shard_kw=dict(SMOKE_SHARD_KW),
+        mut_flood=True, mut_flood_kw=dict(SMOKE_MUT_FLOOD),
         bench_json=BENCH_JSON)
 
     failures = []
     gates = (("service_flood", "speedup_vs_per_query",
               MIN_BATCHED_SPEEDUP, baseline),
              ("negative_flood", "speedup_vs_per_family",
-              MIN_NEG_BATCHED_SPEEDUP, neg_baseline))
+              MIN_NEG_BATCHED_SPEEDUP, neg_baseline),
+             ("mutation_flood", "speedup_vs_recount",
+              MIN_MUT_SPEEDUP, mut_baseline))
     for bench, field, min_speedup, prior_best in gates:
         for rec in art.get(bench, []):
-            if rec.get("mode") != "batched":
+            if rec.get("mode") not in ("batched", "delta"):
                 continue
             ex = rec["executor"]
             speedup = float(rec.get(field, 0.0))
@@ -122,7 +139,8 @@ def main() -> int:
     gated = ", ".join(
         f"{bench}:{ex}>={s / REGRESSION_FACTOR:.1f}x"
         for bench, prior_best in (("flood", baseline),
-                                  ("negflood", neg_baseline))
+                                  ("negflood", neg_baseline),
+                                  ("mutflood", mut_baseline))
         for ex, s in prior_best.items()) or "baseline recorded"
     print(f"[perf-smoke] OK (speedup gate: {gated})", flush=True)
     return 0

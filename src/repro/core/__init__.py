@@ -6,8 +6,8 @@ modules, layered as planner (:mod:`.plan`) / executors (:mod:`.executors`)
 
 from .schema import Attribute, EntityType, Relationship, Schema
 from .database import (RelationalDB, ShardedDatabase, NotRoutableError,
-                       shard_database, synth_db, paper_benchmark_db,
-                       PAPER_DATASETS)
+                       FactDelta, shard_database, synth_db,
+                       paper_benchmark_db, PAPER_DATASETS)
 from .variables import (Var, Atom, CtVar, LatticePoint, attr_var, edge_var,
                         rind_var, build_lattice, point_from_rels)
 from .ct import CtTable
@@ -19,8 +19,8 @@ from .distributed import (ShardedSparseExecutor, sharded_positive_ct,
                           sharded_sparse_positive_ct)  # registers the
                           # "sparse_sharded" backend in EXECUTORS on import
 from .cache import CtCache
-from .engine import (CountingEngine, CachedFullPositives, OnDemandPositives,
-                     TupleIdPositives)
+from .engine import (CountingEngine, CachedFullPositives, DeltaReport,
+                     OnDemandPositives, TupleIdPositives, key_deps)
 from .mobius import (butterfly_batch, complete_ct, complete_ct_many,
                      positive_queries, superset_mobius)
 from .strategies import (Strategy, Precount, OnDemand, Hybrid, TupleId,
@@ -30,8 +30,8 @@ from .search import StructureSearch, discover_model, BNModel
 
 __all__ = [
     "Attribute", "EntityType", "Relationship", "Schema",
-    "RelationalDB", "ShardedDatabase", "NotRoutableError", "shard_database",
-    "synth_db", "paper_benchmark_db", "PAPER_DATASETS",
+    "RelationalDB", "ShardedDatabase", "NotRoutableError", "FactDelta",
+    "shard_database", "synth_db", "paper_benchmark_db", "PAPER_DATASETS",
     "Var", "Atom", "CtVar", "LatticePoint", "attr_var", "edge_var", "rind_var",
     "build_lattice", "point_from_rels", "CtTable",
     "CostStats", "positive_ct", "entity_hist",
@@ -39,7 +39,7 @@ __all__ = [
     "Executor", "DenseExecutor", "SparseExecutor", "ShardedSparseExecutor",
     "EXECUTORS", "make_executor", "plan_input_arrays", "plan_stack_key",
     "sharded_positive_ct", "sharded_sparse_positive_ct",
-    "CtCache", "CountingEngine",
+    "CtCache", "CountingEngine", "DeltaReport", "key_deps",
     "CachedFullPositives", "OnDemandPositives", "TupleIdPositives",
     "butterfly_batch", "complete_ct", "complete_ct_many",
     "positive_queries", "superset_mobius",

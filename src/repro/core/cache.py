@@ -18,6 +18,19 @@ all of them:
   miss (positives re-contract, messages re-propagate, family tables
   re-join).
 
+**Freshness.**  Since the store became mutable
+(:meth:`~repro.core.database.RelationalDB.insert_facts`), every entry also
+records the ``(version, relation-dependency set)`` it was computed under —
+``deps`` is the set of relationship names whose edge tables the cached
+value was derived from, ``version`` the ``db.version`` at insert time.
+Both default through pluggable hooks (``deps_fn``/``version_fn``, wired by
+:class:`~repro.core.engine.CountingEngine` so existing call sites need no
+changes).  :meth:`CtCache.invalidate` is then **fine-grained**: given a
+delta's relation set it drops only the entries whose dependency set
+intersects it (entries with unknown deps are dropped conservatively);
+entries over untouched relations — and relation-independent entries like
+entity histograms, ``deps == frozenset()`` — survive the write.
+
 Keys are arbitrary hashable tuples; by convention the first element names
 the namespace (``"pos"``, ``"full"``, ``"complete"``, ``"msg"``, ``"fam"``,
 ``"hist"``) so one cache instance can back every layer of a strategy.
@@ -27,7 +40,8 @@ from __future__ import annotations
 
 import threading
 from collections import OrderedDict
-from typing import Any, Hashable, Optional
+from typing import (Any, Callable, FrozenSet, Hashable, Iterable, List,
+                    Optional, Tuple)
 
 from .contract import CostStats
 
@@ -41,14 +55,40 @@ def _nbytes_of(value: Any) -> int:
     return 0
 
 
+class _Entry:
+    __slots__ = ("value", "nbytes", "deps", "version")
+
+    def __init__(self, value: Any, nbytes: int,
+                 deps: Optional[FrozenSet[str]], version: Optional[int]):
+        self.value, self.nbytes = value, nbytes
+        self.deps, self.version = deps, version
+
+
 class CtCache:
-    """Byte-budgeted LRU cache for ct-tables and message matrices."""
+    """Byte-budgeted LRU cache for ct-tables and message matrices, with
+    per-entry ``(version, relation-dependency set)`` freshness metadata.
+
+    Args:
+        budget_bytes: LRU byte budget (``None`` = unbounded).
+        stats: optional :class:`~repro.core.contract.CostStats` whose
+            ``cache_bytes``/``peak_bytes`` mirror the live footprint.
+        deps_fn: ``key -> frozenset of relationship names | None`` used to
+            stamp entries whose ``put`` did not pass ``deps`` explicitly
+            (``None`` = unknown, dropped conservatively on invalidation).
+        version_fn: ``() -> int`` store version used to stamp entries
+            whose ``put`` did not pass ``version``.
+    """
 
     def __init__(self, budget_bytes: Optional[int] = None,
-                 stats: Optional[CostStats] = None):
+                 stats: Optional[CostStats] = None,
+                 deps_fn: Optional[Callable[[Hashable],
+                                            Optional[FrozenSet[str]]]] = None,
+                 version_fn: Optional[Callable[[], int]] = None):
         self.budget_bytes = budget_bytes
         self.stats = stats
-        self._entries: "OrderedDict[Hashable, Tuple[Any, int]]" = OrderedDict()
+        self.deps_fn = deps_fn
+        self.version_fn = version_fn
+        self._entries: "OrderedDict[Hashable, _Entry]" = OrderedDict()
         # get/put/evict are lock-guarded: the serve layer mutates one shared
         # cache from many client threads (OrderedDict reorder + byte
         # accounting are not atomic on their own)
@@ -58,6 +98,8 @@ class CtCache:
         self.misses = 0
         self.evictions = 0
         self.dropped = 0
+        self.invalidated = 0
+        self.delta_updated = 0        # entries refreshed in place by a delta
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -73,28 +115,71 @@ class CtCache:
                 return default
             self._entries.move_to_end(key)
             self.hits += 1
-            return hit[0]
+            return hit.value
 
     def put(self, key: Hashable, value: Any,
-            nbytes: Optional[int] = None) -> Any:
-        """Insert (or refresh) ``key``; returns ``value`` for chaining."""
+            nbytes: Optional[int] = None,
+            deps: Optional[FrozenSet[str]] = None,
+            version: Optional[int] = None) -> Any:
+        """Insert (or refresh) ``key``; returns ``value`` for chaining.
+
+        ``deps``/``version`` default through the ``deps_fn``/``version_fn``
+        hooks, so ordinary callers never pass them."""
         nb = _nbytes_of(value) if nbytes is None else int(nbytes)
+        if deps is None and self.deps_fn is not None:
+            deps = self.deps_fn(key)
+        if version is None and self.version_fn is not None:
+            version = self.version_fn()
         with self._lock:
             if key in self._entries:
                 self._evict_one(key)
-            self._entries[key] = (value, nb)
+            self._entries[key] = _Entry(value, nb, deps, version)
             self.nbytes += nb
             if self.stats is not None:
                 self.stats.bump_cache(nb)  # records the peak before any drop
             self._shrink_to_budget(just_added=key)
         return value
 
+    def peek(self, key: Hashable, default=None):
+        """Read a value WITHOUT hit/miss accounting or an LRU touch — the
+        delta-maintenance walk reads entries it is about to refresh, which
+        must not look like client traffic."""
+        with self._lock:
+            e = self._entries.get(key)
+            return default if e is None else e.value
+
+    def discard(self, key: Hashable) -> bool:
+        """Drop one entry as *stale* (counted under ``invalidated``, not
+        ``evictions``); returns whether it was resident."""
+        with self._lock:
+            if key not in self._entries:
+                return False
+            self._evict_one(key)
+            self.invalidated += 1
+            return True
+
+    def entry_meta(self, key: Hashable
+                   ) -> Optional[Tuple[Optional[FrozenSet[str]],
+                                       Optional[int]]]:
+        """The ``(deps, version)`` stamp of a resident entry (no LRU
+        touch, no hit/miss accounting), or ``None`` when absent."""
+        with self._lock:
+            e = self._entries.get(key)
+            return None if e is None else (e.deps, e.version)
+
+    def keys_snapshot(self) -> List[Hashable]:
+        """A stable snapshot of the resident keys (LRU -> MRU order) —
+        what a delta-maintenance walk iterates while individual entries
+        come and go underneath it."""
+        with self._lock:
+            return list(self._entries)
+
     # -- eviction -----------------------------------------------------------
     def _evict_one(self, key: Hashable) -> None:
-        _, nb = self._entries.pop(key)
-        self.nbytes -= nb
+        e = self._entries.pop(key)
+        self.nbytes -= e.nbytes
         if self.stats is not None:
-            self.stats.bump_cache(-nb)
+            self.stats.bump_cache(-e.nbytes)
 
     def _shrink_to_budget(self, just_added: Optional[Hashable] = None) -> None:
         if self.budget_bytes is None:
@@ -116,8 +201,43 @@ class CtCache:
                 self._evict_one(key)
                 self.evictions += 1
 
+    def invalidate(self, rels: Optional[Iterable[str]] = None) -> int:
+        """Drop entries made stale by a write to ``rels``.
+
+        Fine-grained: only entries whose dependency set *intersects*
+        ``rels`` are dropped — plus entries with unknown deps (``None``),
+        conservatively.  Entries over untouched relations keep their
+        residency AND their LRU position.  ``rels=None`` drops everything
+        (a full refresh).
+
+        Args:
+            rels: relationship names touched by the delta, or ``None``.
+
+        Returns:
+            Number of entries dropped.
+
+        Usage::
+
+            dropped = cache.invalidate({delta.rel})
+        """
+        with self._lock:
+            if rels is None:
+                n = len(self._entries)
+                for key in list(self._entries):
+                    self._evict_one(key)
+            else:
+                rels = frozenset(rels)
+                stale = [k for k, e in self._entries.items()
+                         if e.deps is None or e.deps & rels]
+                n = len(stale)
+                for key in stale:
+                    self._evict_one(key)
+            self.invalidated += n
+            return n
+
     def info(self) -> dict:
         return dict(entries=len(self._entries), nbytes=self.nbytes,
                     budget_bytes=self.budget_bytes, hits=self.hits,
                     misses=self.misses, evictions=self.evictions,
-                    dropped=self.dropped)
+                    dropped=self.dropped, invalidated=self.invalidated,
+                    delta_updated=self.delta_updated)

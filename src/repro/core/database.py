@@ -3,8 +3,17 @@
 A :class:`RelationalDB` is the TPU-native stand-in for the paper's MariaDB
 input: every entity table is a dict of ``int32[n]`` attribute columns and every
 relationship table is an edge list ``(src int32[m], dst int32[m])`` plus
-``int32[m]`` edge-attribute columns.  All shapes are static; counting never
-needs dynamic shapes.
+``int32[m]`` edge-attribute columns.  All shapes are static *per version*;
+counting never needs dynamic shapes.
+
+The store is **versioned and mutable**: :meth:`RelationalDB.insert_facts` /
+:meth:`RelationalDB.delete_facts` apply a batch of relationship-fact writes,
+bump ``db.version`` and return a :class:`FactDelta` — the exact edge set that
+changed, which downstream layers use for *delta count maintenance* (positive
+ct-tables are multilinear in each relationship's edge multiset, so a cached
+table is refreshed by counting just the delta edges; see
+:meth:`repro.core.engine.CountingEngine.apply_delta`) and for fine-grained
+cache invalidation (:meth:`repro.core.cache.CtCache.invalidate`).
 
 The synthetic generator plants real statistical dependencies (attribute values
 correlated along edges) so that structure search has signal to find, and lets
@@ -13,8 +22,9 @@ benchmarks dial ``rows`` up to the paper's Visual Genome scale (15.8M rows).
 
 from __future__ import annotations
 
+import warnings
 import zlib
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as _dc_replace
 from typing import Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
@@ -43,12 +53,79 @@ class RelationTable:
     def num_edges(self) -> int:
         return int(self.src.shape[0])
 
+    @property
+    def nbytes(self) -> int:
+        """Byte footprint of the edge list + attribute columns (the unit of
+        the replication heuristic in :func:`shard_database`)."""
+        return int(self.src.nbytes) + int(self.dst.nbytes) + sum(
+            int(c.nbytes) for c in self.attrs.values())
+
+    def pair_set(self) -> set:
+        """The ``(src, dst)`` pairs as a python set — convenient for
+        tests/benchmarks sampling fresh pairs.  The write paths use the
+        vectorized :func:`_pair_codes` membership checks instead (a
+        python set over millions of edges is not a per-write cost)."""
+        return set(zip(self.src.tolist(), self.dst.tolist()))
+
+
+def _pair_codes(src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+    """Pack (src, dst) index pairs into int64 codes — the vectorized
+    membership structure the write paths validate against (entity ids
+    are int32, so the pair fits a shifted int64 exactly)."""
+    return (src.astype(np.int64) << 32) | dst.astype(np.int64)
+
+
+@dataclass(frozen=True)
+class FactDelta:
+    """One batch of relationship-fact writes, as applied.
+
+    ``op`` is ``"insert"`` or ``"delete"``; ``src``/``dst``/``attrs`` hold
+    the exact edges that changed (for deletes, the attribute values are the
+    ones the removed edges carried — delta count maintenance needs them to
+    subtract the right cells).  ``old_version``/``new_version`` bracket the
+    store's version bump, so cache layers can reject out-of-order
+    application.
+    """
+
+    rel: str
+    op: str                           # "insert" | "delete"
+    src: np.ndarray
+    dst: np.ndarray
+    attrs: Dict[str, np.ndarray]
+    old_version: int
+    new_version: int
+
+    @property
+    def sign(self) -> int:
+        """+1 for inserts, -1 for deletes — the coefficient a cached count
+        table adds the delta-edge count with."""
+        return 1 if self.op == "insert" else -1
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.src.shape[0])
+
+    def as_db(self, db: "RelationalDB") -> "RelationalDB":
+        """A *delta view* of ``db``: the same schema/entity tables (shared,
+        zero copy) with ``rel``'s table replaced by JUST the delta edges.
+        Counting a pattern on this view yields exactly the delta's
+        contribution to the pattern's count (positive counts are linear in
+        each relationship's edge multiset), which is what the engine's
+        delta path adds/subtracts onto cached tables."""
+        tab = db.relations[self.rel]
+        relations = dict(db.relations)
+        relations[self.rel] = RelationTable(tab.type, self.src, self.dst,
+                                            dict(self.attrs))
+        return RelationalDB(db.schema, db.entities, relations,
+                            version=db.version)
+
 
 @dataclass
 class RelationalDB:
     schema: Schema
     entities: Dict[str, EntityTable]
     relations: Dict[str, RelationTable]
+    version: int = 0                  # bumped by every applied FactDelta
 
     @property
     def total_rows(self) -> int:
@@ -56,6 +133,121 @@ class RelationalDB:
         n = sum(t.size for t in self.entities.values())
         n += sum(t.num_edges for t in self.relations.values())
         return n
+
+    # -- mutable store ------------------------------------------------------
+    def _check_new_edges(self, rel: str, src: np.ndarray, dst: np.ndarray,
+                         attrs: Dict[str, np.ndarray]) -> None:
+        tab = self.relations[rel]
+        rt = tab.type
+        ns, nd = self.entities[rt.src].size, self.entities[rt.dst].size
+        if src.shape != dst.shape or src.ndim != 1:
+            raise ValueError("src/dst must be aligned 1-D index arrays")
+        if src.size:
+            if src.min() < 0 or src.max() >= ns:
+                raise ValueError(f"src index out of range for {rt.src!r}")
+            if dst.min() < 0 or dst.max() >= nd:
+                raise ValueError(f"dst index out of range for {rt.dst!r}")
+        want = {a.name for a in rt.attrs}
+        if set(attrs) != want:
+            raise ValueError(f"attrs for {rel!r} must provide exactly "
+                             f"{sorted(want)}, got {sorted(attrs)}")
+        for a in rt.attrs:
+            col = attrs[a.name]
+            if col.shape != src.shape:
+                raise ValueError(f"attr {a.name!r} not aligned with edges")
+            if col.size and (col.min() < 0 or col.max() >= a.card):
+                raise ValueError(f"attr {a.name!r} value out of range")
+        codes = _pair_codes(src, dst)
+        if np.unique(codes).size != codes.size:
+            raise ValueError(f"duplicate (src, dst) pairs within the batch "
+                             f"for {rel!r}")
+        dup = np.isin(codes, _pair_codes(tab.src, tab.dst))
+        if dup.any():
+            existing = sorted(zip(src[dup].tolist(), dst[dup].tolist()))
+            raise ValueError(f"edges already present in {rel!r}: "
+                             f"{existing[:5]}")
+
+    def insert_facts(self, rel: str, src, dst,
+                     attrs: Optional[Mapping[str, np.ndarray]] = None
+                     ) -> Optional[FactDelta]:
+        """Append a batch of edges to relationship ``rel``; bumps
+        ``version`` and returns the applied :class:`FactDelta` (``None``
+        for an empty batch — no version bump, nothing to reconcile).
+
+        Args:
+            rel: relationship name.
+            src / dst: aligned ``int`` index arrays into the endpoint
+                entity tables.  ``(src, dst)`` pairs must be new — tables
+                are keyed by the pair.
+            attrs: one aligned value column per edge attribute of ``rel``
+                (required iff the relationship has edge attributes).
+
+        Raises:
+            KeyError: unknown relationship.
+            ValueError: misaligned/out-of-range arrays, missing or extra
+                attribute columns, or duplicate pairs.
+
+        Usage::
+
+            delta = db.insert_facts("Rated", [3, 7], [1, 1],
+                                    {"rating": [2, 0]})
+        """
+        src = np.asarray(src, dtype=np.int32)
+        dst = np.asarray(dst, dtype=np.int32)
+        attrs = {k: np.asarray(v, dtype=np.int32)
+                 for k, v in (attrs or {}).items()}
+        if src.size == 0:
+            return None
+        self._check_new_edges(rel, src, dst, attrs)
+        tab = self.relations[rel]
+        tab.src = np.concatenate([tab.src, src])
+        tab.dst = np.concatenate([tab.dst, dst])
+        for name in tab.attrs:
+            tab.attrs[name] = np.concatenate([tab.attrs[name], attrs[name]])
+        old, self.version = self.version, self.version + 1
+        return FactDelta(rel, "insert", src, dst, attrs, old, self.version)
+
+    def delete_facts(self, rel: str, src, dst) -> Optional[FactDelta]:
+        """Remove a batch of edges (matched by ``(src, dst)`` pair) from
+        relationship ``rel``; bumps ``version`` and returns the applied
+        :class:`FactDelta`, whose ``attrs`` capture the attribute values
+        the removed edges carried (``None`` for an empty batch).
+
+        Raises:
+            KeyError: unknown relationship.
+            ValueError: a requested pair is not present (or is requested
+                twice).
+
+        Usage::
+
+            delta = db.delete_facts("Rated", [3], [1])
+        """
+        src = np.asarray(src, dtype=np.int32)
+        dst = np.asarray(dst, dtype=np.int32)
+        if src.shape != dst.shape or src.ndim != 1:
+            raise ValueError("src/dst must be aligned 1-D index arrays")
+        if src.size == 0:
+            return None
+        tab = self.relations[rel]
+        want = _pair_codes(src, dst)
+        if np.unique(want).size != want.size:
+            raise ValueError(f"duplicate (src, dst) pairs in delete batch "
+                             f"for {rel!r}")
+        codes = _pair_codes(tab.src, tab.dst)
+        mask = np.isin(codes, want)
+        if int(mask.sum()) != want.size:
+            gone = ~np.isin(want, codes)
+            missing = sorted(zip(src[gone].tolist(), dst[gone].tolist()))
+            raise ValueError(f"edges not present in {rel!r}: "
+                             f"{missing[:5]}")
+        removed_attrs = {name: col[mask] for name, col in tab.attrs.items()}
+        removed_src, removed_dst = tab.src[mask], tab.dst[mask]
+        tab.src, tab.dst = tab.src[~mask], tab.dst[~mask]
+        for name in tab.attrs:
+            tab.attrs[name] = tab.attrs[name][~mask]
+        old, self.version = self.version, self.version + 1
+        return FactDelta(rel, "delete", removed_src, removed_dst,
+                         removed_attrs, old, self.version)
 
     def validate(self) -> None:
         self.schema.validate()
@@ -171,7 +363,14 @@ class ShardedDatabase:
       (``src`` for self-relationships): every edge lives on exactly one
       shard, and all edges touching the same root entity live together;
     * **other relationship tables are replicated** (every shard sees every
-      edge).
+      edge), subject to the size heuristic in :func:`shard_database`.
+
+    Partition assignment goes through a level of indirection: root-entity
+    ids hash onto ``n_buckets`` fixed **buckets** and ``bucket_map`` sends
+    each bucket to a shard.  The bucket space never changes, so
+    :meth:`split_shard` rebalances a hot shard by *moving buckets* — only
+    that shard's rows move, every other shard's data (and caches) stay
+    untouched.
 
     Positive-count queries are answered by running the ordinary counting
     stack per shard and merging tables at a front-end
@@ -189,10 +388,170 @@ class ShardedDatabase:
     shards: Tuple[RelationalDB, ...]
     root_etype: str
     partitioned: frozenset = field(default_factory=frozenset)  # rel names
+    n_buckets: int = 0                 # 0 = legacy 1-bucket-per-shard
+    bucket_map: Tuple[int, ...] = ()   # bucket -> shard index
+
+    def __post_init__(self) -> None:
+        if not self.bucket_map:        # direct construction: identity map
+            self.n_buckets = self.n_buckets or len(self.shards)
+            self.bucket_map = tuple(b % len(self.shards)
+                                    for b in range(self.n_buckets))
 
     @property
     def n_shards(self) -> int:
         return len(self.shards)
+
+    def shard_of_ids(self, ids: np.ndarray) -> np.ndarray:
+        """Shard index of each root-entity id (hash -> bucket -> shard)."""
+        buckets = _shard_hash(np.asarray(ids), self.n_buckets)
+        return np.asarray(self.bucket_map, dtype=np.int64)[buckets]
+
+    def partitioned_rows(self, shard_id: int) -> int:
+        """Rows of partitioned relationship tables living on one shard —
+        the size the rebalancing threshold watches (replicated tables are
+        everywhere, so they don't distinguish shards)."""
+        shard = self.shards[shard_id]
+        return sum(shard.relations[r].num_edges for r in self.partitioned)
+
+    # -- writes --------------------------------------------------------------
+    def _key_ids(self, rel: str, src: np.ndarray,
+                 dst: np.ndarray) -> np.ndarray:
+        rt = self.schema.relationship(rel)
+        return src if rt.src == self.root_etype else dst
+
+    def insert_facts(self, rel: str, src, dst,
+                     attrs: Optional[Mapping[str, np.ndarray]] = None
+                     ) -> List[Optional[FactDelta]]:
+        """Apply one insert batch across the shards.
+
+        Partitioned relationships: each edge goes to the shard its
+        root-entity endpoint hashes to (same assignment as
+        :func:`shard_database`).  Replicated relationships: the shared
+        table is mutated ONCE and every shard's version bumps.
+
+        Returns:
+            One entry per shard, aligned with ``shards``: the
+            :class:`FactDelta` that shard must reconcile, or ``None`` when
+            the shard received no edges (its data — and caches — are
+            untouched).
+
+        Usage::
+
+            deltas = sdb.insert_facts("Rated", src, dst, {"rating": vals})
+        """
+        src = np.asarray(src, dtype=np.int32)
+        dst = np.asarray(dst, dtype=np.int32)
+        attrs = {k: np.asarray(v, dtype=np.int32)
+                 for k, v in (attrs or {}).items()}
+        if rel not in self.partitioned:
+            return self._apply_replicated(rel, "insert", src, dst, attrs)
+        assign = self.shard_of_ids(self._key_ids(rel, src, dst))
+        out: List[Optional[FactDelta]] = []
+        for s, shard in enumerate(self.shards):
+            m = assign == s
+            if not m.any():
+                out.append(None)
+                continue
+            out.append(shard.insert_facts(
+                rel, src[m], dst[m], {k: v[m] for k, v in attrs.items()}))
+        return out
+
+    def delete_facts(self, rel: str, src, dst) -> List[Optional[FactDelta]]:
+        """Apply one delete batch across the shards (edges matched by
+        ``(src, dst)`` pair; see :meth:`insert_facts` for the routing and
+        return convention)."""
+        src = np.asarray(src, dtype=np.int32)
+        dst = np.asarray(dst, dtype=np.int32)
+        if rel not in self.partitioned:
+            return self._apply_replicated(rel, "delete", src, dst, {})
+        assign = self.shard_of_ids(self._key_ids(rel, src, dst))
+        out: List[Optional[FactDelta]] = []
+        for s, shard in enumerate(self.shards):
+            m = assign == s
+            out.append(shard.delete_facts(rel, src[m], dst[m])
+                       if m.any() else None)
+        return out
+
+    def _apply_replicated(self, rel: str, op: str, src: np.ndarray,
+                          dst: np.ndarray, attrs: Dict[str, np.ndarray]
+                          ) -> List[Optional[FactDelta]]:
+        """Replicated tables are SHARED objects: mutate through shard 0,
+        then bump the other shards' versions and hand each an equivalent
+        delta (same edges, that shard's version bracket)."""
+        first = (self.shards[0].insert_facts(rel, src, dst, attrs)
+                 if op == "insert"
+                 else self.shards[0].delete_facts(rel, src, dst))
+        if first is None:
+            return [None] * self.n_shards
+        out: List[Optional[FactDelta]] = [first]
+        for shard in self.shards[1:]:
+            old, shard.version = shard.version, shard.version + 1
+            out.append(_dc_replace(first, old_version=old,
+                                   new_version=shard.version))
+        return out
+
+    # -- online rebalancing --------------------------------------------------
+    def split_shard(self, shard_id: int) -> "ShardedDatabase":
+        """Split one shard by moving half of its hash buckets to a NEW
+        shard (index ``n_shards``), re-partitioning only that shard's
+        relationship tables.
+
+        The receiver (``self``) is left untouched — in-flight queries
+        against the old shard set stay consistent; callers swap to the
+        returned :class:`ShardedDatabase` atomically (see
+        :meth:`repro.serve.router.CountingRouter.rebalance`).  Entity
+        tables and replicated relationship tables are shared with the old
+        generation, so a split moves only the partitioned rows of the one
+        shard being split.
+
+        Raises:
+            IndexError: ``shard_id`` out of range.
+            ValueError: the shard owns fewer than two buckets (nothing
+                left to split; re-shard with a larger ``n_buckets``).
+
+        Usage::
+
+            sdb2 = sdb.split_shard(0)
+            assert sdb2.n_shards == sdb.n_shards + 1
+        """
+        if not 0 <= shard_id < self.n_shards:
+            raise IndexError(f"shard {shard_id} out of range")
+        owned = [b for b, s in enumerate(self.bucket_map) if s == shard_id]
+        if len(owned) < 2:
+            raise ValueError(
+                f"shard {shard_id} owns {len(owned)} bucket(s); cannot "
+                f"split further (re-shard with a larger n_buckets)")
+        new_idx = self.n_shards
+        moving = set(owned[len(owned) // 2:])
+        new_map = list(self.bucket_map)
+        for b in moving:
+            new_map[b] = new_idx
+        old = self.shards[shard_id]
+        keep_rels: Dict[str, RelationTable] = {}
+        move_rels: Dict[str, RelationTable] = {}
+        for name, tab in old.relations.items():
+            if name not in self.partitioned:
+                keep_rels[name] = tab          # replicated: shared reference
+                move_rels[name] = tab
+                continue
+            key_ids = tab.src if tab.type.src == self.root_etype else tab.dst
+            buckets = _shard_hash(np.asarray(key_ids), self.n_buckets)
+            mv = np.isin(buckets, list(moving))
+            move_rels[name] = RelationTable(
+                tab.type, tab.src[mv], tab.dst[mv],
+                {a: col[mv] for a, col in tab.attrs.items()})
+            keep_rels[name] = RelationTable(
+                tab.type, tab.src[~mv], tab.dst[~mv],
+                {a: col[~mv] for a, col in tab.attrs.items()})
+        shrunk = RelationalDB(self.schema, old.entities, keep_rels,
+                              version=old.version)
+        fresh = RelationalDB(self.schema, old.entities, move_rels,
+                             version=old.version)
+        shards = (self.shards[:shard_id] + (shrunk,)
+                  + self.shards[shard_id + 1:] + (fresh,))
+        return ShardedDatabase(self.schema, shards, self.root_etype,
+                               self.partitioned, self.n_buckets,
+                               tuple(new_map))
 
     def _partition_side_var(self, atom) -> "object":
         """The variable at the partition-key endpoint of a partitioned
@@ -243,31 +602,56 @@ class ShardedDatabase:
         return ("fanout", None)
 
 
+def _replicated_bytes(db: RelationalDB, root_etype: str) -> int:
+    """Bytes of relationship tables that would be REPLICATED to every
+    shard under ``root_etype`` — the footprint the partition-side
+    heuristic minimises."""
+    return sum(tab.nbytes for name, tab in db.relations.items()
+               if root_etype not in (tab.type.src, tab.type.dst))
+
+
 def shard_database(db: RelationalDB, n_shards: int,
-                   root_etype: Optional[str] = None) -> ShardedDatabase:
+                   root_etype: Optional[str] = None,
+                   n_buckets: Optional[int] = None,
+                   max_replicated_bytes: int = 64 << 20,
+                   on_oversized_replicated: str = "warn") -> ShardedDatabase:
     """Hash-partition ``db`` into ``n_shards`` complete sub-databases.
 
     Relationship tables incident to ``root_etype`` are split by the hash of
     their ``root_etype`` endpoint (the *root entity* of a counting query);
     entity tables and the remaining relationship tables are replicated —
     see :class:`ShardedDatabase` for the exact layout and the merge
-    semantics it buys.
+    semantics it buys.  Assignment goes through ``n_buckets`` fixed hash
+    buckets so :meth:`ShardedDatabase.split_shard` can later rebalance a
+    hot shard by moving buckets instead of re-hashing the world.
 
     Args:
         db: the database to partition (left untouched; shards share its
             entity/replicated arrays and hold views of partitioned ones).
         n_shards: number of shards (>= 1).
         root_etype: entity type whose ids are the partition key.  Defaults
-            to the type incident to the most relationships (ties broken by
-            larger table, then name) — the type most queries root at.
+            to the **smaller-footprint partition side**: the incident type
+            whose choice replicates the fewest relationship-table bytes
+            (ties broken by incident-relationship count, entity size, then
+            name).
+        n_buckets: size of the fixed bucket space (defaults to
+            ``max(64, 8 * n_shards)``); must be >= ``n_shards``.
+        max_replicated_bytes: replication heuristic — a relationship table
+            larger than this that would be replicated to every shard
+            triggers ``on_oversized_replicated``.
+        on_oversized_replicated: ``"warn"`` (default) emits a
+            ``ResourceWarning``; ``"error"`` refuses with ``ValueError``
+            (re-shard with a root type incident to that relationship);
+            ``"ignore"`` replicates silently.
 
     Returns:
         A :class:`ShardedDatabase` whose shards each pass
         :meth:`RelationalDB.validate`.
 
     Raises:
-        ValueError: ``n_shards < 1``, or ``root_etype`` names no entity
-            type / touches no relationship.
+        ValueError: ``n_shards < 1``, ``n_buckets < n_shards``,
+            ``root_etype`` names no entity type / touches no relationship,
+            or an oversized replicated table under ``"error"``.
 
     Usage::
 
@@ -277,15 +661,23 @@ def shard_database(db: RelationalDB, n_shards: int,
     """
     if n_shards < 1:
         raise ValueError("n_shards must be >= 1")
+    if n_buckets is None:
+        n_buckets = max(64, 8 * n_shards)
+    if n_buckets < n_shards:
+        raise ValueError(f"n_buckets={n_buckets} < n_shards={n_shards}")
     incident: Dict[str, int] = {et.name: 0 for et in db.schema.entities}
     for rt in db.schema.relationships:
         incident[rt.src] += 1
         if rt.dst != rt.src:
             incident[rt.dst] += 1
     if root_etype is None:
-        root_etype = max(incident,
-                         key=lambda n: (incident[n],
-                                        db.schema.entity(n).size, n))
+        candidates = [n for n in incident if incident[n] > 0]
+        if not candidates:
+            raise ValueError("schema has no relationships to partition")
+        root_etype = min(
+            candidates,
+            key=lambda n: (_replicated_bytes(db, n), -incident[n],
+                           -db.schema.entity(n).size, n))
     elif root_etype not in incident:
         raise ValueError(f"unknown entity type {root_etype!r}")
     if incident[root_etype] == 0:
@@ -294,11 +686,26 @@ def shard_database(db: RelationalDB, n_shards: int,
 
     partitioned = frozenset(rt.name for rt in db.schema.relationships
                             if root_etype in (rt.src, rt.dst))
+    for name, tab in db.relations.items():
+        if name in partitioned or tab.nbytes <= max_replicated_bytes:
+            continue
+        msg = (f"relationship {name!r} ({tab.nbytes} bytes) would be "
+               f"replicated to every shard under root_etype="
+               f"{root_etype!r} and exceeds max_replicated_bytes="
+               f"{max_replicated_bytes}; re-shard with a root type "
+               f"incident to it")
+        if on_oversized_replicated == "error":
+            raise ValueError(msg)
+        if on_oversized_replicated == "warn":
+            warnings.warn(msg, ResourceWarning, stacklevel=2)
+
+    bucket_map = tuple(b % n_shards for b in range(n_buckets))
+    bmap = np.asarray(bucket_map, dtype=np.int64)
     assign: Dict[str, np.ndarray] = {}         # hash each edge list once
     for name in partitioned:
         tab = db.relations[name]
         key_ids = tab.src if tab.type.src == root_etype else tab.dst
-        assign[name] = _shard_hash(np.asarray(key_ids), n_shards)
+        assign[name] = bmap[_shard_hash(np.asarray(key_ids), n_buckets)]
     shards: List[RelationalDB] = []
     for s in range(n_shards):
         relations: Dict[str, RelationTable] = {}
@@ -313,7 +720,8 @@ def shard_database(db: RelationalDB, n_shards: int,
         shard = RelationalDB(db.schema, db.entities, relations)
         shard.validate()
         shards.append(shard)
-    return ShardedDatabase(db.schema, tuple(shards), root_etype, partitioned)
+    return ShardedDatabase(db.schema, tuple(shards), root_etype, partitioned,
+                           n_buckets, bucket_map)
 
 
 # ---------------------------------------------------------------------------

@@ -31,6 +31,7 @@ per hop.  For scaling beyond one mesh — horizontally partitioned
 from __future__ import annotations
 
 import functools
+from contextlib import contextmanager
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -248,6 +249,22 @@ class ShardedSparseExecutor(SparseExecutor):
         # closure; one trace per key, flat across a flood
         self._shard_fn_cache: Dict[Tuple, object] = {}
         self.trace_counts: Dict[Tuple, int] = {}
+        self._force_local = False      # see local_mode()
+
+    @contextmanager
+    def local_mode(self):
+        """Run device primitives UNSHARDED inside this context.  The
+        engine's delta count maintenance contracts a handful of delta
+        edges per cached entry — padding those to the mesh and paying a
+        ``psum`` per hop costs more than the count itself, so the delta
+        path drops to the inherited single-device segment-sums (exact
+        either way; counts are integers).  Not re-entrant across threads:
+        callers hold the service's execution fence."""
+        prev, self._force_local = self._force_local, True
+        try:
+            yield self
+        finally:
+            self._force_local = prev
 
     # -- shard_map closure cache --------------------------------------------
     def _shard_fn(self, key: Tuple, build):
@@ -325,7 +342,7 @@ class ShardedSparseExecutor(SparseExecutor):
     def _edge_segment_sum(self, seg_np: np.ndarray,
                           rows: Optional[jnp.ndarray],
                           total: int) -> jnp.ndarray:
-        if self.n_ranks == 1:
+        if self.n_ranks == 1 or self._force_local:
             return super()._edge_segment_sum(seg_np, rows, total)
         seg, w = _pad_to(seg_np, self.n_ranks)
         if rows is None:
@@ -340,7 +357,7 @@ class ShardedSparseExecutor(SparseExecutor):
 
     def _reduce_by_code(self, code, ds: int, n: int,
                         factors: Sequence[jnp.ndarray]) -> jnp.ndarray:
-        if self.n_ranks == 1:
+        if self.n_ranks == 1 or self._force_local:
             return super()._reduce_by_code(code, ds, n, factors)
         code_np = (np.zeros((n,), dtype=np.int32) if code is None
                    else np.asarray(code))

@@ -28,21 +28,88 @@ Möbius join, and differ only in WHEN joins run and WHAT is cached:
   table access.
 
 Eviction is always safe: every policy recomputes on miss.
+
+**Mutations.**  The engine is version-aware: cache entries are stamped
+with the ``(db.version, relation-dependency set)`` they were computed
+under (:func:`key_deps` derives the dependency set from the key itself,
+so no call site changes), and :meth:`CountingEngine.apply_delta`
+reconciles the cache after a :class:`~repro.core.database.FactDelta` is
+applied to the store.  Reconciliation re-derives the paper's pre/post
+trade-off *over time*: positive artefacts (``"pos"``/``"full"`` tables,
+``"msg"`` matrices) are multilinear in each relationship's edge multiset,
+so a small delta **updates them in place** by counting just the delta
+edges (one sparse segment-sum sweep over ``delta.num_edges`` rows — the
+incremental-maintenance win of Karan et al.); above a cost threshold the
+entry is dropped instead and recomputed on next miss (post-counting the
+write).  Derived tables (``"fam"``/``"complete"``) are dropped; entries
+whose dependency set misses the delta's relation — including every
+``"hist"`` — are retained untouched.
 """
 
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Set, Tuple
+from dataclasses import dataclass
+from typing import FrozenSet, List, Optional, Sequence, Set, Tuple
 
 import jax.numpy as jnp
 
 from .cache import CtCache
 from .contract import CostStats
 from .ct import CtTable
-from .database import RelationalDB
+from .database import FactDelta, RelationalDB
 from .executors import Executor, make_executor, project_columns
 from .plan import ContractionPlan, compile_plan_cached
 from .variables import Atom, CtVar, LatticePoint, Var, attr_var, edge_var
+
+
+def key_deps(key: Tuple) -> Optional[FrozenSet[str]]:
+    """The relationship names a cache entry was derived from, read off the
+    key itself (every namespace embeds its pattern):
+
+    * ``("pos", executor, atoms, keep)`` / ``("full", executor, atoms)``
+      / ``("fam", atoms, keep)`` — the atoms' relations;
+    * ``("msg", executor, atom, child, parent)`` — the atom's relation;
+    * ``("complete", rels)`` — the relation set;
+    * ``("hist", ...)`` — ``frozenset()`` (entity tables only; immune to
+      relationship-fact deltas);
+    * anything else — ``None`` (unknown; invalidation drops it
+      conservatively).
+    """
+    try:
+        ns = key[0]
+        if ns in ("pos", "full"):
+            return frozenset(a.rel for a in key[2])
+        if ns == "fam":
+            return frozenset(a.rel for a in key[1])
+        if ns == "msg":
+            return frozenset((key[2].rel,))
+        if ns == "complete":
+            return frozenset(key[1])
+        if ns == "hist":
+            return frozenset()
+    except (TypeError, AttributeError, IndexError):
+        pass
+    return None
+
+
+@dataclass
+class DeltaReport:
+    """What one :meth:`CountingEngine.apply_delta` reconciliation did to
+    the cache: entries refreshed in place (``updated``), dropped
+    (``invalidated``) and left untouched (``retained``)."""
+
+    rel: str
+    op: str
+    num_edges: int
+    updated: int = 0
+    invalidated: int = 0
+    retained: int = 0
+    version: int = 0
+
+    def as_dict(self) -> dict:
+        return dict(rel=self.rel, op=self.op, num_edges=self.num_edges,
+                    updated=self.updated, invalidated=self.invalidated,
+                    retained=self.retained, version=self.version)
 
 
 class CountingEngine:
@@ -59,6 +126,11 @@ class CountingEngine:
                                    else make_executor(executor, dtype=dtype))
         self.cache = cache if cache is not None else CtCache(
             cache_budget_bytes, self.stats)
+        # freshness stamps: every entry records the relations it depends on
+        # (derived from the key, so no call-site changes) and the store
+        # version it was computed under
+        self.cache.deps_fn = key_deps
+        self.cache.version_fn = lambda: self.db.version
         self.dtype = dtype
         # one rows-counted set per engine: policies AND the counting
         # service share artefact key namespaces ("pos"/"full"/...), so
@@ -104,6 +176,146 @@ class CountingEngine:
         search round pay one negative-phase dispatch per stack *shape*
         rather than one per family."""
         return self.executor.mobius_batch
+
+    def mobius_fused_fn(self):
+        """The executor's FUSED batched negative phase,
+        ``(block_lists, k, perm) -> [table array]`` — butterfly-stack
+        assembly, transform and final transpose in one jitted dispatch
+        per ``(shape, perm)`` group (see :meth:`~repro.core.executors
+        .Executor.mobius_batch_fused`)."""
+        return self.executor.mobius_batch_fused
+
+    # -- delta count maintenance --------------------------------------------
+    def apply_delta(self, delta: FactDelta,
+                    max_update_fraction: float = 0.25) -> DeltaReport:
+        """Reconcile the cache after ``delta`` was applied to ``self.db``.
+
+        Walks the resident entries once and, per entry:
+
+        * dependency set misses ``delta.rel`` → **retained** untouched
+          (this is the fine-grained invalidation: a write to one relation
+          leaves every other relation's artefacts hot);
+        * positive artefact (``"pos"``/``"full"`` table, ``"msg"``
+          matrix) and the delta is *small* (``delta.num_edges <=
+          max_update_fraction *`` the relation's post-delta edge count) →
+          **updated in place**: the same contraction plan runs over a
+          delta view of the database (just the changed edges) and the
+          result is added/subtracted — exact, because positive counts are
+          multilinear in each relationship's edge multiset and lattice
+          patterns use distinct relations;
+        * otherwise → **invalidated** (dropped; recomputed on next miss —
+          the post-count fallback of the pre/post trade-off, applied to
+          writes).
+
+        Deltas must be reconciled in application order, one per call:
+        ``delta.new_version`` must equal the store's current version
+        (otherwise a second delta to an overlapping pattern would double
+        the cross terms).
+
+        Args:
+            delta: the applied :class:`~repro.core.database.FactDelta`.
+            max_update_fraction: in-place-update cost threshold, as a
+                fraction of the relation's current edge count.
+
+        Returns:
+            A :class:`DeltaReport` with updated/invalidated/retained
+            counts.
+
+        Raises:
+            ValueError: ``delta`` is not the store's latest version
+                (reconcile each delta immediately after applying it, or
+                fall back to ``cache.invalidate({delta.rel})``).
+
+        Usage::
+
+            delta = db.insert_facts("Rated", src, dst, {"rating": vals})
+            report = engine.apply_delta(delta)
+        """
+        if delta.new_version != self.db.version:
+            raise ValueError(
+                f"delta version {delta.new_version} != store version "
+                f"{self.db.version}; reconcile deltas in application order")
+        rel = delta.rel
+        report = DeltaReport(rel, delta.op, delta.num_edges,
+                             version=self.db.version)
+        rel_edges = self.db.relations[rel].num_edges
+        small = delta.num_edges <= max_update_fraction * max(rel_edges, 1)
+        delta_db = delta.as_db(self.db) if small else None
+        cache = self.cache
+        for key in cache.keys_snapshot():
+            meta = cache.entry_meta(key)
+            if meta is None:           # concurrently evicted
+                continue
+            deps, _version = meta
+            if deps is not None and rel not in deps:
+                report.retained += 1
+                continue
+            new_val = None
+            if small:
+                new_val, nb = self._delta_update(key, delta_db, delta.sign)
+            if new_val is not None:
+                cache.put(key, new_val, nbytes=nb)   # re-stamps the version
+                cache.delta_updated += 1
+                report.updated += 1
+            elif cache.discard(key):
+                report.invalidated += 1
+        return report
+
+    def _delta_update(self, key: Tuple, delta_db: RelationalDB,
+                      sign: int) -> Tuple[Optional[object], Optional[int]]:
+        """In-place refresh of one positive artefact: count the delta
+        edges with the entry's own plan and add/subtract.  Returns
+        ``(new value, nbytes)`` or ``(None, None)`` when the entry is not
+        a delta-updatable namespace."""
+        ns = key[0]
+        ex = self.executor
+        try:
+            if ns == "pos" and key[1] == ex.name:
+                old = self.cache.peek(key)
+                plan = compile_plan_cached(self.db.schema,
+                                           LatticePoint(key[2]),
+                                           tuple(key[3]))
+            elif ns == "full" and key[1] == ex.name:
+                old = self.cache.peek(key)
+                plan = self.plan(LatticePoint(key[2]), None)
+            elif ns == "msg" and key[1] == ex.name:
+                return self._delta_update_msg(key, delta_db, sign)
+            else:
+                return None, None
+        except (KeyError, ValueError, TypeError):
+            return None, None          # unplannable key: drop instead
+        if old is None:
+            return None, None
+        with self.stats.timer("positive"), ex.local_mode():
+            dtab = ex.positive(delta_db, plan, self.stats)
+        new = old + dtab.scale(sign)
+        return new, new.nbytes
+
+    def _delta_update_msg(self, key: Tuple, delta_db: RelationalDB,
+                          sign: int) -> Tuple[Optional[object],
+                                              Optional[int]]:
+        """Tuple-ID message matrices are per-relationship segment-sums —
+        linear in the edge list by construction, so the delta hop simply
+        adds on."""
+        _, _, atom, child, parent = key
+        hit = self.cache.peek(key)
+        if hit is None:
+            return None, None
+        m, mvars = hit
+        schema = self.db.schema
+        cattrs = tuple(attr_var(child, a.name, a.card)
+                       for a in schema.entity(child.etype).attrs)
+        rel_t = schema.relationship(atom.rel)
+        eattrs = tuple(edge_var(rel_t.name, a.name, a.card)
+                       for a in rel_t.attrs)
+        ex = self.executor
+        with self.stats.timer("positive"), ex.local_mode():
+            dm, dvars = ex.leaf_hop(delta_db, atom, child, parent,
+                                    cattrs, eattrs, self.stats)
+        if tuple(dvars) != tuple(mvars):
+            return None, None          # layout drifted: drop instead
+        new_m = m + sign * dm
+        return (new_m, tuple(mvars)), int(new_m.nbytes)
 
 
 class _Policy:
@@ -198,7 +410,9 @@ class CachedFullPositives(_Policy):
             self._full(point)
 
     def _full_key(self, point: LatticePoint) -> Tuple:
-        return ("full", self.engine.executor.name, frozenset(point.rels))
+        # keyed by the atoms (not just the rel set) so the delta path can
+        # recompile the exact plan the cached table came from
+        return ("full", self.engine.executor.name, point.atoms)
 
     def _full(self, point: LatticePoint) -> CtTable:
         eng = self.engine
@@ -258,7 +472,10 @@ class TupleIdPositives(_Policy):
 
     def _msg(self, atom: Atom, child: Var, parent: Var):
         eng = self.engine
-        key = ("msg", eng.executor.name, atom.rel, child, parent)
+        # keyed by the full atom (not just the rel name): the delta path
+        # re-runs the hop, and for self-relationships the atom carries the
+        # direction the message was propagated in
+        key = ("msg", eng.executor.name, atom, child, parent)
         hit = eng.cache.get(key)
         if hit is None:
             cattrs, eattrs = self._full_resolution(atom, child)

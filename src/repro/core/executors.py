@@ -28,6 +28,7 @@ to the Pallas kernel (``kernels/mobius_kernel.py``) with
 
 from __future__ import annotations
 
+from contextlib import nullcontext
 from typing import List, Optional, Sequence, Tuple
 
 import jax
@@ -145,6 +146,83 @@ class Executor:
         batch = jnp.stack(stacks + [stacks[0]] * (b_pad - b))
         out = fn(batch)
         return [out[i] for i in range(b)]
+
+    def mobius_batch_fused(self, block_lists: Sequence[Sequence[jnp.ndarray]],
+                           k: int, perm: Tuple[int, ...]
+                           ) -> List[jnp.ndarray]:
+        """FULLY fused batched negative phase: butterfly-stack assembly,
+        superset transform and the finalise transpose for many same-shape
+        queries in ONE jitted dispatch per ``(shape, perm)`` group.
+
+        :meth:`mobius_batch` still paid per-query eager glue — a
+        ``jnp.stack`` + reshape to assemble each query's butterfly stack
+        and a ``jnp.transpose`` to the request layout afterwards.  Here
+        the raw aligned blocks go straight into the jitted evaluator: it
+        stacks ALL queries' blocks, runs the transform with the batch
+        axis moved to the trailing (elementwise) side, applies the shared
+        final transpose, and returns one array per query — per-query
+        results are sliced *inside* the jit, so the whole group is a
+        single dispatch.  Padding (batch axis to the next power of two,
+        replaying the first query) keeps the jit cache keyed by a handful
+        of sizes.  Results are bit-identical to the unfused path (the
+        transform is elementwise across the batch axis; no op reordering
+        occurs).
+
+        Args:
+            block_lists: one sequence of ``2**k`` aligned blocks per
+                query, each of the same attr shape, in the
+                ``itertools.product((0, 1), repeat=k)`` order the
+                butterfly stack is built in.
+            k: number of leading indicator axes.
+            perm: the finalise transpose from transform layout
+                (``(2,)*k`` + attr axes) to request layout — shared by
+                the whole group.
+
+        Returns:
+            One complete-table array per query (request layout), in input
+            order.
+
+        Usage::
+
+            outs = executor.mobius_batch_fused(blocks, k, bp.perm)
+        """
+        block_lists = [list(bs) for bs in block_lists]
+        if not block_lists:
+            return []
+        attr_shape = tuple(block_lists[0][0].shape)
+        b = len(block_lists)
+        b_pad = 1 << max(b - 1, 0).bit_length()
+        perm = tuple(perm)
+        key = ("mobius_fused", attr_shape, k, perm, b_pad)
+        fn = self._batch_cache.get(key)
+        if fn is None:
+            tperm = (0,) + tuple(p + 1 for p in perm)
+
+            def run(*blks):
+                x = jnp.stack(blks).reshape(
+                    (b_pad,) + (2,) * k + attr_shape)
+                moved = jnp.moveaxis(x, 0, -1)           # batch -> trailing
+                y = jnp.moveaxis(self.mobius(moved, k), -1, 0)
+                if tperm != tuple(range(len(tperm))):
+                    y = jnp.transpose(y, tperm)
+                return tuple(y[i] for i in range(b_pad))
+
+            fn = self._batch_cache[key] = jax.jit(run)
+        flat = [blk for bs in block_lists for blk in bs]
+        for bs in [block_lists[0]] * (b_pad - b):        # pad: replay query 0
+            flat.extend(bs)
+        outs = fn(*flat)
+        return list(outs[:b])
+
+    def local_mode(self):
+        """Context for tiny side computations — the engine's delta count
+        maintenance runs its delta-edge contractions inside it.  The
+        single-device executors are already local (no-op); mesh-sharded
+        backends drop to their single-device primitives so a handful of
+        delta edges never pays padding + collectives (see
+        :meth:`repro.core.distributed.ShardedSparseExecutor.local_mode`).
+        """
+        return nullcontext()
 
     # -- positive phase -----------------------------------------------------
     def positive(self, db: RelationalDB, plan: ContractionPlan,

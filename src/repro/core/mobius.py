@@ -167,11 +167,12 @@ def _butterfly_plan(point: LatticePoint,
     return _ButterflyPlan(keep, kept_attrs, effective, k, perm)
 
 
-def _butterfly_stack(point: LatticePoint, bp: _ButterflyPlan,
-                     provider: PositiveProvider,
-                     memo: Optional[Dict] = None) -> jnp.ndarray:
-    """The transform input: Y[c in {*,T}^k] = ct_+(T-set of c), stacked to
-    ``(2,)*k + attr_shape`` (positive phase of the Möbius join).
+def _butterfly_blocks(point: LatticePoint, bp: _ButterflyPlan,
+                      provider: PositiveProvider,
+                      memo: Optional[Dict] = None) -> List[jnp.ndarray]:
+    """The aligned transform-input blocks, one per ``{*,T}^k`` corner in
+    ``itertools.product`` order: Y[c] = ct_+(T-set of c) over the kept
+    attrs (positive phase of the Möbius join).
 
     ``memo`` (used by :func:`complete_ct_many`) caches the aligned block
     arrays across a batch of queries: a same-signature flood shares its
@@ -196,6 +197,18 @@ def _butterfly_stack(point: LatticePoint, bp: _ButterflyPlan,
             if memo is not None:
                 memo[mkey] = blk
         blocks.append(blk)
+    return blocks
+
+
+def _butterfly_stack(point: LatticePoint, bp: _ButterflyPlan,
+                     provider: PositiveProvider,
+                     memo: Optional[Dict] = None) -> jnp.ndarray:
+    """The transform input: the blocks of :func:`_butterfly_blocks`
+    stacked to ``(2,)*k + attr_shape`` (eager assembly glue; the fused
+    batched path skips this and hands the raw blocks to the jitted
+    evaluator instead — see :meth:`~repro.core.executors.Executor
+    .mobius_batch_fused`)."""
+    blocks = _butterfly_blocks(point, bp, provider, memo)
     attr_shape = tuple(v.card for v in bp.kept_attrs)
     return jnp.stack(blocks).reshape((2,) * bp.k + attr_shape)
 
@@ -399,18 +412,26 @@ def complete_ct_many(queries: Sequence[Tuple[LatticePoint,
                                                   jnp.ndarray]] = None,
                      mobius_batch_fn: Optional[Callable[
                          [Sequence[jnp.ndarray], int],
+                         List[jnp.ndarray]]] = None,
+                     mobius_fused_fn: Optional[Callable[
+                         [Sequence[Sequence[jnp.ndarray]], int,
+                          Tuple[int, ...]],
                          List[jnp.ndarray]]] = None) -> List[CtTable]:
     """Complete ct-tables for many ``(point, keep)`` queries, with the
     Möbius negative phase batched across same-shape butterfly stacks.
 
-    Butterfly-eligible queries (no kept edge-attr axes, ``k > 0``) have
-    their input stacks assembled first — the positive phase, ideally
-    pre-warmed through :meth:`~repro.serve.service.CountingService
-    .prefetch` — then grouped by ``(stack shape, k)``; same-signature
-    families are same-shape by construction, so each group runs ONE
-    transform via ``mobius_batch_fn`` (normally the executor's jitted
-    :meth:`~repro.core.executors.Executor.mobius_batch`).  Everything else
-    (blockwise queries, ``k == 0``, no batch fn) falls back to
+    Butterfly-eligible queries (no kept edge-attr axes, ``k > 0``) are
+    grouped — same-signature families are same-shape by construction —
+    and each group runs ONE transform.  With ``mobius_fused_fn`` (normally
+    the executor's :meth:`~repro.core.executors.Executor
+    .mobius_batch_fused`) the groups are keyed by ``(attr shape, k,
+    finalise perm)`` and the *aligned blocks* go straight into the jitted
+    evaluator — stack assembly, transform AND the finalise transpose are
+    one dispatch per group, with per-query results sliced inside the jit.
+    Without it, stacks are assembled eagerly and ``mobius_batch_fn``
+    (normally :meth:`~repro.core.executors.Executor.mobius_batch`)
+    transforms each ``(stack shape, k)`` group, paying per-query glue.
+    Everything else (blockwise queries, ``k == 0``) falls back to
     :func:`complete_ct` per query.
 
     Args:
@@ -424,6 +445,9 @@ def complete_ct_many(queries: Sequence[Tuple[LatticePoint,
         use_butterfly / mobius_fn: as for :func:`complete_ct`.
         mobius_batch_fn: batched transform ``(stacks, k) -> [stack]``;
             defaults to :func:`butterfly_batch` over ``mobius_fn``.
+        mobius_fused_fn: fused batched transform ``(block_lists, k, perm)
+            -> [table array]``; preferred over ``mobius_batch_fn`` when
+            given.
 
     Returns:
         One :class:`~repro.core.ct.CtTable` per query, positionally
@@ -433,14 +457,14 @@ def complete_ct_many(queries: Sequence[Tuple[LatticePoint,
     Usage::
 
         tabs = complete_ct_many([(point, keep) for keep in keeps], policy,
-                                mobius_batch_fn=executor.mobius_batch)
+                                mobius_fused_fn=executor.mobius_batch_fused)
     """
     queries = [(point, tuple(keep)) for point, keep in queries]
     if mobius_batch_fn is None:
         mobius_batch_fn = lambda stacks, k: butterfly_batch(
             stacks, k, mobius_fn)
     results: List[Optional[CtTable]] = [None] * len(queries)
-    eligible: List[Tuple[int, _ButterflyPlan, jnp.ndarray]] = []
+    eligible: List[Tuple[int, _ButterflyPlan, List[jnp.ndarray]]] = []
     memo: Dict = {}          # cross-query block reuse within this batch
     for i, (point, keep) in enumerate(queries):
         bp = _butterfly_plan(point, keep) if use_butterfly else None
@@ -450,12 +474,29 @@ def complete_ct_many(queries: Sequence[Tuple[LatticePoint,
                                      mobius_fn=mobius_fn)
         else:
             eligible.append((i, bp,
-                             _butterfly_stack(point, bp, provider, memo)))
-    groups: Dict[Tuple, List[Tuple[int, _ButterflyPlan, jnp.ndarray]]] = {}
-    for item in eligible:
-        _, bp, stack = item
-        groups.setdefault((tuple(stack.shape), bp.k), []).append(item)
-    for (_, k), members in groups.items():
+                             _butterfly_blocks(point, bp, provider, memo)))
+    if mobius_fused_fn is not None:
+        groups: Dict[Tuple, List] = {}
+        for item in eligible:
+            _, bp, _ = item
+            attr_shape = tuple(v.card for v in bp.kept_attrs)
+            groups.setdefault((attr_shape, bp.k, bp.perm), []).append(item)
+        for (_, k, perm), members in groups.items():
+            outs = mobius_fused_fn([blks for _, _, blks in members], k,
+                                   perm)
+            for (i, bp, _), arr in zip(members, outs):
+                tab = CtTable(bp.keep, arr)     # already in request layout
+                if stats is not None:
+                    stats.ct_cells += tab.size
+                results[i] = tab
+        return results
+    groups2: Dict[Tuple, List[Tuple[int, _ButterflyPlan, jnp.ndarray]]] = {}
+    for i, bp, blks in eligible:
+        attr_shape = tuple(v.card for v in bp.kept_attrs)
+        stack = jnp.stack(blks).reshape((2,) * bp.k + attr_shape)
+        groups2.setdefault((tuple(stack.shape), bp.k), []).append(
+            (i, bp, stack))
+    for (_, k), members in groups2.items():
         outs = mobius_batch_fn([s for _, _, s in members], k)
         for (i, bp, _), out in zip(members, outs):
             tab = _butterfly_finalise(bp, out)

@@ -164,6 +164,30 @@ class Strategy:
                                                      self.mobius_fn)
         return self.engine.executor.mobius_batch
 
+    def _mobius_fused_fn(self):
+        """The FUSED batched negative phase (assembly + transform +
+        finalise in one jitted dispatch per shape/perm group).  A
+        ``mobius_fn`` override opts out: the fused evaluator traces the
+        executor's own step, so an ad-hoc override falls back to the
+        unfused batched path."""
+        if self.mobius_fn is not None:
+            return None
+        return self.engine.executor.mobius_batch_fused
+
+    # -- mutations -----------------------------------------------------------
+    def apply_delta(self, delta, **kw):
+        """Reconcile this strategy's cache after a store mutation —
+        delegates to :meth:`~repro.core.engine.CountingEngine
+        .apply_delta` (fine-grained invalidation + in-place delta updates
+        of positive artefacts).
+
+        Usage::
+
+            delta = db.insert_facts("Rated", src, dst, {"rating": vals})
+            report = strategy.apply_delta(delta)
+        """
+        return self.engine.apply_delta(delta, **kw)
+
     def family_ct_many(self, point: LatticePoint,
                        keeps: Sequence[Sequence[CtVar]]) -> list:
         """Fetch a whole round of family tables at once — both Möbius
@@ -203,7 +227,8 @@ class Strategy:
                     [(point, keep) for keep in missing], self.provider,
                     self.stats, use_butterfly=self.use_butterfly,
                     mobius_fn=self._mobius_fn(),
-                    mobius_batch_fn=self._mobius_batch_fn())
+                    mobius_batch_fn=self._mobius_batch_fn(),
+                    mobius_fused_fn=self._mobius_fused_fn())
             for keep, tab in zip(missing, tabs):
                 cache.put(("fam",) + _freeze(point, keep), tab)
                 fresh[keep] = tab      # return directly: under a tight

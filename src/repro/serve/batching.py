@@ -148,14 +148,17 @@ def execute_complete_bucketed(engine: CountingEngine, policy,
         for (p, _), plan, tab in zip(todo, plans, tabs):
             policy.absorb(p, plan.keep, tab)
 
-    batch_fn = engine.mobius_batch_fn()
+    # the engine's fused evaluator always exists, so every
+    # butterfly-eligible query takes the fused path; blockwise queries
+    # fall back to per-query complete_ct over mobius_fn
+    fused_fn = engine.mobius_fused_fn()
     if metrics is not None:
-        inner = batch_fn
+        inner_fused = fused_fn
 
-        def batch_fn(stacks, k):
+        def fused_fn(blocks, k, perm):
             t0 = time.perf_counter()
-            out = inner(stacks, k)
-            metrics.observe_mobius(len(stacks), time.perf_counter() - t0)
+            out = inner_fused(blocks, k, perm)
+            metrics.observe_mobius(len(blocks), time.perf_counter() - t0)
             return out
 
     # any residual data access (unwarmed misses, eviction recomputes) times
@@ -166,4 +169,4 @@ def execute_complete_bucketed(engine: CountingEngine, policy,
         return complete_ct_many(queries, policy, stats,
                                 use_butterfly=use_butterfly,
                                 mobius_fn=engine.mobius_fn(),
-                                mobius_batch_fn=batch_fn)
+                                mobius_fused_fn=fused_fn)

@@ -66,6 +66,10 @@ class ServiceMetrics:
     mobius_exec_s: float = 0.0    # total batched-transform wall time
     exec_s: float = 0.0           # total bucket execution wall time
     wait_s: float = 0.0           # total queue residency across requests
+    deltas: int = 0               # apply_delta() reconciliations
+    delta_updated: int = 0        # cache entries refreshed in place
+    delta_invalidated: int = 0    # cache entries dropped as stale
+    delta_retained: int = 0       # cache entries untouched by deltas
     buckets: Dict[Tuple, BucketMetrics] = field(default_factory=dict)
 
     def observe_mobius(self, n_stacks: int, dt: float) -> None:
@@ -146,6 +150,9 @@ class ServiceMetrics:
             mobius_exec_s=round(self.mobius_exec_s, 6),
             exec_s=round(self.exec_s, 6), wait_s=round(self.wait_s, 6),
             qps=round(self.qps, 1),
+            deltas=self.deltas, delta_updated=self.delta_updated,
+            delta_invalidated=self.delta_invalidated,
+            delta_retained=self.delta_retained,
             buckets=[b.as_dict() for b in self.buckets.values()],
         )
         if cache is not None:
@@ -164,6 +171,9 @@ class RouterMetrics:
     not_routable: int = 0         # rejected with NotRoutableError
     cache_hits: int = 0           # served from the router's own result cache
     coalesced: int = 0            # joined an identical in-flight fan-out
+    complete_requests: int = 0    # routed complete-CT (Möbius) queries
+    deltas: int = 0               # apply_delta() mutations routed to shards
+    rebalances: int = 0           # online shard splits performed
 
     def snapshot(self) -> dict:
         """JSON-able dict of the routing counters (one flat level; the
@@ -175,4 +185,7 @@ class RouterMetrics:
                     merged_tables=self.merged_tables,
                     not_routable=self.not_routable,
                     cache_hits=self.cache_hits,
-                    coalesced=self.coalesced)
+                    coalesced=self.coalesced,
+                    complete_requests=self.complete_requests,
+                    deltas=self.deltas,
+                    rebalances=self.rebalances)

@@ -35,6 +35,7 @@ from __future__ import annotations
 import threading
 import time
 from collections import OrderedDict
+from contextlib import ExitStack
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
@@ -42,8 +43,9 @@ import jax.numpy as jnp
 from ..core.contract import CostStats
 from ..core.ct import CtTable
 from ..core.database import NotRoutableError, ShardedDatabase
-from ..core.engine import CountingEngine
+from ..core.engine import CountingEngine, DeltaReport
 from ..core.executors import make_executor
+from ..core.mobius import complete_ct, positive_queries
 from ..core.variables import CtVar, LatticePoint
 from .metrics import RouterMetrics, ServiceMetrics
 from .service import CountingService, CountTicket
@@ -133,6 +135,23 @@ class RouterTicket:
         return self._result
 
 
+class _MergedProvider:
+    """:class:`~repro.core.mobius.PositiveProvider` over merged shard
+    answers: positive sub-pattern tables go through the router (served
+    from its merged-result cache after the warm batch), per-variable
+    histograms from one shard's engine — entity tables are replicated, so
+    any single shard holds the exact histogram."""
+
+    def __init__(self, router: "CountingRouter", engine: CountingEngine):
+        self._router, self._engine = router, engine
+
+    def positive(self, point: LatticePoint, keep) -> CtTable:
+        return self._router.count(point, tuple(keep))
+
+    def hist(self, var, keep) -> CtTable:
+        return self._engine.hist(var, tuple(keep))
+
+
 class CountingRouter:
     """Fan-out/merge front-end over one
     :class:`~repro.serve.service.CountingService` per database shard.
@@ -175,29 +194,63 @@ class CountingRouter:
                  cache_entries: int = 1024,
                  cache_result_bytes: int = 64 << 20,
                  dtype=jnp.float32,
+                 rebalance_rows: Optional[int] = None,
                  metrics: Optional[RouterMetrics] = None):
         self.sdb = sdb
         self.cache_entries = cache_entries
         self.cache_result_bytes = cache_result_bytes
+        self.rebalance_rows = rebalance_rows
         self.metrics = metrics if metrics is not None else RouterMetrics()
         self._lock = threading.Lock()      # metrics + router cache state
+        # one writer at a time: apply_delta and rebalance serialise here
+        # (readers never take it — they work on snapshots)
+        self._mutate_lock = threading.Lock()
+        # multi-shard read consistency: a fan-out's per-shard sub-submits
+        # happen under this gate, and apply_delta holds it while fencing +
+        # draining every shard — so a merged answer is always computed
+        # entirely pre- or entirely post-delta, never a mix of shard
+        # states that never coexisted.  Re-entrant: complete_many holds it
+        # across its whole warm batch, whose fan-outs re-enter in submit()
+        self._submit_gate = threading.RLock()
         self._results: "OrderedDict[Tuple, CtTable]" = OrderedDict()
         self._results_bytes = 0
         self._epoch = 0                    # bumped by invalidate()
         self._inflight: Dict[Tuple, "RouterTicket"] = {}
+        # kept to build replacement services after a rebalance
+        self._executor_spec = executor
+        self._dtype = dtype
+        self._eng_kw = dict(cache_budget_bytes=cache_budget_bytes)
+        self._svc_kw = dict(max_batch_size=max_batch_size,
+                            max_wait_s=max_wait_s,
+                            max_in_flight=max_in_flight,
+                            max_pending_bytes=max_pending_bytes)
         self.engines: List[CountingEngine] = []
         self.services: List[CountingService] = []
         for shard in sdb.shards:
-            ex = (executor if not isinstance(executor, str)
-                  else make_executor(executor, dtype=dtype))
-            eng = CountingEngine(shard, ex, CostStats(),
-                                 cache_budget_bytes=cache_budget_bytes,
-                                 dtype=dtype)
+            eng, svc = self._build_shard_stack(shard)
             self.engines.append(eng)
-            self.services.append(CountingService(
-                eng, max_batch_size=max_batch_size, max_wait_s=max_wait_s,
-                max_in_flight=max_in_flight,
-                max_pending_bytes=max_pending_bytes))
+            self.services.append(svc)
+
+    def _build_shard_stack(self, shard) -> Tuple[CountingEngine,
+                                                 CountingService]:
+        """One planner/executor/cache stack + service for one shard DB
+        (one executor INSTANCE per shard unless the caller supplied a
+        ready instance to share)."""
+        ex = (self._executor_spec if not isinstance(self._executor_spec, str)
+              else make_executor(self._executor_spec, dtype=self._dtype))
+        eng = CountingEngine(shard, ex, CostStats(), dtype=self._dtype,
+                             **self._eng_kw)
+        return eng, CountingService(eng, **self._svc_kw)
+
+    def _snapshot(self) -> Tuple[ShardedDatabase, List[CountingService],
+                                 List[CountingEngine], int]:
+        """A coherent ``(sdb, services, engines, epoch)`` view: routing
+        decisions and shard submits for ONE query must come from the same
+        generation, or a mid-rebalance submit could mix old and new shard
+        sets (double- or under-counting the moved rows).  ``rebalance``
+        swaps all three references together under the lock."""
+        with self._lock:
+            return self.sdb, self.services, self.engines, self._epoch
 
     @property
     def n_shards(self) -> int:
@@ -230,10 +283,10 @@ class CountingRouter:
                 under the database's partitioning (see
                 :meth:`~repro.core.database.ShardedDatabase.route`).
         """
-        key = (point.atoms, self.engines[0].plan(point, keep).keep)
+        sdb, services, engines, epoch = self._snapshot()
+        key = (point.atoms, engines[0].plan(point, keep).keep)
         with self._lock:
             self.metrics.requests += 1
-            epoch = self._epoch
             hit = self._results.get(key)
             if hit is not None:
                 self._results.move_to_end(key)
@@ -244,7 +297,7 @@ class CountingRouter:
                 self.metrics.coalesced += 1
                 return inflight
         try:
-            mode, shard = self.sdb.route(point)
+            mode, shard = sdb.route(point)
         except NotRoutableError:
             with self._lock:
                 self.metrics.not_routable += 1
@@ -255,12 +308,15 @@ class CountingRouter:
             else:
                 self.metrics.single_shard_requests += 1
         if mode == "fanout":
-            tickets = [svc.submit(point, keep) for svc in self.services]
+            # the gate keeps a concurrent apply_delta from landing between
+            # two shard enqueues of the SAME query (see __init__)
+            with self._submit_gate:
+                tickets = [svc.submit(point, keep) for svc in services]
             ticket = RouterTicket(self, tickets, merge=True, key=key,
                                   epoch=epoch)
         else:
             ticket = RouterTicket(
-                self, [self.services[shard].submit(point, keep)],
+                self, [services[shard % len(services)].submit(point, keep)],
                 merge=False, key=key, epoch=epoch)
         with self._lock:
             # benign race: a concurrent identical submit may have landed
@@ -290,8 +346,9 @@ class CountingRouter:
                 BEFORE anything is enqueued, so a bad query in the list
                 never strands partial work on the shard queues.
         """
+        sdb = self._snapshot()[0]
         for point, _ in queries:       # validate up front, enqueue nothing
-            self.sdb.route(point)      # on a mixed good/bad list
+            sdb.route(point)           # on a mixed good/bad list
         tickets = [self.submit(point, keep) for point, keep in queries]
         self.flush()
         return [t.result() for t in tickets]
@@ -299,12 +356,232 @@ class CountingRouter:
     # -- scheduling ---------------------------------------------------------
     def flush(self) -> None:
         """Drain every shard service's pending queue."""
-        for svc in self.services:
+        for svc in self._snapshot()[1]:
             svc.flush()
 
     def pending(self) -> int:
         """Total queries pending across all shard services."""
-        return sum(svc.pending() for svc in self.services)
+        return sum(svc.pending() for svc in self._snapshot()[1])
+
+    # -- complete-CT routing -------------------------------------------------
+    def count_complete(self, point: LatticePoint,
+                       keep: Optional[Sequence[CtVar]] = None) -> CtTable:
+        """Complete ct-table (positive + Möbius negative phase) over a
+        sharded database: **positive-phase fan-out + front-end
+        transform**.
+
+        The Möbius join is a signed sum of positive sub-pattern tables,
+        and positive tables are additive over shards — so every positive
+        sub-query the join needs is routed/merged through the ordinary
+        :meth:`submit` machinery (warmed as one batch, so each shard sees
+        signature-bucketed dispatches), and the inclusion–exclusion runs
+        once at the front-end on the merged tables.  The result is
+        exactly the single-database :func:`~repro.core.mobius
+        .complete_ct`.
+
+        Args:
+            point: lattice point (>= 1 relationship atom).
+            keep: ct-table axes; attr, edge-attr AND rind axes of the
+                point are legal (defaults to all of them).
+
+        Returns:
+            The complete :class:`~repro.core.ct.CtTable` over ``keep``.
+
+        Raises:
+            NotRoutableError: some positive sub-query has no additive
+                merge under the partitioning (raised before any shard
+                work is enqueued).
+
+        Usage::
+
+            tab = router.count_complete(point)    # == single-DB complete_ct
+        """
+        return self.complete_many([(point, keep)])[0]
+
+    def complete_many(self, queries: Sequence[Tuple[LatticePoint,
+                                                    Optional[Sequence[CtVar]]]]
+                      ) -> List[CtTable]:
+        """Route a whole complete-CT query list: every distinct positive
+        sub-query across ALL queries is warmed through the shard services
+        first (one fan-out batch), then each front-end transform runs on
+        merged tables — see :meth:`count_complete`.
+
+        Usage::
+
+            tabs = router.complete_many([(p, None) for p in lattice])
+        """
+        sdb, services, engines, epoch = self._snapshot()
+        schema = sdb.schema
+        norm: List[Tuple[LatticePoint, Tuple]] = []
+        for point, keep in queries:
+            if keep is None:
+                keep = point.all_ct_vars(schema, include_rind=True)
+            norm.append((point, tuple(keep)))
+        out: List[Optional[CtTable]] = [None] * len(norm)
+        todo: List[int] = []
+        with self._lock:               # complete-table result cache
+            self.metrics.complete_requests += len(norm)
+            for i, (point, keep) in enumerate(norm):
+                hit = self._results.get(("complete", point.atoms, keep))
+                if hit is not None:
+                    self._results.move_to_end(("complete", point.atoms,
+                                               keep))
+                    self.metrics.cache_hits += 1
+                    out[i] = hit
+                else:
+                    todo.append(i)
+        if not todo:
+            return out                                   # type: ignore
+        subs: List[Tuple[LatticePoint, Tuple]] = []
+        for i in todo:                 # cache hits warm nothing
+            point, keep = norm[i]
+            subs.extend(positive_queries(point, keep, use_butterfly=True))
+        for sp, _ in subs:             # validate BEFORE enqueueing anything
+            sdb.route(sp)
+        # the gate spans the warm batch AND the front-end transforms: a
+        # complete-CT query is a multi-read transaction, and every
+        # positive sub-table its inclusion-exclusion consumes must come
+        # from one side of any concurrent delta (writers wait in
+        # apply_delta until the transaction finishes)
+        with self._submit_gate:
+            tickets = [self.submit(sp, sk)
+                       for sp, sk in dict.fromkeys(subs)]
+            self.flush()
+            for t in tickets:          # merged positives land in the cache
+                t.result()
+            provider = _MergedProvider(self, engines[0])
+            for i in todo:
+                point, keep = norm[i]
+                tab = complete_ct(point, keep, provider,
+                                  mobius_fn=engines[0].mobius_fn())
+                self._settle(("complete", point.atoms, keep), tab, epoch)
+                out[i] = tab
+        return out                                       # type: ignore
+
+    # -- mutations & rebalancing ---------------------------------------------
+    def apply_delta(self, rel: str, src, dst, attrs=None, *,
+                    op: str = "insert",
+                    **kw) -> List[Optional[DeltaReport]]:
+        """Apply one write batch to the sharded store and reconcile every
+        affected shard's cache, fenced across ALL shard services.
+
+        The edges are routed exactly like reads: partitioned
+        relationships hash each edge to its owning shard (untouched
+        shards keep their caches hot — their report slot is ``None``);
+        replicated relationships mutate the shared table once and
+        reconcile everywhere.  The router's own merged-result cache is
+        epoch-invalidated.  If ``rebalance_rows`` is set, any shard whose
+        partitioned row count now exceeds it is split afterwards (see
+        :meth:`rebalance`).
+
+        Args:
+            rel: relationship name.
+            src / dst / attrs: the edge batch (see
+                :meth:`~repro.core.database.RelationalDB.insert_facts`).
+            op: ``"insert"`` or ``"delete"``.
+            **kw: forwarded to the engines' :meth:`~repro.core.engine
+                .CountingEngine.apply_delta`.
+
+        Returns:
+            One :class:`~repro.core.engine.DeltaReport` (or ``None``) per
+            shard, aligned with the shard list at application time.
+
+        Usage::
+
+            router.apply_delta("Rated", src, dst, {"rating": vals})
+        """
+        if op not in ("insert", "delete"):
+            raise ValueError(f"op must be 'insert' or 'delete', got {op!r}")
+        with self._mutate_lock:
+            sdb, services, engines, _ = self._snapshot()
+            # the submit gate + queue drain make cross-shard reads
+            # linearize around the write: no fan-out is mid-enqueue, and
+            # every sub-query already queued executes against the
+            # PRE-delta store before anything moves — so a merged answer
+            # can never mix shard states from both sides of the write
+            with self._submit_gate:
+                with ExitStack() as fences:
+                    # global fence: replicated tables are SHARED arrays, so
+                    # no shard may be mid-batch while they move underneath
+                    for svc in services:
+                        fences.enter_context(svc.fence())
+                    for svc in services:
+                        svc.flush()        # re-entrant: fence locks held
+                    deltas = (sdb.insert_facts(rel, src, dst, attrs)
+                              if op == "insert"
+                              else sdb.delete_facts(rel, src, dst))
+                    reports = [svc.apply_delta(d, **kw) if d is not None
+                               else None
+                               for svc, d in zip(services, deltas)]
+                # epoch-invalidate while the gate still blocks readers, so
+                # no submit can serve a pre-delta merged result afterwards
+                self.invalidate()
+            with self._lock:
+                self.metrics.deltas += 1
+        if self.rebalance_rows is not None:
+            for s in range(sdb.n_shards):
+                if sdb.partitioned_rows(s) > self.rebalance_rows:
+                    self.rebalance(s)
+        return reports
+
+    def insert_facts(self, rel: str, src, dst, attrs=None,
+                     **kw) -> List[Optional[DeltaReport]]:
+        """Convenience for :meth:`apply_delta` with ``op="insert"``."""
+        return self.apply_delta(rel, src, dst, attrs, op="insert", **kw)
+
+    def delete_facts(self, rel: str, src, dst,
+                     **kw) -> List[Optional[DeltaReport]]:
+        """Convenience for :meth:`apply_delta` with ``op="delete"``."""
+        return self.apply_delta(rel, src, dst, op="delete", **kw)
+
+    def rebalance(self, shard_id: int) -> int:
+        """Split one shard online: re-partition its relationship tables
+        onto a NEW shard (half its hash buckets move — see
+        :meth:`~repro.core.database.ShardedDatabase.split_shard`), build a
+        fresh engine + service pair for both halves, and swap the
+        router's shard set atomically under the epoch guard.
+
+        No query is lost: in-flight tickets hold references to the OLD
+        generation's services and shard databases (which the split left
+        intact), so they drain to the correct pre-swap answers; their
+        results are kept out of the router cache by the epoch bump.
+        Submits arriving after the swap route against the new generation.
+        Data is unchanged by a split, so answers are identical either
+        way.
+
+        Args:
+            shard_id: index of the shard to split (current generation).
+
+        Returns:
+            The index of the NEW shard (== old ``n_shards``).
+
+        Raises:
+            IndexError / ValueError: see :meth:`~repro.core.database
+                .ShardedDatabase.split_shard`.
+
+        Usage::
+
+            new_shard = router.rebalance(hot_shard)
+        """
+        with self._mutate_lock:
+            sdb, services, engines, _ = self._snapshot()
+            new_sdb = sdb.split_shard(shard_id)
+            eng_a, svc_a = self._build_shard_stack(new_sdb.shards[shard_id])
+            eng_b, svc_b = self._build_shard_stack(new_sdb.shards[-1])
+            new_idx = new_sdb.n_shards - 1
+            old_svc = services[shard_id]
+            with self._lock:
+                self.sdb = new_sdb
+                self.engines = (engines[:shard_id] + [eng_a]
+                                + engines[shard_id + 1:] + [eng_b])
+                self.services = (services[:shard_id] + [svc_a]
+                                 + services[shard_id + 1:] + [svc_b])
+                self._results.clear()
+                self._results_bytes = 0
+                self._epoch += 1       # mid-flight merges settle, not cache
+                self.metrics.rebalances += 1
+        old_svc.flush()                # drain stragglers on the old stack
+        return new_idx
 
     # -- router-level result cache -------------------------------------------
     def invalidate(self) -> None:
@@ -358,9 +635,10 @@ class CountingRouter:
             .merged` view of all shard services plus the key-wise sum of
             the shard cache counters.
         """
-        shard_snaps = [svc.stats() for svc in self.services]
+        services = self._snapshot()[1]
+        shard_snaps = [svc.stats() for svc in services]
         agg = ServiceMetrics.merged(
-            [svc.metrics for svc in self.services]).snapshot()
+            [svc.metrics for svc in services]).snapshot()
         cache_agg: dict = {}
         for snap in shard_snaps:
             for k, v in snap.get("cache", {}).items():

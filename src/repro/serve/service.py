@@ -48,14 +48,17 @@ same machinery for an explicit policy (see
 
 from __future__ import annotations
 
+import asyncio
 import threading
 import time
+from contextlib import contextmanager
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core.ct import CtTable
-from ..core.engine import CountingEngine, OnDemandPositives
+from ..core.database import FactDelta
+from ..core.engine import CountingEngine, DeltaReport, OnDemandPositives
 from ..core.plan import ContractionPlan
 from ..core.variables import CtVar, LatticePoint
 from .batching import execute_bucketed, execute_complete_bucketed
@@ -74,7 +77,8 @@ class _Pending:
     """One in-flight query: a compiled plan plus everyone waiting on it."""
 
     __slots__ = ("point", "keep", "plan", "sig", "complete", "sinks",
-                 "cache_result", "enqueued_at", "event", "result", "error")
+                 "cache_result", "enqueued_at", "event", "result", "error",
+                 "callbacks")
 
     def __init__(self, point: LatticePoint, keep: Tuple[CtVar, ...],
                  plan: ContractionPlan, complete: bool = False):
@@ -90,6 +94,29 @@ class _Pending:
         self.event = threading.Event()
         self.result: Optional[CtTable] = None
         self.error: Optional[BaseException] = None
+        # fired (once each) after the event is set: the asyncio bridge —
+        # waiters that cannot block a thread park a loop.call_soon_threadsafe
+        # hook here instead (callbacks must be idempotent: the
+        # append-then-check handshake in settle/on_settled may run one twice)
+        self.callbacks: List[Callable[[], None]] = []
+
+    def settle(self) -> None:
+        """Mark done and wake every waiter — threads via the event,
+        asyncio waiters via their callbacks."""
+        self.event.set()
+        for cb in list(self.callbacks):
+            try:
+                cb()
+            except Exception:          # noqa: BLE001 — a dead event loop
+                pass                   # must not break sibling waiters
+
+    def on_settled(self, cb: Callable[[], None]) -> None:
+        """Register an idempotent done-callback; fires immediately if the
+        entry already settled (append-then-check closes the race with a
+        concurrent :meth:`settle`)."""
+        self.callbacks.append(cb)
+        if self.event.is_set():
+            cb()
 
 
 class CountTicket:
@@ -139,6 +166,45 @@ class CountTicket:
         if self._entry.error is not None:  # execution failed: every waiter
             raise self._entry.error        # sees the batch's exception
         self._result = self._entry.result
+        return self._result
+
+    async def aresult(self) -> CtTable:
+        """Asyncio-native :meth:`result`: awaits the count table without
+        blocking the event loop.
+
+        With the dispatcher thread running, completion is event-driven —
+        a done-callback wakes the awaiting task via
+        ``loop.call_soon_threadsafe``, so thousands of concurrent awaiters
+        cost no threads.  Without a dispatcher, the blocking ``result()``
+        (which flushes the queue) runs in the loop's default thread-pool
+        executor instead.
+
+        Usage::
+
+            tab = await service.submit(point).aresult()
+        """
+        if self._result is not None:
+            return self._result
+        entry = self._entry
+        assert entry is not None
+        loop = asyncio.get_running_loop()
+        if not (self._service.running
+                and self._service.max_wait_s is not None):
+            # nothing will fire the batch on its own: drive the blocking
+            # flush+wait path off-loop instead of parking forever
+            return await loop.run_in_executor(None, self.result)
+        fut: "asyncio.Future[CtTable]" = loop.create_future()
+
+        def settle() -> None:          # runs on the loop
+            if fut.done():
+                return
+            if entry.error is not None:
+                fut.set_exception(entry.error)
+            else:
+                fut.set_result(entry.result)
+
+        entry.on_settled(lambda: loop.call_soon_threadsafe(settle))
+        self._result = await fut
         return self._result
 
 
@@ -194,7 +260,10 @@ class CountingService:
         self.use_butterfly = use_butterfly
         self.metrics = metrics if metrics is not None else ServiceMetrics()
         self._lock = threading.RLock()         # queue state
-        self._exec_lock = threading.Lock()     # execution + cache writes
+        # execution + cache writes; re-entrant so a caller already holding
+        # the fence() (e.g. the router's all-shard delta fence) can invoke
+        # apply_delta without deadlocking on itself
+        self._exec_lock = threading.RLock()
         self._wake = threading.Condition(self._lock)  # dispatcher wake-ups
         self._pending: Dict[Tuple, _Pending] = {}
         self._by_sig: Dict[Tuple, List[Tuple]] = {}   # sig -> [req_key]
@@ -373,6 +442,115 @@ class CountingService:
         self.flush()
         return [t.result() for t in tickets]
 
+    # -- asyncio client surface ---------------------------------------------
+    async def acount(self, point: LatticePoint,
+                     keep: Optional[Sequence[CtVar]] = None) -> CtTable:
+        """Asyncio-native :meth:`count`: submit + ``await`` the result
+        without blocking the event loop.
+
+        Designed for the dispatcher deployment (``dispatcher=True`` with a
+        ``max_wait_s`` deadline): a flood of concurrent ``acount`` awaiters
+        costs no threads — each parks on a future that the executing batch
+        wakes via ``loop.call_soon_threadsafe`` — and the dispatcher's
+        deadline batches them exactly like threaded clients.  Without a
+        dispatcher the blocking flush runs in the loop's thread pool.
+
+        Usage::
+
+            svc = CountingService(engine, max_wait_s=0.005, dispatcher=True)
+            tabs = await asyncio.gather(*(svc.acount(p) for p in points))
+        """
+        return await self.submit(point, keep).aresult()
+
+    async def acomplete(self, point: LatticePoint,
+                        keep: Optional[Sequence[CtVar]] = None) -> CtTable:
+        """Asyncio-native :meth:`count_complete`: complete-CT query
+        (positive + Möbius negative phase) awaited without blocking the
+        loop — same bridging as :meth:`acount`.
+
+        Usage::
+
+            tab = await svc.acomplete(point)
+        """
+        return await self.submit_complete(point, keep).aresult()
+
+    # -- mutations ----------------------------------------------------------
+    @contextmanager
+    def fence(self):
+        """Hold the store still: blocks new submits from reading the cache
+        AND waits out any mid-flight bucket execution, so a mutation +
+        cache reconcile inside the fence is atomic with respect to every
+        query.  Queries already queued (but not executing) simply run
+        after the fence — against the post-delta store, which their
+        metadata-only plans are agnostic to."""
+        with self._lock, self._exec_lock:
+            yield self
+
+    def apply_delta(self, delta: Optional[FactDelta] = None, *,
+                    mutate: Optional[Callable[[], Optional[FactDelta]]] = None,
+                    **kw) -> Optional[DeltaReport]:
+        """Apply one store mutation and reconcile the engine's cache,
+        fenced against in-flight buckets (the version bump never tears a
+        running batch, and no submit can read a stale entry in between).
+
+        Args:
+            delta: a :class:`~repro.core.database.FactDelta` already
+                applied to the engine's database — pass it when the
+                mutation itself happened elsewhere (e.g. the router
+                mutated a :class:`~repro.core.database.ShardedDatabase`
+                under this service's fence).
+            mutate: alternatively, a thunk that performs the mutation and
+                returns the delta; it runs INSIDE the fence (this is what
+                :meth:`insert_facts` / :meth:`delete_facts` use).
+            **kw: forwarded to :meth:`~repro.core.engine.CountingEngine
+                .apply_delta` (e.g. ``max_update_fraction``).
+
+        Returns:
+            The engine's :class:`~repro.core.engine.DeltaReport`, or
+            ``None`` for an empty delta.
+
+        Usage::
+
+            report = svc.apply_delta(mutate=lambda: db.insert_facts(...))
+        """
+        with self.fence():
+            if mutate is not None:
+                delta = mutate()
+            if delta is None:
+                return None
+            report = self.engine.apply_delta(delta, **kw)
+        with self._lock:
+            self.metrics.deltas += 1
+            self.metrics.delta_updated += report.updated
+            self.metrics.delta_invalidated += report.invalidated
+            self.metrics.delta_retained += report.retained
+        return report
+
+    def insert_facts(self, rel: str, src, dst,
+                     attrs=None, **kw) -> Optional[DeltaReport]:
+        """Fenced convenience: :meth:`~repro.core.database.RelationalDB
+        .insert_facts` on the engine's database + cache reconcile, as one
+        atomic step (see :meth:`apply_delta`).
+
+        Usage::
+
+            svc.insert_facts("Rated", src, dst, {"rating": vals})
+        """
+        return self.apply_delta(
+            mutate=lambda: self.engine.db.insert_facts(rel, src, dst, attrs),
+            **kw)
+
+    def delete_facts(self, rel: str, src, dst, **kw) -> Optional[DeltaReport]:
+        """Fenced convenience: :meth:`~repro.core.database.RelationalDB
+        .delete_facts` + cache reconcile, as one atomic step.
+
+        Usage::
+
+            svc.delete_facts("Rated", src, dst)
+        """
+        return self.apply_delta(
+            mutate=lambda: self.engine.db.delete_facts(rel, src, dst), **kw)
+
     def prefetch(self, policy, queries: Sequence[Tuple[LatticePoint,
                                                        Tuple[CtVar, ...]]]
                  ) -> int:
@@ -484,7 +662,7 @@ class CountingService:
             f"pending")
         for e in entries:
             e.error = err
-            e.event.set()
+            e.settle()
 
     def _dispatch_loop(self) -> None:
         while True:
@@ -604,7 +782,7 @@ class CountingService:
             raise
         finally:
             for e in entries:
-                e.event.set()
+                e.settle()
 
     def _deliver(self, e: _Pending, tab: CtTable) -> None:
         """Route one finished query: sinks, cache write, result slot."""

@@ -100,6 +100,36 @@ STRATEGY_SCRIPT = textwrap.dedent("""
                 np.testing.assert_allclose(
                     np.asarray(got.counts), np.asarray(ref.counts),
                     atol=1e-3)
+
+    # mutations on the 8-rank mesh: delta maintenance stays oracle-exact,
+    # and the delta path's local_mode contractions never build new
+    # shard_map closures (a handful of delta edges must not pay padding
+    # + psum per hop)
+    from tests.test_mutations import random_delete, random_insert
+    db = random_db(0)
+    lattice = build_lattice(db.schema, 2)
+    ex = ShardedSparseExecutor(mesh=mesh, axis="data")
+    st = make_strategy("HYBRID", executor=ex)
+    st.prepare(db, lattice)
+    point = lattice[-1]
+    keep = point.all_ct_vars(db.schema, include_rind=True)
+    st.family_ct(point, keep)
+    rng = np.random.default_rng(5)
+    rel = sorted(point.rels)[0]
+    n_closures = len(ex._shard_fn_cache)
+    rep = st.apply_delta(random_insert(db, rel, 2, rng))
+    assert rep.updated + rep.invalidated > 0, rep
+    assert len(ex._shard_fn_cache) == n_closures     # local_mode: no
+    for delta_round in range(2):                     # sharded delta hops
+        got = st.family_ct(point, keep)
+        np.testing.assert_allclose(np.asarray(got.counts),
+                                   oracle_ct(db, point, keep), atol=1e-3)
+        d = random_delete(db, rel, 1, rng)
+        if d is not None:
+            st.apply_delta(d)
+    got = st.family_ct(point, keep)
+    np.testing.assert_allclose(np.asarray(got.counts),
+                               oracle_ct(db, point, keep), atol=1e-3)
     print("SHARDED-SPARSE-OK")
 """)
 

@@ -124,6 +124,62 @@ def test_complete_ct_many_equals_complete_ct_both_orders(ex):
                         f"keep={[str(v) for v in keep]}")
 
 
+@pytest.mark.parametrize("ex,use_pallas", [("dense", False),
+                                           ("sparse", False),
+                                           ("sparse", True)])
+def test_complete_ct_many_fused_equals_unfused(ex, use_pallas):
+    """The FUSED batched path (stack assembly + transform + finalise
+    transpose in one jitted dispatch per (shape, perm) group) is
+    bit-identical to the unfused batched path and per-query complete_ct,
+    for the pure-jnp step and the Pallas kernel."""
+    db = mixed_db()
+    lattice = build_lattice(db.schema, 2)
+    rng = np.random.default_rng(9)
+    queries = []
+    for point in (lattice[0], lattice[-1]):
+        pool = list(point.all_ct_vars(db.schema, include_rind=True))
+        queries.append((point, tuple(pool)))
+        queries.append((point, ()))                       # k == 0 fallback
+        for _ in range(4):
+            k = rng.integers(1, len(pool) + 1)
+            pick = rng.choice(len(pool), size=k, replace=False)
+            queries.append((point, tuple(pool[i] for i in sorted(pick))))
+    executor = make_executor(ex, use_pallas_mobius=use_pallas)
+    eng = CountingEngine(db, executor, CostStats())
+    got = complete_ct_many(queries, OnDemandPositives(eng),
+                           mobius_fused_fn=executor.mobius_batch_fused)
+    ref_eng = CountingEngine(db, ex, CostStats())
+    ref_policy = OnDemandPositives(ref_eng)
+    unfused = complete_ct_many(queries, ref_policy,
+                               mobius_batch_fn=ref_eng.executor.mobius_batch)
+    for (point, keep), g, u in zip(queries, got, unfused):
+        want = complete_ct(point, keep, ref_policy)
+        assert g.vars == want.vars
+        np.testing.assert_allclose(
+            np.asarray(g.counts), np.asarray(want.counts), atol=1e-3,
+            err_msg=f"{ex}/pallas={use_pallas} keep={[str(v) for v in keep]}")
+        np.testing.assert_allclose(np.asarray(g.counts),
+                                   np.asarray(u.counts), atol=1e-3)
+
+
+def test_mobius_batch_fused_one_dispatch_per_group():
+    """All queries of one (shape, perm) group share ONE jit entry, and
+    padding keeps the cache keyed by a handful of batch sizes."""
+    ex = make_executor("sparse")
+    rng = np.random.default_rng(4)
+    blocks = lambda b, k, shp: [[jnp.asarray(
+        rng.integers(0, 9, size=shp).astype(np.float32))
+        for _ in range(1 << k)] for _ in range(b)]
+    perm = (0, 1)
+    ex.mobius_batch_fused(blocks(3, 1, (2,)), 1, perm)
+    n_keys = len(ex._batch_cache)
+    ex.mobius_batch_fused(blocks(4, 1, (2,)), 1, perm)    # same pad bucket
+    assert len(ex._batch_cache) == n_keys
+    ex.mobius_batch_fused(blocks(3, 1, (2,)), 1, (1, 0))  # new perm group
+    assert len(ex._batch_cache) == n_keys + 1
+    assert ex.mobius_batch_fused([], 1, perm) == []
+
+
 # ------------------------------------------------------------ strategies ----
 
 @pytest.mark.parametrize("sname,ex", STRAT_X_EXEC)

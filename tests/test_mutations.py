@@ -1,0 +1,576 @@
+"""Versioned mutable store + delta count maintenance, end to end.
+
+The acceptance properties of the mutations refactor:
+
+* **Interleaving**: after any random interleaving of fact inserts/deletes
+  and count queries, every strategy × executor (including the registered
+  ``sparse_sharded`` backend and the sharded-database router path)
+  returns counts identical to a brute-force oracle evaluated on the
+  database state *at query time* — and therefore on the final state.
+* **Fine-grained invalidation**: a write to one relationship retains the
+  cache entries of every untouched relationship (hit-rate asserted — the
+  retained entries serve follow-up queries without recomputation).
+* **Delta path**: small deltas refresh positive artefacts in place (exact
+  by multilinearity); deltas above the cost threshold drop them instead
+  (the post-count fallback).
+* **Online rebalancing**: ``CountingRouter.rebalance`` under a concurrent
+  query flood loses no queries, and every answer merges to the single-DB
+  value before AND after the swap.
+* **Asyncio surface**: an ``asyncio.gather`` flood of ``acount`` /
+  ``acomplete`` awaiters equals the oracle, batched by the dispatcher.
+"""
+
+import asyncio
+import itertools
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (CostStats, CountingEngine, build_lattice,
+                        complete_ct, make_strategy, shard_database)
+from repro.core.engine import OnDemandPositives, key_deps
+from repro.core.executors import EXECUTORS
+from repro.core.oracle import oracle_ct
+from repro.core.strategies import STRATEGIES
+from repro.serve import CountingRouter, CountingService
+from tests.test_serve import mixed_db
+
+ALL_COMBOS = list(itertools.product(sorted(STRATEGIES), sorted(EXECUTORS)))
+
+
+def fresh_pairs(db, rel, k, rng):
+    """``k`` random (src, dst) pairs not currently present in ``rel``."""
+    tab = db.relations[rel]
+    ns = db.entities[tab.type.src].size
+    nd = db.entities[tab.type.dst].size
+    have = tab.pair_set()
+    out = []
+    while len(out) < k:
+        s, d = int(rng.integers(ns)), int(rng.integers(nd))
+        if (s, d) not in have:
+            have.add((s, d))
+            out.append((s, d))
+    return (np.array([p[0] for p in out], np.int32),
+            np.array([p[1] for p in out], np.int32))
+
+
+def random_insert(db, rel, k, rng):
+    src, dst = fresh_pairs(db, rel, k, rng)
+    attrs = {a.name: rng.integers(0, a.card, size=k).astype(np.int32)
+             for a in db.relations[rel].type.attrs}
+    return db.insert_facts(rel, src, dst, attrs)
+
+
+def random_delete(db, rel, k, rng):
+    tab = db.relations[rel]
+    k = min(k, tab.num_edges)
+    if k == 0:
+        return None
+    pick = rng.choice(tab.num_edges, size=k, replace=False)
+    return db.delete_facts(rel, tab.src[pick].copy(), tab.dst[pick].copy())
+
+
+# ------------------------------------------------------ versioned store ----
+
+def test_insert_delete_roundtrip_and_versions():
+    db = mixed_db()
+    rng = np.random.default_rng(0)
+    assert db.version == 0
+    d = random_insert(db, "R0", 3, rng)
+    assert d.op == "insert" and d.num_edges == 3
+    assert (d.old_version, d.new_version) == (0, 1) and db.version == 1
+    db.validate()
+    d2 = db.delete_facts("R0", d.src, d.dst)
+    assert d2.op == "delete" and d2.sign == -1
+    assert d2.num_edges == 3 and db.version == 2
+    # deleted edges carry the attribute values they had
+    np.testing.assert_array_equal(d2.attrs["e0"], d.attrs["e0"])
+    db.validate()
+    # empty batches are no-ops, not version bumps
+    assert db.insert_facts("R0", [], [], {"e0": []}) is None
+    assert db.version == 2
+
+
+def test_bad_writes_rejected():
+    db = mixed_db()
+    tab = db.relations["R0"]
+    s0, d0 = int(tab.src[0]), int(tab.dst[0])
+    with pytest.raises(ValueError):          # duplicate pair
+        db.insert_facts("R0", [s0], [d0], {"e0": [0]})
+    with pytest.raises(ValueError):          # missing attr column
+        db.insert_facts("R0", [0], [0], None)
+    with pytest.raises(ValueError):          # attr out of range
+        db.insert_facts("R0", [8], [6], {"e0": [99]})
+    with pytest.raises(ValueError):          # index out of range
+        db.insert_facts("R0", [1000], [0], {"e0": [0]})
+    with pytest.raises(ValueError):          # deleting a missing edge
+        db.delete_facts("R1", [1000], [1000])
+    assert db.version == 0                   # nothing was applied
+
+
+def test_delta_view_is_linear():
+    """positive(db after) - positive(db before) == positive(delta view):
+    the multilinearity the delta path relies on."""
+    db = mixed_db()
+    rng = np.random.default_rng(1)
+    eng = CountingEngine(db, "sparse", CostStats())
+    points = [p for p in build_lattice(db.schema, 2) if "R0" in p.rels]
+    for p in points:
+        before = np.asarray(eng.contract(p, None).counts)
+        delta = random_insert(db, "R0", 4, rng)
+        after = np.asarray(eng.contract(p, None).counts)
+        dtab = eng.executor.positive(delta.as_db(db), eng.plan(p, None))
+        np.testing.assert_allclose(after - before, np.asarray(dtab.counts),
+                                   atol=1e-3, err_msg=str(p))
+
+
+# --------------------------------------- interleaving property (tentpole) ----
+
+@pytest.mark.parametrize("sname,ex", ALL_COMBOS)
+def test_interleaved_mutations_match_oracle(sname, ex):
+    """Random interleavings of inserts/deletes and family queries stay
+    oracle-exact for every strategy × executor (``sparse_sharded`` runs
+    on the in-process 1-device mesh, exercising its delta/local paths)."""
+    db = mixed_db()
+    lattice = build_lattice(db.schema, 2)
+    rels = sorted(db.relations)
+    points = lattice[:2] + lattice[-2:]
+    rng = np.random.default_rng(hash((sname, ex)) % (2 ** 32))
+    st = make_strategy(sname, executor=ex)
+    st.prepare(db, lattice)
+
+    def check_all():
+        for p in points:
+            pool = list(p.all_ct_vars(db.schema, include_rind=True))
+            pick = rng.choice(len(pool),
+                              size=int(rng.integers(1, len(pool) + 1)),
+                              replace=False)
+            keep = tuple(pool[i] for i in sorted(pick))
+            got = st.family_ct(p, keep)
+            want = oracle_ct(db, p, keep)
+            np.testing.assert_allclose(
+                np.asarray(got.counts), want, atol=1e-3,
+                err_msg=f"{sname}/{ex} v={db.version} {p} "
+                        f"keep={[str(v) for v in keep]}")
+
+    check_all()                                  # warm the caches
+    for step in range(6):
+        rel = rels[int(rng.integers(len(rels)))]
+        if rng.random() < 0.5 and db.relations[rel].num_edges > 3:
+            delta = random_delete(db, rel, int(rng.integers(1, 4)), rng)
+        else:
+            delta = random_insert(db, rel, int(rng.integers(1, 4)), rng)
+        if delta is not None:
+            st.apply_delta(delta)
+        if step % 2 == 0:
+            check_all()
+    check_all()                                  # final state
+
+
+def test_stale_delta_application_rejected():
+    db = mixed_db()
+    rng = np.random.default_rng(2)
+    st = make_strategy("HYBRID", executor="sparse")
+    st.prepare(db, build_lattice(db.schema, 1))
+    d1 = random_insert(db, "R0", 2, rng)
+    random_insert(db, "R0", 2, rng)              # second, unreconciled write
+    with pytest.raises(ValueError):
+        st.apply_delta(d1)                       # out of order: cross terms
+
+
+# ----------------------------------------- fine-grained invalidation ----
+
+def test_untouched_relations_keep_their_cache_entries():
+    """A write to R0 must retain every R1/R2 artefact: the follow-up
+    queries hit the cache (no new joins), and only R0-dependent entries
+    were touched."""
+    db = mixed_db()
+    lattice = build_lattice(db.schema, 2)
+    rng = np.random.default_rng(3)
+    st = make_strategy("HYBRID", executor="sparse")
+    st.prepare(db, lattice)
+    untouched = [p for p in lattice if "R0" not in p.rels]
+    keeps = {p: tuple(p.all_ct_vars(db.schema, include_rind=True))
+             for p in untouched}
+    for p in untouched:
+        st.family_ct(p, keeps[p])                # warm
+    report = st.apply_delta(random_insert(db, "R0", 2, rng))
+    assert report.retained > 0
+    joins_before = st.stats.joins                # delta-path joins excluded:
+    hits_before = st.engine.cache.hits           # only follow-ups measured
+    for p in untouched:                          # all served from cache
+        got = st.family_ct(p, keeps[p])
+        np.testing.assert_allclose(np.asarray(got.counts),
+                                   oracle_ct(db, p, keeps[p]), atol=1e-3)
+    assert st.stats.joins == joins_before        # zero data access
+    assert st.engine.cache.hits > hits_before    # hit-rate: cache served
+
+
+def test_entries_are_version_and_deps_stamped():
+    db = mixed_db()
+    st = make_strategy("HYBRID", executor="sparse")
+    st.prepare(db, build_lattice(db.schema, 1))
+    cache = st.engine.cache
+    keys = cache.keys_snapshot()
+    assert keys
+    for key in keys:
+        deps, version = cache.entry_meta(key)
+        assert deps == key_deps(key)
+        assert version == 0
+        if key[0] == "hist":
+            assert deps == frozenset()
+        elif key[0] == "full":
+            assert deps and deps <= set(db.relations)
+    rng = np.random.default_rng(4)
+    st.apply_delta(random_insert(db, "R0", 1, rng))
+    updated = [k for k in cache.keys_snapshot()
+               if cache.entry_meta(k) and "R0" in (cache.entry_meta(k)[0]
+                                                   or ())]
+    for k in updated:                            # refreshed under v1
+        assert cache.entry_meta(k)[1] == 1
+
+
+def test_delta_threshold_falls_back_to_invalidation():
+    """A delta above max_update_fraction drops the dependent positive
+    artefacts instead of updating them — and the next query recomputes
+    correctly either way."""
+    db = mixed_db()
+    lattice = build_lattice(db.schema, 1)
+    rng = np.random.default_rng(5)
+    st = make_strategy("HYBRID", executor="sparse")
+    st.prepare(db, lattice)
+    small = st.apply_delta(random_insert(db, "R0", 1, rng))
+    assert small.updated > 0 and small.invalidated == 0
+    big = st.apply_delta(random_insert(db, "R0", 12, rng),
+                         max_update_fraction=0.05)
+    assert big.updated == 0 and big.invalidated > 0
+    for p in lattice:
+        keep = p.all_ct_vars(db.schema, include_rind=True)
+        np.testing.assert_allclose(
+            np.asarray(st.family_ct(p, keep).counts),
+            oracle_ct(db, p, keep), atol=1e-3)
+
+
+# ------------------------------------------------------- service fence ----
+
+def test_service_apply_delta_fences_and_serves_fresh():
+    """Mutations through the service are atomic w.r.t. the query stream:
+    concurrent clients always observe a consistent pre- or post-delta
+    answer, never a torn one."""
+    db = mixed_db()
+    eng = CountingEngine(db, "sparse", CostStats())
+    svc = CountingService(eng, max_batch_size=4)
+    lattice = build_lattice(db.schema, 2)
+    states = {}                                  # version -> oracle answers
+    rng = np.random.default_rng(6)
+
+    def snapshot_oracle():
+        states[db.version] = {
+            p: oracle_ct(db, p, p.all_ct_vars(db.schema,
+                                              include_rind=False),
+                         require_positive=True)
+            for p in lattice}
+
+    snapshot_oracle()
+    errors = []
+    observations = []                            # validated at the end,
+    stop = threading.Event()                     # once every state is known
+
+    def client(seed):
+        r = np.random.default_rng(seed)
+        while not stop.is_set():
+            p = lattice[int(r.integers(len(lattice)))]
+            try:
+                observations.append((p, np.asarray(svc.count(p).counts)))
+            except Exception as e:               # pragma: no cover
+                errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(s,)) for s in range(3)]
+    for t in threads:
+        t.start()
+    for _ in range(4):
+        rel = ("R0", "R1", "R2")[int(rng.integers(3))]
+        src, dst = fresh_pairs(db, rel, 2, rng)
+        attrs = {a.name: rng.integers(0, a.card, size=2).astype(np.int32)
+                 for a in db.relations[rel].type.attrs}
+        svc.apply_delta(mutate=lambda: db.insert_facts(rel, src, dst,
+                                                       attrs))
+        snapshot_oracle()
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors, errors[:2]
+    assert observations
+    for p, got in observations:                  # consistent pre- or
+        assert any(np.allclose(got, s[p], atol=1e-3)   # post-delta answer,
+                   for s in states.values()), (p, got)  # never torn
+    assert svc.stats()["deltas"] == 4
+    # after the last fence, every fresh query is post-delta exact
+    for p in lattice:
+        got = np.asarray(svc.count(p).counts)
+        np.testing.assert_allclose(got, states[db.version][p], atol=1e-3)
+
+
+# ------------------------------------------------------- asyncio surface ----
+
+def test_async_flood_matches_oracle():
+    db = mixed_db()
+    eng = CountingEngine(db, "sparse", CostStats())
+    svc = CountingService(eng, max_batch_size=16, max_wait_s=0.003,
+                          dispatcher=True)
+    lattice = build_lattice(db.schema, 2)
+    want = {p: oracle_ct(db, p, p.all_ct_vars(db.schema,
+                                              include_rind=False),
+                         require_positive=True)
+            for p in lattice}
+    cwant = {p: complete_ct(p, p.all_ct_vars(db.schema, include_rind=True),
+                            OnDemandPositives(
+                                CountingEngine(db, "sparse", CostStats())))
+             for p in lattice}
+
+    async def flood():
+        pos = [svc.acount(p) for p in lattice * 8]
+        com = [svc.acomplete(p) for p in lattice]
+        return await asyncio.gather(*(pos + com))
+
+    try:
+        tabs = asyncio.run(flood())
+    finally:
+        svc.shutdown()
+    n_pos = len(lattice) * 8
+    for p, t in zip(lattice * 8, tabs[:n_pos]):
+        np.testing.assert_allclose(np.asarray(t.counts), want[p], atol=1e-3)
+    for p, t in zip(lattice, tabs[n_pos:]):
+        np.testing.assert_allclose(np.asarray(t.counts),
+                                   np.asarray(cwant[p].counts), atol=1e-3)
+    snap = svc.stats()
+    assert snap["requests"] == n_pos + len(lattice)
+    # the dispatcher batched the flood: far fewer dispatches than queries
+    assert snap["enqueued"] < snap["requests"]
+
+
+def test_async_without_dispatcher_falls_back():
+    db = mixed_db()
+    svc = CountingService(CountingEngine(db, "sparse", CostStats()))
+    p = build_lattice(db.schema, 1)[0]
+
+    async def one():
+        return await svc.acount(p)
+
+    tab = asyncio.run(one())
+    np.testing.assert_allclose(
+        np.asarray(tab.counts),
+        oracle_ct(db, p, p.all_ct_vars(db.schema, include_rind=False),
+                  require_positive=True),
+        atol=1e-3)
+
+
+# --------------------------------------------------- router: writes ----
+
+def _routable_points(sdb, lattice):
+    out = []
+    for p in lattice:
+        try:
+            sdb.route(p)
+            out.append(p)
+        except Exception:
+            pass
+    return out
+
+
+def test_router_interleaved_mutations_match_single_db():
+    """The router path of the interleaving property: writes through
+    CountingRouter.apply_delta keep merged answers == a single-DB engine
+    on an identically mutated copy, for inserts AND deletes on
+    partitioned and replicated relationships."""
+    db = mixed_db()
+    ref_db = mixed_db()
+    sdb = shard_database(db, 2)
+    router = CountingRouter(sdb, executor="sparse")
+    lattice = build_lattice(db.schema, 2)
+    points = _routable_points(sdb, lattice)
+    rng = np.random.default_rng(8)
+    ref = CountingEngine(ref_db, "sparse", CostStats())
+    for step in range(5):
+        rel = sorted(db.relations)[int(rng.integers(3))]
+        if rng.random() < 0.4 and ref_db.relations[rel].num_edges > 3:
+            tab = ref_db.relations[rel]
+            pick = rng.choice(tab.num_edges, size=2, replace=False)
+            src, dst = tab.src[pick].copy(), tab.dst[pick].copy()
+            router.delete_facts(rel, src, dst)
+            ref_db.delete_facts(rel, src, dst)
+        else:
+            src, dst = fresh_pairs(ref_db, rel, 2, rng)
+            attrs = {a.name: rng.integers(0, a.card, size=2)
+                     .astype(np.int32)
+                     for a in ref_db.relations[rel].type.attrs}
+            router.insert_facts(rel, src, dst, attrs)
+            ref_db.insert_facts(rel, src, dst, attrs)
+        for p in points:
+            got = router.count(p)
+            want = ref.contract(p, None)
+            np.testing.assert_allclose(
+                np.asarray(got.counts), np.asarray(want.counts), atol=1e-3,
+                err_msg=f"step={step} rel={rel} {p}")
+    assert router.stats()["router"]["deltas"] == 5
+
+
+def test_router_complete_ct_matches_single_db():
+    """Complete-CT routing: positive fan-out + front-end Möbius equals
+    single-database complete_ct, for full and partial keeps."""
+    db = mixed_db()
+    sdb = shard_database(db, 3)
+    router = CountingRouter(sdb, executor="sparse")
+    lattice = build_lattice(db.schema, 2)
+    points = _routable_points(sdb, lattice)
+    ref_eng = CountingEngine(mixed_db(), "sparse", CostStats())
+    policy = OnDemandPositives(ref_eng)
+    rng = np.random.default_rng(10)
+    queries = []
+    for p in points:
+        pool = list(p.all_ct_vars(db.schema, include_rind=True))
+        queries.append((p, None))
+        pick = rng.choice(len(pool), size=max(1, len(pool) // 2),
+                          replace=False)
+        queries.append((p, tuple(pool[i] for i in sorted(pick))))
+    tabs = router.complete_many(queries)
+    for (p, keep), got in zip(queries, tabs):
+        if keep is None:
+            keep = p.all_ct_vars(db.schema, include_rind=True)
+        want = complete_ct(p, tuple(keep), policy)
+        assert got.vars == want.vars
+        np.testing.assert_allclose(np.asarray(got.counts),
+                                   np.asarray(want.counts), atol=1e-3,
+                                   err_msg=str(p))
+    assert router.stats()["router"]["complete_requests"] == len(queries)
+    # repeats are served from the router's complete-table cache
+    before = router.stats()["aggregate"]["requests"]
+    router.count_complete(points[0])
+    assert router.stats()["aggregate"]["requests"] == before
+
+
+def test_router_concurrent_writes_never_tear_merges():
+    """Fan-out merges linearize around router writes: under concurrent
+    client threads, every merged answer equals SOME version's single-DB
+    oracle — never a mix of shard states from both sides of a delta."""
+    db = mixed_db()
+    ref_db = mixed_db()     # mutated in lock-step: partitioned-relation
+    sdb = shard_database(db, 2)   # writes land only in the shard tables
+    router = CountingRouter(sdb, executor="sparse", max_batch_size=4)
+    lattice = build_lattice(db.schema, 2)
+    points = _routable_points(sdb, lattice)
+    rng = np.random.default_rng(13)
+    states = {}
+
+    def snapshot_oracle():
+        states[len(states)] = {
+            p: oracle_ct(ref_db, p, p.all_ct_vars(db.schema,
+                                                  include_rind=False),
+                         require_positive=True) for p in points}
+
+    snapshot_oracle()
+    errors, observations = [], []
+    stop = threading.Event()
+
+    def client(seed):
+        r = np.random.default_rng(seed)
+        while not stop.is_set():
+            p = points[int(r.integers(len(points)))]
+            try:
+                observations.append((p,
+                                     np.asarray(router.count(p).counts)))
+            except Exception as e:               # pragma: no cover
+                errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(s,)) for s in range(3)]
+    for t in threads:
+        t.start()
+    for _ in range(4):
+        rel = sorted(ref_db.relations)[int(rng.integers(3))]
+        src, dst = fresh_pairs(ref_db, rel, 2, rng)
+        attrs = {a.name: rng.integers(0, a.card, size=2).astype(np.int32)
+                 for a in ref_db.relations[rel].type.attrs}
+        router.apply_delta(rel, src, dst, attrs)
+        ref_db.insert_facts(rel, src, dst, attrs)
+        snapshot_oracle()
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors, errors[:2]
+    assert observations
+    for p, got in observations:
+        assert any(np.allclose(got, s[p], atol=1e-3)
+                   for s in states.values()), (p, got)
+
+
+# --------------------------------------------- router: online rebalancing ----
+
+def test_rebalance_under_concurrent_flood_loses_nothing():
+    """Acceptance: rebalance() during a query flood — every query
+    resolves (none lost, none erroring) and every answer equals the
+    single-DB value; afterwards the new shard set still partitions the
+    data exactly."""
+    db = mixed_db()
+    sdb = shard_database(db, 2)
+    router = CountingRouter(sdb, executor="sparse", max_batch_size=4)
+    lattice = build_lattice(db.schema, 2)
+    points = _routable_points(sdb, lattice)
+    eng = CountingEngine(mixed_db(), "sparse", CostStats())
+    ref = {p: np.asarray(eng.contract(p, None).counts) for p in points}
+    errors = []
+    done = []
+
+    def client(seed):
+        rng = np.random.default_rng(seed)
+        for _ in range(15):
+            p = points[int(rng.integers(len(points)))]
+            try:
+                tab = router.count(p)
+                np.testing.assert_allclose(np.asarray(tab.counts), ref[p],
+                                           atol=1e-3)
+                done.append(1)
+            except Exception as e:
+                errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(s,))
+               for s in range(4)]
+    for t in threads:
+        t.start()
+    first = router.rebalance(0)
+    second = router.rebalance(1)
+    for t in threads:
+        t.join()
+    assert not errors, errors[:2]
+    assert len(done) == 4 * 15                   # no query lost
+    assert (first, second) == (2, 3)
+    assert router.n_shards == 4
+    assert router.stats()["router"]["rebalances"] == 2
+    # partition invariants on the new generation
+    new_sdb = router.sdb
+    for name in new_sdb.partitioned:
+        total = sum(s.relations[name].num_edges for s in new_sdb.shards)
+        assert total == db.relations[name].num_edges
+    for s in new_sdb.shards:
+        s.validate()
+    # merged answers unchanged by the re-partitioning
+    for p in points:
+        np.testing.assert_allclose(np.asarray(router.count(p).counts),
+                                   ref[p], atol=1e-3)
+
+
+def test_rebalance_auto_trigger_and_split_limits():
+    db = mixed_db()
+    sdb = shard_database(db, 2, n_buckets=4)
+    # threshold low enough that the first insert trips a split
+    router = CountingRouter(sdb, executor="sparse", rebalance_rows=1)
+    rng = np.random.default_rng(11)
+    src, dst = fresh_pairs(db, "R0", 3, rng)
+    router.insert_facts("R0", src, dst,
+                        {"e0": rng.integers(0, 2, size=3).astype(np.int32)})
+    assert router.stats()["router"]["rebalances"] >= 1
+    assert router.n_shards > 2
+    # a shard down to one bucket refuses to split further
+    sdb2 = shard_database(mixed_db(), 2, n_buckets=2)
+    with pytest.raises(ValueError):
+        sdb2.split_shard(0)
