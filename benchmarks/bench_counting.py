@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import itertools
 import json
+import statistics
 import time
 from dataclasses import dataclass
 from pathlib import Path
@@ -416,32 +417,41 @@ def bench_sharded_flood(n_shards: int = 2, n_rels: int = 16,
     config = f"shard{n_shards}x{n_rels}x{edges}r{rounds}"
     out: List[dict] = []
 
+    # Each round is timed on its own and the *median* round wall drives the
+    # reported q/s: one flood round is only a few ms, so a single scheduler
+    # hiccup or GC pause in a summed wall would swing the sharded/single
+    # ratio by 2x.  ``wall_s`` in the records stays the summed wall.
+
     # ---- single-database service (the baseline) ----------------------------
     eng = CountingEngine(db, "sparse", CostStats())
     svc = CountingService(eng, max_batch_size=max(n_rels, 1))
     eng.cache.evict_all()
     jax.block_until_ready([t.counts for t in svc.count_many(queries)])
-    t0 = time.perf_counter()
+    walls: List[float] = []
     for _ in range(rounds):
         eng.cache.evict_all()
+        t0 = time.perf_counter()
         jax.block_until_ready([t.counts for t in svc.count_many(queries)])
-    wall_single = time.perf_counter() - t0
-    qps_single = n_queries / wall_single
+        walls.append(time.perf_counter() - t0)
+    wall_single = sum(walls)
+    qps_single = len(queries) / statistics.median(walls)
 
     # ---- sharded router ----------------------------------------------------
     sdb = shard_database(db, n_shards)
     router = CountingRouter(sdb, executor="sparse",
                             max_batch_size=max(n_rels, 1))
     jax.block_until_ready([t.counts for t in router.count_many(queries)])
-    t0 = time.perf_counter()
+    walls = []
     for _ in range(rounds):
         for e in router.engines:
             e.cache.evict_all()
         router.invalidate()      # keep measuring fan-out+merge, not the
-        jax.block_until_ready([  # router's own result cache
+        t0 = time.perf_counter()  # router's own result cache
+        jax.block_until_ready([
             t.counts for t in router.count_many(queries)])
-    wall_sharded = time.perf_counter() - t0
-    qps_sharded = n_queries / wall_sharded
+        walls.append(time.perf_counter() - t0)
+    wall_sharded = sum(walls)
+    qps_sharded = len(queries) / statistics.median(walls)
 
     ratio = qps_sharded / qps_single if qps_single > 0 else float("inf")
     rs = router.stats()["router"]

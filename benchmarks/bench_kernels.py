@@ -72,6 +72,44 @@ def bench_hist() -> List[dict]:
     return rows
 
 
+def bench_segsum() -> List[dict]:
+    """The sparse executors' scatter-add hop: Pallas one-hot contraction
+    (interpret mode here) vs the ``jax.ops.segment_sum`` reference, over
+    edge-count x segment-space shapes spanning leaf hops (``d`` absent,
+    weighted ones) and dense-message hops.  Segment spaces mirror the
+    flattened ``(parent, code)`` ids the executor actually emits,
+    including out-of-range padding."""
+    rows = []
+    rng = np.random.default_rng(3)
+    for n, p, d in ((800, 256, None), (4096, 1024, None),
+                    (800, 256, 16), (4096, 2048, 64)):
+        # +3: a few ids beyond the segment space, like edge-bucket padding
+        seg = jnp.asarray(rng.integers(0, p + 3, size=n, dtype=np.int32))
+        if d is None:
+            w = jnp.asarray(rng.uniform(0, 2, size=n).astype(np.float32))
+            want = ref.ones_segment_sum_ref(seg, w, p)
+            got = ops.ones_segment_sum(seg, w, p, interpret=True)
+            us_ref = _time(lambda s, v: ref.ones_segment_sum_ref(s, v, p),
+                           seg, w)
+            us_int = _time(lambda s, v: ops.ones_segment_sum(
+                s, v, p, interpret=True), seg, w, reps=1)
+        else:
+            w = jnp.asarray(rng.uniform(0, 2, size=(n, d)).astype(np.float32))
+            want = ref.edge_segment_sum_ref(seg, w, p)
+            got = ops.edge_segment_sum(seg, w, p, interpret=True)
+            us_ref = _time(lambda s, v: ref.edge_segment_sum_ref(s, v, p),
+                           seg, w)
+            us_int = _time(lambda s, v: ops.edge_segment_sum(
+                s, v, p, interpret=True), seg, w, reps=1)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-2)
+        rows.append({"kernel": "segment_sum", "n": n, "segments": p,
+                     "d": d or 1,
+                     "mode": "ones" if d is None else "rows",
+                     "us_ref": round(us_ref, 1),
+                     "us_interpret": round(us_int, 1)})
+    return rows
+
+
 def bench_bdeu() -> List[dict]:
     rows = []
     key = jax.random.PRNGKey(2)
@@ -88,8 +126,9 @@ def bench_bdeu() -> List[dict]:
     return rows
 
 
-def main(out_dir: str = "results/bench") -> List[dict]:
-    rows = bench_mobius() + bench_hist() + bench_bdeu()
+def main(out_dir: str = "results/bench",
+         bench_json: str = "BENCH_counting.json") -> List[dict]:
+    rows = bench_mobius() + bench_hist() + bench_segsum() + bench_bdeu()
     for r in rows:
         print("[kernels] " + ",".join(f"{k}={v}" for k, v in r.items()),
               flush=True)
@@ -97,6 +136,19 @@ def main(out_dir: str = "results/bench") -> List[dict]:
     out.mkdir(parents=True, exist_ok=True)
     (out / "kernels.json").write_text(json.dumps(rows, indent=1))
     print(f"[kernels] wrote {out / 'kernels.json'}")
+    # the segment-sum rows also join the cross-PR counting trajectory:
+    # they time the executors' innermost hop primitive, so a kernel-side
+    # regression shows up next to the serve/flood history it would cause
+    if bench_json:
+        path = Path(bench_json)
+        try:
+            history = json.loads(path.read_text()) if path.exists() else []
+        except json.JSONDecodeError:
+            history = []
+        history.extend({"bench": "kernel_segsum", **r} for r in rows
+                       if r["kernel"] == "segment_sum")
+        path.write_text(json.dumps(history, indent=1))
+        print(f"[kernels] appended segment_sum rows to {path}")
     return rows
 
 

@@ -14,7 +14,15 @@ laptops and CI runners, unlike absolute q/s):
 * it must not fall more than ``REGRESSION_FACTOR``x below the best
   speedup previously recorded for the same flood config in the
   trajectory, and
-* the reduced counting runs must complete within their budget.
+* the reduced counting runs must complete within their budget, and
+* the sharded flood must hold >= ``MIN_SHARDED_RATIO`` of single-DB
+  throughput (the router's fan-out merge fast path), also
+  regression-checked against the trajectory, and
+* the Pallas segment-sum kernel must match the XLA scatter path
+  bit-for-bit in interpret mode (CPU CI's only way to execute the
+  kernel body), and
+* full-scale VisualGenome under a tight cache budget must complete
+  within its budget (skippable via ``PERF_SMOKE_SKIP_VG=1``).
 
 First run on a fresh history simply records the baseline and passes.
 
@@ -37,14 +45,27 @@ MIN_BATCHED_SPEEDUP = 2.0     # the serve layer's reason to exist
 # positive + batched Möbius transform must beat per-family dispatch
 SMOKE_NEG_FLOOD = dict(n_rels=8, edges=800, rounds=3)
 MIN_NEG_BATCHED_SPEEDUP = 2.0
-# sharded-vs-single is recorded (trajectory dimension), not gated: on one
-# CI host the router measures merge overhead, not the n-hosts scan win
+# sharded-vs-single IS gated: the router's fan-out fast path reassembles
+# the shard packs into one single-cost dispatch, so even on one CI host
+# (where no scan parallelism exists) sharding must not cost more than a
+# 10% routing overhead — regressions here mean the merge path fell back
+# to per-shard dispatch + host merging
 SMOKE_SHARDS = (2,)
 SMOKE_SHARD_KW = dict(n_rels=8, edges=800, rounds=3)
+MIN_SHARDED_RATIO = 0.9
 # the mutation flood gates the freshness model: fenced delta maintenance
 # must beat flush-and-recount on an insert-heavy write/read mix
 SMOKE_MUT_FLOOD = dict(n_rels=6, edges=100000, delta_edges=128, rounds=2)
 MIN_MUT_SPEEDUP = 2.0
+# the paper's headline config as a standing CI gate: full-scale
+# VisualGenome (15.8M rows) under a deliberately tight cache budget —
+# the LRU must keep evicting, so both counting phases and cache
+# admission stay on the measured path.  Gated on completion within the
+# budget plus a wall-clock regression check vs the recorded trajectory.
+# Skippable for quick local iterations with PERF_SMOKE_SKIP_VG=1.
+VG_FULL_SCALE = dict(dataset="VisualGenome", strategy="HYBRID",
+                     executor="sparse", scale=1.0, budget_s=420.0,
+                     cache_budget_bytes=64 * 1024 * 1024)
 
 
 def flood_config_tag() -> str:
@@ -61,6 +82,83 @@ def mut_flood_config_tag() -> str:
     f = SMOKE_MUT_FLOOD
     return (f"mutflood{f['n_rels']}x{f['edges']}"
             f"d{f['delta_edges']}r{f['rounds']}")
+
+
+def shard_config_tag(n_shards: int) -> str:
+    f = SMOKE_SHARD_KW
+    return f"shard{n_shards}x{f['n_rels']}x{f['edges']}r{f['rounds']}"
+
+
+def prior_sharded_ratio(history: list, config: str) -> float:
+    """Best recorded sharded-over-single ratio for one shard config."""
+    best = 0.0
+    for rec in history:
+        if (rec.get("bench") == "sharded_flood"
+                and rec.get("mode") == "sharded"
+                and rec.get("config") == config):
+            best = max(best, float(rec.get("ratio_vs_single", 0.0)))
+    return best
+
+
+def prior_vg_wall(history: list) -> float:
+    """Best (lowest) recorded full-scale VisualGenome wall seconds."""
+    best = 0.0
+    for rec in history:
+        if (rec.get("bench") == "vg_full_scale"
+                and rec.get("completed")):
+            w = float(rec.get("wall_s", 0.0))
+            best = w if best == 0.0 else min(best, w)
+    return best
+
+
+def check_kernel_parity() -> list:
+    """CPU-CI kernel coverage: assert the backend probe resolves to the
+    Pallas *interpreter* here (no accelerator), then force the sparse
+    executors' scatter-add through the kernel (``REPRO_SEGSUM_PALLAS=1``)
+    and require bit-identical counts vs the XLA segment-sum path.  This is
+    what keeps the Mosaic/Triton code path honest on hosts that cannot
+    lower it natively."""
+    import os
+
+    import numpy as np
+
+    from repro.core.contract import CostStats
+    from repro.core.database import paper_benchmark_db
+    from repro.core.engine import CountingEngine
+    from repro.core.variables import build_lattice
+    from repro.kernels import ops
+
+    failures = []
+    if jax_backend() != "cpu":
+        return failures                 # probe semantics covered by tests
+    if ops.default_interpret() is not True:
+        failures.append("kernel_parity: default_interpret() is not True on "
+                        "a CPU host — the backend probe is broken")
+        return failures
+    db = paper_benchmark_db("UW", seed=0, scale=0.25)
+    points = build_lattice(db.schema, 2)[:4]
+    eng = CountingEngine(db, "sparse", CostStats())
+    want = [np.asarray(eng.contract(p).counts) for p in points]
+    os.environ["REPRO_SEGSUM_PALLAS"] = "1"
+    try:
+        eng_k = CountingEngine(db, "sparse", CostStats())
+        for p, w in zip(points, want):
+            got = np.asarray(eng_k.contract(p).counts)
+            if not np.array_equal(got, w):
+                failures.append(
+                    f"kernel_parity: interpret-mode Pallas segment-sum "
+                    f"diverges from XLA on {p}")
+    finally:
+        os.environ.pop("REPRO_SEGSUM_PALLAS", None)
+    if not failures:
+        print("[perf-smoke] kernel parity OK (Pallas segment-sum, "
+              "interpret mode on CPU)", flush=True)
+    return failures
+
+
+def jax_backend() -> str:
+    import jax
+    return jax.default_backend()
 
 
 def prior_batched_speedup(history: list, config: str,
@@ -94,6 +192,9 @@ def main() -> int:
     mut_baseline = prior_batched_speedup(
         history, mut_flood_config_tag(), bench="mutation_flood",
         field="speedup_vs_recount", mode="delta")
+    shard_baselines = {n: prior_sharded_ratio(history, shard_config_tag(n))
+                       for n in SMOKE_SHARDS}
+    vg_baseline = prior_vg_wall(history)
 
     art = bench_counting.main(
         datasets=("UW",), scale=0.25, budget_s=120.0, spotlight=False,
@@ -126,22 +227,70 @@ def main() -> int:
                     f"{bench}/{ex}: batched speedup {speedup:.2f}x is a "
                     f">{REGRESSION_FACTOR:.0f}x regression vs recorded "
                     f"{prior:.2f}x")
+    for rec in art.get("sharded_flood", []):
+        if rec.get("mode") != "sharded":
+            continue
+        ratio = float(rec.get("ratio_vs_single", 0.0))
+        if ratio < MIN_SHARDED_RATIO:
+            failures.append(
+                f"sharded_flood/{rec['config']}: sharded throughput is "
+                f"{ratio:.2f}x single-DB, below the "
+                f"{MIN_SHARDED_RATIO:.1f}x bar — the fan-out merge fast "
+                f"path is not engaging")
+        prior = shard_baselines.get(int(rec.get("shards", 0)), 0.0)
+        if prior and ratio * REGRESSION_FACTOR < prior:
+            failures.append(
+                f"sharded_flood/{rec['config']}: ratio {ratio:.2f}x is a "
+                f">{REGRESSION_FACTOR:.0f}x regression vs recorded "
+                f"{prior:.2f}x")
     for rec in art["runs"]:
         if not rec["completed"]:
             failures.append(
                 f"{rec['dataset']}/{rec['strategy']}/{rec['executor']}: "
                 f"smoke run exceeded its budget")
 
+    failures.extend(check_kernel_parity())
+
+    import os
+    if not os.environ.get("PERF_SMOKE_SKIP_VG"):
+        vg_kw = dict(VG_FULL_SCALE)
+        r = bench_counting.run_one(
+            vg_kw.pop("dataset"), vg_kw.pop("strategy"), **vg_kw)
+        vg_rec = {"bench": "vg_full_scale",
+                  "config": "vg1.0cache64MB", **r.as_dict()}
+        print(f"[perf-smoke] vg_full_scale rows={r.rows} "
+              f"wall={r.wall_s}s completed={r.completed}", flush=True)
+        if not r.completed:
+            failures.append(
+                f"vg_full_scale: VisualGenome scale=1.0 exceeded its "
+                f"{VG_FULL_SCALE['budget_s']:.0f}s budget under the tight "
+                f"cache budget")
+        elif vg_baseline and r.wall_s > vg_baseline * REGRESSION_FACTOR:
+            failures.append(
+                f"vg_full_scale: wall {r.wall_s:.0f}s is a "
+                f">{REGRESSION_FACTOR:.0f}x regression vs recorded "
+                f"{vg_baseline:.0f}s")
+        try:
+            hist = json.loads(path.read_text()) if path.exists() else []
+        except json.JSONDecodeError:
+            hist = []
+        hist.append(vg_rec)
+        path.write_text(json.dumps(hist, indent=1))
+
     if failures:
         for f in failures:
             print(f"[perf-smoke] FAIL: {f}", flush=True)
         return 1
-    gated = ", ".join(
+    parts = [
         f"{bench}:{ex}>={s / REGRESSION_FACTOR:.1f}x"
         for bench, prior_best in (("flood", baseline),
                                   ("negflood", neg_baseline),
                                   ("mutflood", mut_baseline))
-        for ex, s in prior_best.items()) or "baseline recorded"
+        for ex, s in prior_best.items()]
+    parts += [
+        f"shard{n}>={max(MIN_SHARDED_RATIO, r / REGRESSION_FACTOR):.2f}x"
+        for n, r in shard_baselines.items() if r > 0]
+    gated = ", ".join(parts) or "baseline recorded"
     print(f"[perf-smoke] OK (speedup gate: {gated})", flush=True)
     return 0
 

@@ -59,6 +59,23 @@ def _pad_to(arr: np.ndarray, mult: int) -> Tuple[np.ndarray, np.ndarray]:
     return arr, w
 
 
+def _segsum_shard_kernel(total: int):
+    """Per-rank Pallas scatter-add bodies for a ``shard_map`` closure, or
+    ``None`` to stay on ``jax.ops.segment_sum``.  Resolved once when the
+    closure is built — the cached jitted ``shard_map`` bakes the backend
+    choice in, so the env override must be set before the first hop."""
+    from ..kernels import ops as kernel_ops
+    if not kernel_ops.segsum_kernel_enabled(total):
+        return None
+    from types import SimpleNamespace
+    from ..kernels.segsum_kernel import (segment_sum_ones_pallas,
+                                         segment_sum_rows_pallas)
+    interp = kernel_ops.default_interpret()
+    return SimpleNamespace(
+        ones=functools.partial(segment_sum_ones_pallas, interpret=interp),
+        rows=functools.partial(segment_sum_rows_pallas, interpret=interp))
+
+
 def _sharded_hop(mesh: Mesh, axis: str, n_parent: int, n_hot: int, dtype,
                  value_axis: Optional[str] = None):
     """Build the shard_map'd join hop for a given arity.
@@ -286,11 +303,20 @@ class ShardedSparseExecutor(SparseExecutor):
     def _build_edge_ones(self, key: Tuple):
         _, total, _ = key
         ax = self.axis
+        # backend routing is resolved at BUILD time (the closure is cached
+        # per key): each rank's local scatter-add runs the Pallas kernel
+        # when enabled — the mesh-padding 0/1 mask rides along as the
+        # kernel's weight vector — and the psum merges ranks either way
+        kernel = _segsum_shard_kernel(total)
 
         def ones_hop(seg_l, w_l):
             self._count_trace(key)
-            out = jax.ops.segment_sum(w_l.astype(self.dtype), seg_l,
-                                      num_segments=total)
+            if kernel is not None:
+                out = kernel.ones(seg_l, w_l.astype(jnp.float32),
+                                  total).astype(self.dtype)
+            else:
+                out = jax.ops.segment_sum(w_l.astype(self.dtype), seg_l,
+                                          num_segments=total)
             return jax.lax.psum(out, ax)
 
         return jax.jit(shard_map(ones_hop, mesh=self.mesh,
@@ -300,10 +326,14 @@ class ShardedSparseExecutor(SparseExecutor):
     def _build_edge_dense(self, key: Tuple):
         _, total, _, _ = key
         ax = self.axis
+        kernel = _segsum_shard_kernel(total)
 
         def dense_hop(seg_l, rows_l):
             self._count_trace(key)
-            out = jax.ops.segment_sum(rows_l, seg_l, num_segments=total)
+            if kernel is not None:
+                out = kernel.rows(seg_l, rows_l, total).astype(self.dtype)
+            else:
+                out = jax.ops.segment_sum(rows_l, seg_l, num_segments=total)
             return jax.lax.psum(out, ax)
 
         return jax.jit(shard_map(dense_hop, mesh=self.mesh,
@@ -429,6 +459,38 @@ def sharded_sparse_positive_ct(db: RelationalDB, point: LatticePoint,
     ex = ShardedSparseExecutor(dtype=dtype, mesh=mesh, axis=axis)
     plan = compile_plan_cached(db.schema, point, tuple(keep))
     return ex.positive(db, plan, stats)
+
+
+def merge_stacked(stacked: jnp.ndarray, axis_name: str = "data"
+                  ) -> jnp.ndarray:
+    """Device reduction of a ``(n_partials, ...)`` stack of same-shape
+    count tables — the router's merge step, meant to be traced inside one
+    jitted dispatch (see :class:`~repro.serve.batching.TableMerger`).
+
+    With at least one device per partial the stack is laid over a fresh
+    ``data`` mesh and tree-merged with a ``psum`` — each shard's partial
+    is reduced where it lives, one collective instead of ``n - 1``
+    sequential adds.  On fewer devices (the one-host case) it is a single
+    stacked ``jnp.sum``.  Exact either way: counts are integers and
+    addition is associative, so no reassociation error exists to care
+    about.
+
+    Usage::
+
+        merged = merge_stacked(jnp.stack([tab_a, tab_b]))
+    """
+    n = int(stacked.shape[0])
+    if n == 1:
+        return stacked[0]
+    devs = jax.devices()
+    if len(devs) >= n:
+        mesh = Mesh(np.asarray(devs[:n]), (axis_name,))
+        red = shard_map(
+            lambda x: jax.lax.psum(jnp.sum(x, axis=0), axis_name),
+            mesh=mesh, in_specs=P(axis_name), out_specs=P(),
+            check_vma=False)
+        return red(stacked)
+    return jnp.sum(stacked, axis=0)
 
 
 def superset_mobius_sharded(stack: jnp.ndarray, k: int, *, mesh: Mesh,

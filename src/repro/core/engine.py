@@ -138,6 +138,9 @@ class CountingEngine:
         # too, or a service-computed table recomputed by a policy after
         # eviction would be counted twice
         self.rows_counted: Set[Tuple] = set()
+        # default-keep memo: all_ct_vars walks the schema per call and a
+        # serve flood resolves keep=None for the same points every round
+        self._keep_cache: Dict[Tuple, Tuple[CtVar, ...]] = {}
 
     def count_rows_once(self, key: Tuple, tab: CtTable) -> None:
         if key not in self.rows_counted:
@@ -147,7 +150,11 @@ class CountingEngine:
     def plan(self, point: LatticePoint,
              keep: Optional[Sequence[CtVar]] = None) -> ContractionPlan:
         if keep is None:
-            keep = point.all_ct_vars(self.db.schema, include_rind=False)
+            keep = self._keep_cache.get(point.atoms)
+            if keep is None:
+                keep = tuple(point.all_ct_vars(self.db.schema,
+                                               include_rind=False))
+                self._keep_cache[point.atoms] = keep
         return compile_plan_cached(self.db.schema, point, tuple(keep))
 
     def contract(self, point: LatticePoint,

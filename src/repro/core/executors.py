@@ -60,6 +60,22 @@ def project_columns(m: jnp.ndarray, mvars: Tuple[CtVar, ...],
     return wide.reshape(m.shape[0], -1), want
 
 
+def _finalise_layout(plan: "ContractionPlan", fvars: Sequence[CtVar]
+                     ) -> Optional[Tuple[Tuple[int, ...], Tuple[int, ...]]]:
+    """The static ``(table shape, transpose perm)`` that :func:`_finalise`
+    would apply to a plan's flat result — precomputable, so stacked
+    execution can fuse reshape+transpose into the jitted dispatch.
+    ``None`` when the request order is not a permutation of the flat vars
+    (then the host-side :func:`_finalise` must handle it)."""
+    fvars = tuple(fvars)
+    order = tuple(v for v in plan.keep if v in fvars)
+    if set(order) != set(fvars) or len(order) != len(fvars):
+        return None
+    shape = tuple(v.card for v in fvars)
+    perm = tuple(fvars.index(v) for v in order)
+    return shape, perm
+
+
 def _finalise(flat: jnp.ndarray, mvars: Sequence[CtVar],
               keep: Sequence[CtVar], stats: Optional[CostStats]) -> CtTable:
     mvars = tuple(mvars)
@@ -289,27 +305,81 @@ class Executor:
         """One vmapped execution of stack-compatible plans.  The batch axis
         is padded to the next power of two (padding replays the first plan)
         so the jit cache is keyed by a handful of sizes, not every flood
-        length seen."""
+        length seen.  The stacked device inputs are cached per (store
+        version, plan list): a repeated flood over an unchanged store
+        re-dispatches without re-staging a single host byte — any write
+        bumps ``db.version`` and naturally misses."""
         template = plans[0]
-        packs = [plan_input_arrays(db, p) for p in plans]
         b = len(plans)
         b_pad = 1 << max(b - 1, 0).bit_length()
-        packs = packs + [packs[0]] * (b_pad - b)
-        stacked = tuple(jnp.asarray(np.stack([p[j] for p in packs]))
-                        for j in range(len(packs[0])))
-        fn = self._stacked_fn(db, template, b_pad)
-        flat = fn(*stacked)
+        stacked = self._staged_inputs(db, plans, b_pad)
+        # finalise (reshape to table shape + transpose to request order) is
+        # fused INTO the jitted dispatch when every plan in the group
+        # shares the template's layout — the flood case — killing two
+        # eager dispatches per plan per shard; mixed-layout groups fall
+        # back to host-side finalise
+        t_layout = _finalise_layout(template, self._flat_vars(template))
+        fused = t_layout is not None and all(
+            _finalise_layout(p, self._flat_vars(p)) == t_layout
+            for p in plans[1:])
+        fn = self._stacked_fn(db, template, b_pad,
+                              t_layout if fused else None)
+        rows = fn(*stacked)                       # drops the pad rows
         out: List[CtTable] = []
-        for plan, row in zip(plans, flat):        # drops the pad rows
-            out.append(_finalise(row, self._flat_vars(plan), plan.keep,
-                                 stats))
+        for plan, row in zip(plans, rows):
+            if fused:
+                fvars = self._flat_vars(plan)
+                out_vars = tuple(fvars[i] for i in t_layout[1])
+                out.append(CtTable(out_vars, row))
+                if stats is not None:
+                    stats.ct_cells += int(np.prod(t_layout[0],
+                                                  dtype=np.int64))
+            else:
+                out.append(_finalise(row, self._flat_vars(plan), plan.keep,
+                                     stats))
             if stats is not None:
                 _count_plan_joins(db, plan, stats)
         return out
 
+    def _staged_inputs(self, db: RelationalDB,
+                       plans: Sequence[ContractionPlan],
+                       b_pad: int) -> Tuple[jnp.ndarray, ...]:
+        """The plans' input packs stacked on device, batch axis padded to
+        ``b_pad`` by replaying plan 0 — cached per (db, store version,
+        plan list).  Plans come out of ``compile_plan_cached``, so
+        identical queries hand back the SAME plan objects — id() keys
+        hash as plain ints (the structural plan key costs more to hash
+        than the staging saves) and the cached entry pins the plan list
+        so no id is ever reused while its key is live.  ``id(db)`` is in
+        the key because shard databases SHARE plan objects (one schema,
+        one compile cache) and may share version counters."""
+        in_key = ("stacked_inputs", id(db), db.version,
+                  tuple(id(p) for p in plans), b_pad)
+        hit = self._batch_cache.get(in_key)
+        if hit is not None and hit[0] is db:
+            return hit[2]
+        packs = [plan_input_arrays(db, p) for p in plans]
+        packs = packs + [packs[0]] * (b_pad - len(plans))
+        stacked = tuple(jnp.asarray(np.stack([p[j] for p in packs]))
+                        for j in range(len(packs[0])))
+        self._trim_input_cache()
+        self._batch_cache[in_key] = (db, list(plans), stacked)
+        return stacked
+
+    _MAX_INPUT_CACHE = 128
+
+    def _trim_input_cache(self) -> None:
+        """Bound the staged-input entries in ``_batch_cache`` (jitted fns
+        are tiny and stay; staged input stacks hold device memory)."""
+        staged = [k for k in self._batch_cache
+                  if isinstance(k, tuple) and k
+                  and k[0] in ("stacked_inputs", "fanout_inputs")]
+        while len(staged) >= self._MAX_INPUT_CACHE:
+            self._batch_cache.pop(staged.pop(0), None)
+
     def _stacked_fn(self, db: RelationalDB, template: ContractionPlan,
-                    b_pad: int):
-        key = (plan_stack_key(db, template), b_pad)
+                    b_pad: int, layout=None):
+        key = (plan_stack_key(db, template), b_pad, layout)
         hit = self._batch_cache.get(key)
         if hit is not None and hit[0] is db:
             return hit[1]
@@ -318,10 +388,201 @@ class Executor:
             cur = _ArrayCursor(arrays)
             flat = self._flat_from_arrays(db, template, cur)
             assert cur.exhausted, "plan evaluator out of sync with inputs"
-            return flat
+            if layout is None:
+                return flat
+            shape, perm = layout          # fused finalise (see caller)
+            y = flat.reshape(shape)
+            if perm != tuple(range(len(perm))):
+                y = jnp.transpose(y, perm)
+            return y
 
-        fn = jax.jit(jax.vmap(one))
+        vm = jax.vmap(one)
+
+        def run(*arrays):
+            y = vm(*arrays)
+            # per-plan results sliced INSIDE the jit: callers get a tuple
+            # of ready tables, not b eager gather dispatches
+            return tuple(y[i] for i in range(b_pad))
+
+        fn = jax.jit(run)
         self._batch_cache[key] = (db, fn)
+        return fn
+
+    # -- cross-shard fused evaluation (router flood path) -------------------
+    def stacked_layout(self, plan: ContractionPlan):
+        """Fused finalise layout of one plan — ``(shape, perm)`` when the
+        flat counts can be reshaped + transposed to the request order
+        inside the jit, ``None`` otherwise (see :func:`_finalise_layout`).
+        Raises ``NotImplementedError`` for backends without a traced
+        evaluator."""
+        return _finalise_layout(plan, self._flat_vars(plan))
+
+    def positive_stacked_merged(self, dbs: Sequence[RelationalDB],
+                                executors: Sequence["Executor"],
+                                plans: Sequence[ContractionPlan],
+                                stats_list: Optional[Sequence[
+                                    Optional[CostStats]]] = None
+                                ) -> Tuple[List[List[CtTable]],
+                                           List[CtTable]]:
+        """ONE jitted dispatch for a whole cross-shard flood group: every
+        shard's stacked input pack is evaluated under the same trace and
+        the per-plan tables are summed over the shard axis inside the jit
+        — the per-shard tables (for the shard services' caches) and the
+        merged tables (for the router) come back from the same call, so a
+        2-shard flood costs one dispatch instead of two shard dispatches
+        plus a merge dispatch.
+
+        The caller (``CountingRouter._flush_fused``) must pre-check
+        feasibility: the SAME plan objects on every shard, equal
+        :func:`plan_stack_key` per plan across all shard databases (entity
+        tables are replicated and edge arrays pad to shared pow2 buckets,
+        so this is the common case), and one shared non-``None``
+        :meth:`stacked_layout` across the group's plans.
+
+        Args:
+            dbs: one shard database per shard.
+            executors: the shard executors (staging caches stay per
+                shard); ``self`` compiles and owns the fused function.
+            plans: the group's plans (identical objects on every shard).
+            stats_list: per-shard :class:`~repro.core.contract.CostStats`;
+                accounting matches each shard running the plans itself.
+
+        Returns:
+            ``(per_shard, merged)`` — ``per_shard[s][q]`` is shard ``s``'s
+            table for plan ``q``; ``merged[q]`` is their exact sum.
+        """
+        template = plans[0]
+        m = len(plans)
+        b_pad = 1 << max(m - 1, 0).bit_length()
+        layout = self.stacked_layout(template)
+        staged = [ex._staged_inputs(db, plans, b_pad)
+                  for ex, db in zip(executors, dbs)]
+        k = len(staged[0])
+        fn = self._fused_stacked_fn(dbs[0], template, b_pad, len(dbs), k,
+                                    layout)
+        flat = fn(*(a for pack in staged for a in pack))
+        cells = int(np.prod(layout[0], dtype=np.int64))
+        out_vars: List[Tuple[CtVar, ...]] = []
+        for p in plans:
+            fvars = self._flat_vars(p)
+            out_vars.append(tuple(fvars[i] for i in layout[1]))
+        merged = [CtTable(out_vars[q], flat[q]) for q in range(m)]
+        per_shard: List[List[CtTable]] = []
+        for s in range(len(dbs)):
+            rows = flat[b_pad + s * b_pad:b_pad + (s + 1) * b_pad]
+            per_shard.append([CtTable(out_vars[q], rows[q])
+                              for q in range(m)])
+            stats = stats_list[s] if stats_list is not None else None
+            if stats is not None:
+                stats.ct_cells += cells * m
+                for p in plans:
+                    _count_plan_joins(dbs[s], p, stats)
+        return per_shard, merged
+
+    def positive_fanout_merged(self, dbs: Sequence[RelationalDB],
+                               plans: Sequence[ContractionPlan],
+                               partitioned: frozenset,
+                               stats_list: Optional[Sequence[
+                                   Optional[CostStats]]] = None
+                               ) -> List[CtTable]:
+        """Merged fan-out tables at SINGLE-DATABASE cost: instead of
+        evaluating every shard separately and summing tables (which
+        materialises ``n_shards`` full segment spaces), the shards' input
+        arrays are reassembled into the unsharded database's arrays
+        (:func:`fanout_input_arrays`) and evaluated once — the answer IS
+        the merged table, by the same argument that makes the fan-out sum
+        exact (every partitioned edge lives on exactly one shard;
+        replicated tables are identical everywhere).
+
+        The caller must pre-check: a routable fan-out plan group with one
+        shared non-``None`` :meth:`stacked_layout` and equal
+        :func:`fanout_stack_key`.  ``self`` is the front-end's compiling
+        executor (shard 0's); reassembled input stacks are cached per
+        (shard dbs, store versions, plan list) so a repeated flood
+        re-dispatches without touching a host byte.
+
+        Returns one merged :class:`~repro.core.ct.CtTable` per plan.
+        """
+        template = plans[0]
+        m = len(plans)
+        b_pad = 1 << max(m - 1, 0).bit_length()
+        layout = self.stacked_layout(template)
+        in_key = ("fanout_inputs", tuple(id(db) for db in dbs),
+                  tuple(db.version for db in dbs),
+                  tuple(id(p) for p in plans), b_pad)
+        hit = self._batch_cache.get(in_key)
+        if hit is not None and all(a is b for a, b in zip(hit[0], dbs)):
+            stacked = hit[3]
+        else:
+            packs = [fanout_input_arrays(dbs, p, partitioned)
+                     for p in plans]
+            packs = packs + [packs[0]] * (b_pad - m)
+            stacked = tuple(jnp.asarray(np.stack([p[j] for p in packs]))
+                            for j in range(len(packs[0])))
+            self._trim_input_cache()
+            self._batch_cache[in_key] = (tuple(dbs), None, list(plans),
+                                         stacked)
+        # the single-db stacked evaluator retraces on the reassembled
+        # array shapes and is correct as-is: its only database inputs are
+        # replicated static metadata (entity sizes, cards)
+        fn = self._stacked_fn(dbs[0], template, b_pad, layout)
+        rows = fn(*stacked)
+        out: List[CtTable] = []
+        for q, p in enumerate(plans):
+            fvars = self._flat_vars(p)
+            out.append(CtTable(tuple(fvars[i] for i in layout[1]),
+                               rows[q]))
+        if stats_list:
+            for db, stats in zip(dbs, stats_list):
+                if stats is not None:
+                    for p in plans:
+                        _count_plan_joins(db, p, stats)
+            if stats_list[0] is not None:
+                stats_list[0].ct_cells += m * int(
+                    np.prod(layout[0], dtype=np.int64))
+        return out
+
+    def _fused_stacked_fn(self, db0: RelationalDB,
+                          template: ContractionPlan, b_pad: int,
+                          n_shards: int, k: int, layout):
+        """The jitted cross-shard evaluator behind
+        :meth:`positive_stacked_merged`: args are shard-major input packs
+        (``k`` arrays per shard); returns ``b_pad`` merged rows followed
+        by ``n_shards * b_pad`` per-shard rows, all sliced inside the
+        jit.  Traced against shard 0's database — equal stack keys
+        guarantee the static metadata (entity sizes, cards, bucketed edge
+        lengths) matches every shard."""
+        key = ("fused_stacked", plan_stack_key(db0, template), b_pad,
+               n_shards, k, layout)
+        hit = self._batch_cache.get(key)
+        if hit is not None and hit[0] is db0:
+            return hit[1]
+        shape, perm = layout
+
+        def one(*arrays):
+            cur = _ArrayCursor(arrays)
+            flat = self._flat_from_arrays(db0, template, cur)
+            assert cur.exhausted, "plan evaluator out of sync with inputs"
+            y = flat.reshape(shape)
+            if perm != tuple(range(len(perm))):
+                y = jnp.transpose(y, perm)
+            return y
+
+        vm = jax.vmap(one)
+
+        def run(*all_arrays):
+            outs = [vm(*all_arrays[s * k:(s + 1) * k])
+                    for s in range(n_shards)]
+            merged = outs[0]
+            for o in outs[1:]:
+                merged = merged + o
+            rows = [merged[q] for q in range(b_pad)]
+            for s in range(n_shards):
+                rows.extend(outs[s][q] for q in range(b_pad))
+            return tuple(rows)
+
+        fn = jax.jit(run)
+        self._batch_cache[key] = (db0, fn)
         return fn
 
     def _flat_from_arrays(self, db: RelationalDB, plan: ContractionPlan,
@@ -404,16 +665,34 @@ class _ArrayCursor:
         return self.i == len(self.arrays)
 
 
+def _edge_bucket(n: int) -> int:
+    """Bucketed edge-array length: the next power of two at or above
+    ``n`` (floor 16).  Hash-partitioned shards have *ragged*
+    per-relationship edge counts, so keying stacked execution on exact
+    counts would put every shard plan in its own group and fall back to
+    per-plan eager dispatch; bucketing restores stacking at the cost of
+    masked pad rows.  Power-of-two buckets make one group per shard the
+    common case (per-dispatch overhead dominates the extra pad rows —
+    the segment-sum is linear and memory-bound)."""
+    if n <= 0:
+        return 0
+    return max(16, 1 << max(n - 1, 0).bit_length())
+
+
 def plan_stack_key(db: RelationalDB, plan: ContractionPlan) -> Tuple:
     """Stacked-execution key: plans with equal keys against the same
     database run the exact same operation sequence on same-shape arrays
-    (hop-tree topology + entity sizes + edge counts + axis cards), so
-    their input packs can be stacked and evaluated under one ``vmap``."""
+    (hop-tree topology + entity sizes + bucketed edge counts + axis
+    cards), so their input packs can be stacked and evaluated under one
+    ``vmap``.  Edge counts are bucketed (:func:`_edge_bucket`) and the
+    packs padded to match — padded edges scatter to segment ``n_parent``,
+    one past the last real segment, which ``segment_sum`` drops — so
+    plans with nearby edge counts stack exactly."""
     def node(n: NodeSpec) -> Tuple:
         hops = []
         for h in n.hops:
             _, g, _, n_parent = _hop_indices(db, h.atom, h.child, h.parent)
-            hops.append((int(np.asarray(g).shape[0]), n_parent,
+            hops.append((_edge_bucket(int(np.asarray(g).shape[0])), n_parent,
                          tuple(cv.card for cv in h.edge_attrs),
                          node(h.child_node)))
         return (db.entities[n.var.etype].size,
@@ -425,7 +704,13 @@ def plan_input_arrays(db: RelationalDB, plan: ContractionPlan
                       ) -> List[np.ndarray]:
     """The plan's data inputs as a flat host-array list in cursor order
     (see :class:`_ArrayCursor`) — everything an executor reads from the
-    database, ready to be ``np.stack``-ed across stack-compatible plans."""
+    database, ready to be ``np.stack``-ed across stack-compatible plans.
+
+    Edge arrays are padded to :func:`_edge_bucket` length to match
+    :func:`plan_stack_key`: pad gathers read row 0 (any valid row), pad
+    scatters target segment ``n_parent`` — out of range, so XLA's scatter
+    drops them — and pad edge-attr entries are 0.  The padded evaluation
+    is therefore numerically identical to the exact-length one."""
     arrs: List[np.ndarray] = []
 
     def node(n: NodeSpec) -> None:
@@ -434,14 +719,88 @@ def plan_input_arrays(db: RelationalDB, plan: ContractionPlan
             arrs.append(np.asarray(tab.attrs[cv.owner[1]]))
         for h in n.hops:
             node(h.child_node)
-            rt, g, s, _ = _hop_indices(db, h.atom, h.child, h.parent)
-            arrs.append(np.asarray(g))
-            arrs.append(np.asarray(s))
+            rt, g, s, n_parent = _hop_indices(db, h.atom, h.child, h.parent)
+            g_np, s_np = np.asarray(g), np.asarray(s)
+            n_edges = int(g_np.shape[0])
+            pad = _edge_bucket(n_edges) - n_edges
+            if pad > 0:
+                g_np = np.concatenate(
+                    [g_np, np.zeros(pad, dtype=g_np.dtype)])
+                s_np = np.concatenate(
+                    [s_np, np.full(pad, n_parent, dtype=s_np.dtype)])
+            arrs.append(g_np)
+            arrs.append(s_np)
             for cv in h.edge_attrs:
-                arrs.append(np.asarray(rt.attrs[cv.owner[1]]))
+                col = np.asarray(rt.attrs[cv.owner[1]])
+                if pad > 0:
+                    col = np.concatenate(
+                        [col, np.zeros(pad, dtype=col.dtype)])
+                arrs.append(col)
 
     node(plan.root)
     return arrs
+
+
+def _plan_input_roles(plan: ContractionPlan,
+                      partitioned: frozenset) -> List[bool]:
+    """Per input-pack slot (cursor order of :func:`plan_input_arrays`):
+    ``True`` when the array belongs to a partitioned relationship's edge
+    table, ``False`` for entity-attribute columns and replicated
+    relationships' arrays."""
+    roles: List[bool] = []
+
+    def node(n: NodeSpec) -> None:
+        roles.extend(False for _ in n.own.attrs)
+        for h in n.hops:
+            node(h.child_node)
+            part = h.atom.rel in partitioned
+            roles.append(part)             # gather index
+            roles.append(part)             # scatter index
+            roles.extend(part for _ in h.edge_attrs)
+
+    node(plan.root)
+    return roles
+
+
+def fanout_input_arrays(dbs: Sequence[RelationalDB], plan: ContractionPlan,
+                        partitioned: frozenset) -> List[np.ndarray]:
+    """The UNSHARDED database's input pack, reassembled from its shards:
+    entity-attribute columns and replicated relationship arrays come from
+    shard 0 (replicas are identical on every shard), partitioned
+    relationship arrays are the shards' arrays concatenated (every edge
+    lives on exactly one shard, so the concatenation is the full edge
+    table; per-shard pad rows scatter out of range and stay inert).
+    Evaluating a routable fan-out plan on this pack therefore yields the
+    MERGED table directly — same correctness argument as the fan-out sum,
+    one segment space instead of ``n_shards``."""
+    packs = [plan_input_arrays(db, plan) for db in dbs]
+    roles = _plan_input_roles(plan, partitioned)
+    return [np.concatenate(arrs) if part else arrs[0]
+            for part, arrs in zip(roles, zip(*packs))]
+
+
+def fanout_stack_key(dbs: Sequence[RelationalDB], plan: ContractionPlan,
+                     partitioned: frozenset) -> Tuple:
+    """Stacking key of the reassembled fan-out evaluation
+    (:func:`fanout_input_arrays`): like :func:`plan_stack_key` but with
+    each partitioned relationship's edge length equal to the SUM of the
+    shards' bucketed lengths.  Plans with equal keys share one stacked
+    dispatch."""
+    def node(n: NodeSpec) -> Tuple:
+        hops = []
+        for h in n.hops:
+            lens = []
+            for db in dbs:
+                _, g, _, n_parent = _hop_indices(db, h.atom, h.child,
+                                                 h.parent)
+                lens.append(_edge_bucket(int(np.asarray(g).shape[0])))
+            length = sum(lens) if h.atom.rel in partitioned else lens[0]
+            hops.append((length, n_parent,
+                         tuple(cv.card for cv in h.edge_attrs),
+                         node(h.child_node)))
+        return (dbs[0].entities[n.var.etype].size,
+                tuple(cv.card for cv in n.own.attrs), tuple(hops))
+    return node(plan.root)
 
 
 def _count_plan_joins(db: RelationalDB, plan: ContractionPlan,
@@ -646,6 +1005,15 @@ def _kr_segment_sum(code, mats: Sequence[jnp.ndarray], ds: int,
     return out
 
 
+def _segsum_kernel_enabled(num_segments: int) -> bool:
+    """Route this scatter-add through the Pallas segment-sum kernel?
+    Thin lazy alias of :func:`repro.kernels.ops.segsum_kernel_enabled`
+    so the kernels package (and its Pallas import) stays off the core
+    import path until a sparse hop actually consults it."""
+    from ..kernels import ops as kernel_ops
+    return kernel_ops.segsum_kernel_enabled(num_segments)
+
+
 class SparseExecutor(Executor):
     name = "sparse"
 
@@ -716,8 +1084,25 @@ class SparseExecutor(Executor):
         dense block ``(edges, Dd)``.  The single-device base runs one
         ``jax.ops.segment_sum``; :class:`~repro.core.distributed
         .ShardedSparseExecutor` overrides this with an edge-sharded
-        ``shard_map`` + ``psum``."""
+        ``shard_map`` + ``psum``.
+
+        Backend routing: when :func:`repro.kernels.ops
+        .segsum_kernel_enabled` says so (accelerator present, or
+        ``REPRO_SEGSUM_PALLAS=1`` on CPU CI, and the segment space is
+        small enough for the one-hot sweep) the scatter-add runs through
+        the Pallas kernel (:mod:`repro.kernels.segsum_kernel`) with
+        ``interpret`` resolved by the same backend probe — Mosaic on
+        TPU, Triton on GPU, the interpreter on CPU."""
         seg = jnp.asarray(seg_np)
+        if _segsum_kernel_enabled(total):
+            from ..kernels import ops as kernel_ops
+            if rows is None:
+                out = kernel_ops.ones_segment_sum(
+                    seg, jnp.ones((seg_np.shape[0],), dtype=jnp.float32),
+                    total)
+            else:
+                out = kernel_ops.edge_segment_sum(seg, rows, total)
+            return out.astype(self.dtype)
         if rows is None:
             return jax.ops.segment_sum(
                 jnp.ones((seg_np.shape[0],), dtype=self.dtype), seg,
@@ -747,6 +1132,11 @@ class SparseExecutor(Executor):
         are recomputed on every cache miss, so the compiled kernel is
         cached per ``(n, ds)`` in ``_batch_cache``."""
         n = int(code.shape[0])
+        if _segsum_kernel_enabled(ds):
+            from ..kernels import ops as kernel_ops
+            return kernel_ops.ones_segment_sum(
+                code, jnp.ones((n,), dtype=jnp.float32), ds
+            ).astype(self.dtype)
         key = ("ones_seg", n, ds)
         fn = self._batch_cache.get(key)
         if fn is None:

@@ -19,6 +19,29 @@ from dataclasses import dataclass, field
 from typing import Mapping, Sequence, Tuple
 
 
+class _CachedHash:
+    """Memoised ``__hash__`` for the frozen descriptor dataclasses.
+
+    Schema and query descriptors key every hot dict on the serve path —
+    plan compilation, request coalescing, router/service/engine caches —
+    and a recursive dataclass hash over nested tuples is recomputed on
+    EVERY lookup (tuple hashes are not cached by CPython).  Computing it
+    once per instance keeps a query flood's time in counting, not hashing.
+    Hashing stays consistent with field equality: equal field values give
+    equal hashes, memoised or not."""
+
+    __hash_seed__: str = ""
+
+    def __hash__(self) -> int:
+        h = self.__dict__.get("_hash")
+        if h is None:
+            fields = tuple(v for k, v in self.__dict__.items()
+                           if k != "_hash")
+            h = hash((self.__hash_seed__,) + fields)
+            object.__setattr__(self, "_hash", h)
+        return h
+
+
 @dataclass(frozen=True)
 class Attribute:
     name: str
@@ -61,9 +84,12 @@ class Relationship:
 
 
 @dataclass(frozen=True)
-class Schema:
+class Schema(_CachedHash):
     entities: Tuple[EntityType, ...]
     relationships: Tuple[Relationship, ...]
+
+    __hash_seed__ = "Schema"
+    __hash__ = _CachedHash.__hash__
 
     def entity(self, name: str) -> EntityType:
         for e in self.entities:

@@ -17,23 +17,29 @@ import itertools
 from dataclasses import dataclass
 from typing import Dict, FrozenSet, List, Sequence, Set, Tuple
 
-from .schema import Relationship, Schema
+from .schema import Relationship, Schema, _CachedHash
 
 
 @dataclass(frozen=True, order=True)
-class Var:
+class Var(_CachedHash):
     etype: str
     copy: int = 0
+
+    __hash_seed__ = "Var"
+    __hash__ = _CachedHash.__hash__
 
     def __str__(self) -> str:  # e.g. "student0"
         return f"{self.etype}{self.copy}"
 
 
 @dataclass(frozen=True, order=True)
-class Atom:
+class Atom(_CachedHash):
     rel: str
     src: Var
     dst: Var
+
+    __hash_seed__ = "Atom"
+    __hash__ = _CachedHash.__hash__
 
     @property
     def vars(self) -> Tuple[Var, Var]:
@@ -50,7 +56,7 @@ def canonical_atom(rel: Relationship) -> Atom:
 # --------------------------------------------------------------------------
 
 @dataclass(frozen=True, order=True)
-class CtVar:
+class CtVar(_CachedHash):
     """One axis of a contingency table.
 
     kind:
@@ -63,6 +69,9 @@ class CtVar:
     kind: str
     owner: Tuple
     card: int
+
+    __hash_seed__ = "CtVar"
+    __hash__ = _CachedHash.__hash__
 
     def __str__(self) -> str:
         if self.kind == "attr":
@@ -91,8 +100,11 @@ def rind_var(rel: str) -> CtVar:
 # --------------------------------------------------------------------------
 
 @dataclass(frozen=True)
-class LatticePoint:
+class LatticePoint(_CachedHash):
     atoms: Tuple[Atom, ...]          # sorted by relationship name
+
+    __hash_seed__ = "LatticePoint"
+    __hash__ = _CachedHash.__hash__
 
     @property
     def rels(self) -> FrozenSet[str]:

@@ -1,14 +1,33 @@
-"""Jit'd public wrappers for the Pallas kernels.
+"""Jit'd public wrappers for the Pallas kernels, plus the single backend
+probe that decides how they lower.
 
-``interpret`` defaults to True (this container is CPU-only; Mosaic lowering
-needs a real TPU).  On TPU deployments pass ``interpret=False`` — the
-call sites in ``repro.core`` select the kernel path via the strategy's
-``mobius_fn`` / config flags.
+Every wrapper takes ``interpret=None`` and resolves it through
+:func:`default_interpret`: one probe of ``jax.default_backend()`` —
+CPU → ``True`` (the Pallas interpreter; Mosaic/Triton lowering needs a
+real accelerator), TPU/GPU → ``False`` (native lowering).  The
+``REPRO_PALLAS_INTERPRET`` environment variable (``1``/``0``,
+``true``/``false``) overrides the probe in both directions — forcing
+interpret mode on an accelerator for debugging, or asserting native
+lowering in a deployment where falling back to the interpreter would be
+a silent 1000x regression.  Resolution happens *outside* the jitted
+inner functions, so flipping the env var between calls takes effect
+immediately (the bool is a static jit argument either way).
+
+:func:`segsum_kernel_enabled` is the matching routing predicate for the
+sparse executors' scatter-add hop (:mod:`.segsum_kernel`): on by default
+only on accelerators (the interpreted kernel body is Python — orders of
+magnitude slower than XLA's native scatter on CPU), forceable on CPU CI
+with ``REPRO_SEGSUM_PALLAS=1`` for kernel-parity coverage, and always
+capped at ``SEGSUM_KERNEL_MAX_SEGMENTS`` because the one-hot sweep costs
+O(edges x segments) — huge flattened ``(parent, code)`` spaces stay on
+``jax.ops.segment_sum``.
 """
 
 from __future__ import annotations
 
 import functools
+import os
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -16,15 +35,65 @@ import jax.numpy as jnp
 from .mobius_kernel import mobius_pallas
 from .hist_kernel import segment_hist_pallas
 from .bdeu_kernel import bdeu_pallas
+from .segsum_kernel import segment_sum_ones_pallas, segment_sum_rows_pallas
 from .ref import mobius_ref, segment_hist_ref, bdeu_ref
+
+# beyond this the O(edges x segments) one-hot sweep loses to XLA scatter
+SEGSUM_KERNEL_MAX_SEGMENTS = 1 << 15
+
+
+def _env_flag(name: str) -> Optional[bool]:
+    v = os.environ.get(name)
+    if v is None or not v.strip():
+        return None
+    return v.strip().lower() in ("1", "true", "yes", "on")
+
+
+@functools.lru_cache(maxsize=None)
+def _on_accelerator() -> bool:
+    try:
+        return jax.default_backend() in ("tpu", "gpu", "cuda", "rocm")
+    except Exception:                      # no backend at all -> interpret
+        return False
+
+
+def default_interpret() -> bool:
+    """The one backend probe behind every kernel entry point: ``True``
+    (interpreter) on CPU, ``False`` (Mosaic on TPU / Triton on GPU) on an
+    accelerator; ``REPRO_PALLAS_INTERPRET`` overrides."""
+    env = _env_flag("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env
+    return not _on_accelerator()
+
+
+def _resolve(interpret: Optional[bool]) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+def segsum_kernel_enabled(num_segments: int) -> bool:
+    """Should a sparse scatter-add hop with this segment space route
+    through the Pallas kernel (vs ``jax.ops.segment_sum``)?"""
+    if num_segments > SEGSUM_KERNEL_MAX_SEGMENTS:
+        return False
+    forced = _env_flag("REPRO_SEGSUM_PALLAS")
+    if forced is not None:
+        return forced
+    return _on_accelerator()
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def mobius(stack: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+def _mobius(stack: jnp.ndarray, interpret: bool) -> jnp.ndarray:
     return mobius_pallas(stack, interpret=interpret)
 
 
-def mobius_nd(stack: jnp.ndarray, k: int, interpret: bool = True) -> jnp.ndarray:
+def mobius(stack: jnp.ndarray,
+           interpret: Optional[bool] = None) -> jnp.ndarray:
+    return _mobius(stack, interpret=_resolve(interpret))
+
+
+def mobius_nd(stack: jnp.ndarray, k: int,
+              interpret: Optional[bool] = None) -> jnp.ndarray:
     """Adapter matching `repro.core.mobius.superset_mobius`'s (2,)*k + attrs
     signature, so the kernel can be plugged in as ``Strategy.mobius_fn``."""
     lead = stack.shape[:k]
@@ -37,22 +106,69 @@ def mobius_nd(stack: jnp.ndarray, k: int, interpret: bool = True) -> jnp.ndarray
 
 
 @functools.partial(jax.jit, static_argnames=("num_segments", "interpret"))
-def segment_hist(codes: jnp.ndarray, values: jnp.ndarray, num_segments: int,
-                 interpret: bool = True) -> jnp.ndarray:
+def _segment_hist(codes: jnp.ndarray, values: jnp.ndarray,
+                  num_segments: int, interpret: bool) -> jnp.ndarray:
     return segment_hist_pallas(codes, values, num_segments,
                                interpret=interpret)
 
 
+def segment_hist(codes: jnp.ndarray, values: jnp.ndarray, num_segments: int,
+                 interpret: Optional[bool] = None) -> jnp.ndarray:
+    return _segment_hist(codes, values, num_segments,
+                         interpret=_resolve(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "interpret"))
+def _edge_segment_sum(seg: jnp.ndarray, rows: jnp.ndarray,
+                      num_segments: int, interpret: bool) -> jnp.ndarray:
+    return segment_sum_rows_pallas(seg, rows, num_segments,
+                                   interpret=interpret)
+
+
+def edge_segment_sum(seg: jnp.ndarray, rows: jnp.ndarray, num_segments: int,
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Kernel-backed ``out[p, :] = sum_{e: seg[e]==p} rows[e, :]`` — the
+    sparse executor's dense-message hop."""
+    return _edge_segment_sum(seg, rows, num_segments,
+                             interpret=_resolve(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "interpret"))
+def _ones_segment_sum(seg: jnp.ndarray, weights: jnp.ndarray,
+                      num_segments: int, interpret: bool) -> jnp.ndarray:
+    return segment_sum_ones_pallas(seg, weights, num_segments,
+                                   interpret=interpret)
+
+
+def ones_segment_sum(seg: jnp.ndarray, weights: jnp.ndarray,
+                     num_segments: int,
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Kernel-backed weighted histogram ``out[p] = sum_{e: seg[e]==p}
+    w[e]`` — the sparse executor's leaf hop and code histogram."""
+    return _ones_segment_sum(seg, weights, num_segments,
+                             interpret=_resolve(interpret))
+
+
 @functools.partial(jax.jit, static_argnames=("ess", "interpret"))
-def bdeu(nijk: jnp.ndarray, ess: float = 1.0,
-         interpret: bool = True) -> jnp.ndarray:
+def _bdeu(nijk: jnp.ndarray, ess: float, interpret: bool) -> jnp.ndarray:
     return bdeu_pallas(nijk, ess=ess, interpret=interpret)
+
+
+def bdeu(nijk: jnp.ndarray, ess: float = 1.0,
+         interpret: Optional[bool] = None) -> jnp.ndarray:
+    return _bdeu(nijk, ess=ess, interpret=_resolve(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
                                              "interpret"))
-def flash_attention(q, k, v, causal: bool = True, block_q: int = 256,
-                    block_k: int = 256, interpret: bool = True):
+def _flash_attention(q, k, v, causal: bool, block_q: int, block_k: int,
+                     interpret: bool):
     from .attention_kernel import flash_attention_pallas
     return flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
                                   block_k=block_k, interpret=interpret)
+
+
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 256,
+                    block_k: int = 256, interpret: Optional[bool] = None):
+    return _flash_attention(q, k, v, causal=causal, block_q=block_q,
+                            block_k=block_k, interpret=_resolve(interpret))

@@ -27,6 +27,19 @@ def segment_hist_ref(codes: jnp.ndarray, values: jnp.ndarray,
     return jax.ops.segment_sum(values, codes, num_segments=num_segments)
 
 
+def edge_segment_sum_ref(seg: jnp.ndarray, rows: jnp.ndarray,
+                         num_segments: int) -> jnp.ndarray:
+    """Sparse hop scatter-add: out[p, d] = sum_{e: seg[e]=p} rows[e, d];
+    out-of-range segment ids (edge-bucket padding) are dropped."""
+    return jax.ops.segment_sum(rows, seg, num_segments=num_segments)
+
+
+def ones_segment_sum_ref(seg: jnp.ndarray, weights: jnp.ndarray,
+                         num_segments: int) -> jnp.ndarray:
+    """Weighted histogram: out[p] = sum_{e: seg[e]=p} weights[e]."""
+    return jax.ops.segment_sum(weights, seg, num_segments=num_segments)
+
+
 def bdeu_ref(nijk: jnp.ndarray, ess: float, q: int, r: int) -> jnp.ndarray:
     """BDeu log marginal likelihood over N_ijk [Q, R] (Q may be padded with
     zero rows and R with zero columns — both contribute exactly 0)."""

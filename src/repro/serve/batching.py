@@ -24,9 +24,13 @@ jitted dispatch (:meth:`~repro.core.executors.Executor.mobius_batch`).
 
 from __future__ import annotations
 
+import threading
 import time
 from contextlib import nullcontext
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
 
 from ..core.contract import CostStats
 from ..core.ct import CtTable
@@ -38,8 +42,109 @@ from ..core.plan import ContractionPlan, group_by_signature
 from ..core.variables import CtVar, LatticePoint
 from .metrics import ServiceMetrics
 
-__all__ = ["execute_bucketed", "execute_complete_bucketed",
+__all__ = ["TableMerger", "execute_bucketed", "execute_complete_bucketed",
            "plan_input_arrays", "plan_stack_key"]
+
+
+class TableMerger:
+    """Batched device-side reduction of per-shard count tables.
+
+    Count-table merging is exact addition, so it belongs on the device:
+    instead of ``n_shards - 1`` sequential eager adds per query (the old
+    host-side Python loop in :class:`~repro.serve.router.RouterTicket`),
+    same-shape shard tables — across MANY queries at once — are stacked
+    and tree-merged in ONE jitted dispatch per ``(n_partials, shape)``
+    group.  Inside the trace the reduction is
+    :func:`~repro.core.distributed.merge_stacked`: a ``psum`` over a
+    ``data`` mesh when one device per partial exists, a stacked
+    ``jnp.sum`` on one host.  The query axis is padded to the next power
+    of two (replaying query 0) so the jit cache stays keyed by a handful
+    of sizes.
+
+    One instance per router; thread-safe (concurrent floods share the
+    traced reducers).
+
+    Usage::
+
+        merged = TableMerger().merge_tables([[tab_shard0, tab_shard1]])
+    """
+
+    def __init__(self):
+        self._fns: Dict[Tuple, object] = {}
+        self._lock = threading.Lock()
+
+    def _reduce_fn(self, n_partials: int, q_pad: int,
+                   shape: Tuple[int, ...]):
+        key = (n_partials, q_pad, shape)
+        fn = self._fns.get(key)
+        if fn is None:
+            from ..core.distributed import merge_stacked
+
+            def run(*flat):
+                # flat is partial-major: shard s's tables for every query
+                # are flat[s*q_pad : (s+1)*q_pad]
+                stacked = jnp.stack(flat).reshape(
+                    (n_partials, q_pad) + shape)
+                out = merge_stacked(stacked)
+                # per-query slices INSIDE the jit — callers get ready
+                # tables, not q eager gather dispatches
+                return tuple(out[i] for i in range(q_pad))
+
+            with self._lock:
+                fn = self._fns.setdefault(key, jax.jit(run))
+        return fn
+
+    def reduce_arrays(self, arrays: Sequence[jnp.ndarray]) -> jnp.ndarray:
+        """Merge one query's partial count arrays (same shape) in one
+        jitted dispatch — the overlapped path's partial fold."""
+        arrays = list(arrays)
+        if len(arrays) == 1:
+            return arrays[0]
+        fn = self._reduce_fn(len(arrays), 1, tuple(arrays[0].shape))
+        (out,) = fn(*arrays)
+        return out
+
+    def merge_tables(self, per_query: Sequence[Sequence[CtTable]]
+                     ) -> Tuple[List[CtTable], int]:
+        """Merge many queries' per-shard tables, batched by shape.
+
+        Args:
+            per_query: one list of same-``vars`` shard tables per query
+                (per-shard plans are compiled against the same schema, so
+                shard tables of one query always align axis-for-axis).
+
+        Returns:
+            ``(merged, dispatches)``: one merged table per query in input
+            order — each holding the device array straight out of the
+            batched reduction, no host copy — and the number of jitted
+            merge dispatches issued.
+
+        Usage::
+
+            merged, n_disp = merger.merge_tables(shard_tables)
+        """
+        merged: List[Optional[CtTable]] = [None] * len(per_query)
+        groups: Dict[Tuple, List[int]] = {}
+        for i, tabs in enumerate(per_query):
+            if len(tabs) == 1:
+                merged[i] = tabs[0]
+                continue
+            groups.setdefault(
+                (len(tabs), tuple(tabs[0].counts.shape)), []).append(i)
+        dispatches = 0
+        for (n_partials, shape), idxs in groups.items():
+            q = len(idxs)
+            q_pad = 1 << max(q - 1, 0).bit_length()
+            fn = self._reduce_fn(n_partials, q_pad, shape)
+            flat: List[jnp.ndarray] = []
+            for s in range(n_partials):          # partial-major layout
+                flat.extend(per_query[i][s].counts for i in idxs)
+                flat.extend([per_query[idxs[0]][s].counts] * (q_pad - q))
+            out = fn(*flat)
+            dispatches += 1
+            for j, i in enumerate(idxs):
+                merged[i] = CtTable(per_query[i][0].vars, out[j])
+        return merged, dispatches                          # type: ignore
 
 
 def execute_bucketed(executor: Executor, db: RelationalDB,

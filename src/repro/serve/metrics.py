@@ -168,6 +168,9 @@ class RouterMetrics:
     fanout_requests: int = 0      # fanned out to every shard, tables summed
     single_shard_requests: int = 0  # answered by one shard (replicated data)
     merged_tables: int = 0        # per-shard tables merged into answers
+    device_merges: int = 0        # jitted device-side merge dispatches
+    partial_merges: int = 0       # overlapped folds while shards still ran
+    fused_dispatches: int = 0     # cross-shard count+merge fused dispatches
     not_routable: int = 0         # rejected with NotRoutableError
     cache_hits: int = 0           # served from the router's own result cache
     coalesced: int = 0            # joined an identical in-flight fan-out
@@ -183,6 +186,9 @@ class RouterMetrics:
                     fanout_requests=self.fanout_requests,
                     single_shard_requests=self.single_shard_requests,
                     merged_tables=self.merged_tables,
+                    device_merges=self.device_merges,
+                    partial_merges=self.partial_merges,
+                    fused_dispatches=self.fused_dispatches,
                     not_routable=self.not_routable,
                     cache_hits=self.cache_hits,
                     coalesced=self.coalesced,

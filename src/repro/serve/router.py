@@ -40,13 +40,17 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
+from concurrent.futures import ThreadPoolExecutor
+
 from ..core.contract import CostStats
 from ..core.ct import CtTable
 from ..core.database import NotRoutableError, ShardedDatabase
 from ..core.engine import CountingEngine, DeltaReport
-from ..core.executors import make_executor
-from ..core.mobius import complete_ct, positive_queries
+from ..core.executors import (fanout_stack_key, make_executor,
+                              plan_stack_key)
+from ..core.mobius import complete_ct_many, positive_queries
 from ..core.variables import CtVar, LatticePoint
+from .batching import TableMerger
 from .metrics import RouterMetrics, ServiceMetrics
 from .service import CountingService, CountTicket
 
@@ -56,12 +60,19 @@ __all__ = ["CountingRouter", "RouterTicket", "NotRoutableError"]
 class RouterTicket:
     """Handle for a routed query: one per-shard
     :class:`~repro.serve.service.CountTicket` per participating shard.
-    ``result()`` blocks on every shard ticket and merges the tables.
+    ``result()`` blocks on the shard tickets with **overlapped waits** —
+    partials from shards that have already settled are folded into a
+    running device-side sum (one jitted reduction, see
+    :class:`~repro.serve.batching.TableMerger`) while the slower shards
+    are still executing — and hands the merged device array straight into
+    the router's result cache, no host copy.
 
     A ticket may be shared by several callers (identical concurrent
     queries coalesce onto one in-flight ticket), so the merge runs once
-    under a per-ticket lock; every caller gets the same table.  The
-    merged result is published to the router's result cache."""
+    under a per-ticket lock; every caller gets the same table.  A batched
+    resolver (:meth:`CountingRouter.count_many`) can also install the
+    merged table directly (:meth:`_install`), in which case ``result()``
+    just hands it back."""
 
     def __init__(self, router: "CountingRouter",
                  tickets: Sequence[CountTicket], merge: bool,
@@ -118,21 +129,72 @@ class RouterTicket:
         try:
             if self._result is None:
                 try:
-                    tabs = [t.result(remaining()) for t in self._tickets]
+                    out = self._merge_overlapped(remaining)
                 except BaseException:
                     self._router._forget(self._key)   # later submits retry
                     raise
-                out = tabs[0]
-                for tab in tabs[1:]:
-                    out = out + tab
-                if self._merge and len(tabs) > 1:
-                    with self._router._lock:
-                        self._router.metrics.merged_tables += len(tabs)
                 self._router._settle(self._key, out, self._epoch)
                 self._result = out
         finally:
             self._resolve_lock.release()
         return self._result
+
+    def _merge_overlapped(self, remaining) -> CtTable:
+        """Collect the per-shard tables, merging as tickets settle: every
+        pass folds all CURRENTLY settled partials (plus the running sum)
+        into one device reduction, then blocks on one still-pending shard
+        — so the reduction of the fast shards' tables overlaps the slow
+        shards' execution instead of serialising after the slowest."""
+        pending = list(self._tickets)
+        if len(pending) == 1:
+            return pending[0].result(remaining())
+        router = self._router
+        vars_out = None
+        partial = None                 # running device-side sum
+        n_merged = 0
+        folds = 0
+        while pending:
+            ready = [t for t in pending if t.done]
+            if not ready:              # nothing settled: block on one shard
+                ready = [pending[0]]   # (its result() flushes that shard)
+            tabs = [t.result(remaining()) for t in ready]
+            pending = [t for t in pending if t not in ready]
+            if vars_out is None:
+                vars_out = tabs[0].vars
+            arrays = ([] if partial is None else [partial]) \
+                + [t.counts for t in tabs]
+            partial = router._merger.reduce_arrays(arrays)
+            n_merged += len(tabs)
+            if len(arrays) > 1:
+                folds += 1
+        out = CtTable(vars_out, partial)
+        if self._merge and n_merged > 1:
+            with router._lock:
+                router.metrics.merged_tables += n_merged
+                router.metrics.device_merges += folds
+                router.metrics.partial_merges += max(folds - 1, 0)
+        return out
+
+    def _shard_tables(self, timeout: Optional[float] = None
+                      ) -> Optional[List[CtTable]]:
+        """The raw per-shard tables, for a batched resolver — ``None`` if
+        this ticket already carries a merged result (cache hit or a
+        concurrent caller merged first)."""
+        if self._result is not None:
+            return None
+        return [t.result(timeout) for t in self._tickets]
+
+    def _install(self, tab: CtTable, n_merged: int) -> None:
+        """Publish a batch-merged table onto this ticket (no-op if a
+        concurrent caller already merged it per-ticket)."""
+        with self._resolve_lock:
+            if self._result is not None:
+                return
+            if self._merge and n_merged > 1:
+                with self._router._lock:
+                    self._router.metrics.merged_tables += n_merged
+            self._router._settle(self._key, tab, self._epoch)
+            self._result = tab
 
 
 class _MergedProvider:
@@ -216,6 +278,8 @@ class CountingRouter:
         self._results_bytes = 0
         self._epoch = 0                    # bumped by invalidate()
         self._inflight: Dict[Tuple, "RouterTicket"] = {}
+        self._merger = TableMerger()   # shared jitted device reducers
+        self._flush_pool: Optional[ThreadPoolExecutor] = None
         # kept to build replacement services after a rebalance
         self._executor_spec = executor
         self._dtype = dtype
@@ -335,7 +399,11 @@ class CountingRouter:
                    ) -> List[CtTable]:
         """Submit a whole query list, flush every shard, return merged
         tables in submission order — the per-shard services see the full
-        flood at once, so same-signature queries stack per shard.
+        flood at once, so same-signature queries stack per shard, and the
+        merges are batched too: same-shape shard tables across the WHOLE
+        flood are reduced in one jitted device dispatch per shape group
+        (see :class:`~repro.serve.batching.TableMerger`) instead of one
+        eager add chain per query.
 
         Usage::
 
@@ -346,18 +414,294 @@ class CountingRouter:
                 BEFORE anything is enqueued, so a bad query in the list
                 never strands partial work on the shard queues.
         """
-        sdb = self._snapshot()[0]
-        for point, _ in queries:       # validate up front, enqueue nothing
-            sdb.route(point)           # on a mixed good/bad list
-        tickets = [self.submit(point, keep) for point, keep in queries]
-        self.flush()
+        sdb, services, engines, epoch = self._snapshot()
+        # validate up front, enqueue nothing on a mixed good/bad list
+        routes = [sdb.route(point) for point, _ in queries]
+        if len(services) > 1 and queries \
+                and all(mode == "fanout" for mode, _ in routes):
+            out = self._count_many_fanout(sdb, engines, epoch, queries)
+            if out is not None:
+                return out
+        # queue-only submits + one concurrent flush: no shard executes
+        # inline on this thread, so shard batches overlap (see flush())
+        with ExitStack() as defers:
+            for svc in services:
+                defers.enter_context(svc.defer_drains())
+            tickets = [self.submit(point, keep) for point, keep in queries]
+            self.flush()
+        return self._resolve_many(tickets)
+
+    def _count_many_fanout(self, sdb: ShardedDatabase,
+                           engines: List[CountingEngine], epoch: int,
+                           queries: Sequence[Tuple[LatticePoint,
+                                                   Optional[Sequence[CtVar]]]]
+                           ) -> Optional[List[CtTable]]:
+        """All-fan-out flood fast path: reassemble the shards' input
+        arrays into the unsharded database's arrays and evaluate each
+        stack group ONCE (:meth:`~repro.core.executors.Executor
+        .positive_fanout_merged`) — the answers are the merged tables at
+        single-database cost, so sharding overhead is the routing
+        bookkeeping, not ``n_shards`` evaluations plus a merge.  The shard
+        services are bypassed (their caches stay cold; the router's own
+        merged-result cache absorbs repeats — it is checked first on every
+        path).  Returns ``None`` when the flood cannot reassemble
+        (backend without a traced evaluator, or a finalise layout the jit
+        cannot fuse): the caller then takes the per-shard service path.
+        """
+        ex0 = engines[0].executor
+        dbs = [eng.db for eng in engines]
+        keys: List[Tuple] = []
+        plan_of: Dict[Tuple, object] = {}
+        for point, keep in queries:
+            plan = engines[0].plan(point, keep)
+            key = (point.atoms, plan.keep)
+            keys.append(key)
+            plan_of[key] = plan
+        # feasibility FIRST, before any metric/cache mutation, so a
+        # fallback to the service path never double-counts a request
+        groups: "OrderedDict[Tuple, Tuple[list, list]]" = OrderedDict()
+        try:
+            for key in dict.fromkeys(keys):
+                plan = plan_of[key]
+                lay = ex0.stacked_layout(plan)
+                if lay is None:
+                    return None
+                fk = (fanout_stack_key(dbs, plan, sdb.partitioned), lay)
+                g = groups.get(fk)
+                if g is None:
+                    g = groups[fk] = ([], [])
+                g[0].append(plan)
+                g[1].append(key)
+        except NotImplementedError:
+            return None
+        resolved: Dict[Tuple, CtTable] = {}
+        with self._lock:
+            seen: set = set()
+            for key in keys:
+                self.metrics.requests += 1
+                if key in resolved or key in seen:
+                    if key in resolved:
+                        self.metrics.cache_hits += 1
+                    else:
+                        self.metrics.coalesced += 1
+                    continue
+                hit = self._results.get(key)
+                if hit is not None:
+                    self._results.move_to_end(key)
+                    self.metrics.cache_hits += 1
+                    resolved[key] = hit
+                else:
+                    seen.add(key)
+                    self.metrics.fanout_requests += 1
+        todo = seen
+        if todo:
+            stats = [eng.stats for eng in engines]
+            # the gate linearizes the whole evaluation against
+            # apply_delta/rebalance, like a service-path flood's
+            # submit+flush window
+            with self._submit_gate:
+                for plans, gkeys in groups.values():
+                    live = [(p, k) for p, k in zip(plans, gkeys)
+                            if k in todo]
+                    if not live:
+                        continue
+                    gplans = [p for p, _ in live]
+                    merged = ex0.positive_fanout_merged(
+                        dbs, gplans, sdb.partitioned, stats)
+                    for (_, key), tab in zip(live, merged):
+                        self._settle(key, tab, epoch)
+                        resolved[key] = tab
+                    with self._lock:
+                        self.metrics.device_merges += 1
+                        self.metrics.fused_dispatches += 1
+                        self.metrics.merged_tables += (len(gplans)
+                                                       * len(dbs))
+        return [resolved[key] for key in keys]
+
+    def _resolve_many(self, tickets: Sequence["RouterTicket"]
+                      ) -> List[CtTable]:
+        """Resolve many tickets through the batched device merge: gather
+        every DISTINCT unresolved ticket's per-shard tables (coalesced
+        duplicates resolve once), merge them grouped by table shape, and
+        install each merged table back onto its ticket (which settles the
+        router cache and any concurrent waiters)."""
+        distinct: "OrderedDict[int, RouterTicket]" = OrderedDict()
+        for t in tickets:
+            distinct.setdefault(id(t), t)
+        todo: List[RouterTicket] = []
+        shard_tabs: List[List[CtTable]] = []
+        for t in distinct.values():
+            tabs = t._shard_tables()
+            if tabs is not None:
+                todo.append(t)
+                shard_tabs.append(tabs)
+        if todo:
+            merged, dispatches = self._merger.merge_tables(shard_tabs)
+            for t, tab, tabs in zip(todo, merged, shard_tabs):
+                t._install(tab, len(tabs))
+            if dispatches:
+                with self._lock:
+                    self.metrics.device_merges += dispatches
         return [t.result() for t in tickets]
 
     # -- scheduling ---------------------------------------------------------
     def flush(self) -> None:
-        """Drain every shard service's pending queue."""
-        for svc in self._snapshot()[1]:
-            svc.flush()
+        """Drain every shard service's pending queue.
+
+        When the shard queues hold the SAME fan-out flood (the
+        :meth:`count_many` / :meth:`complete_many` case), every shard's
+        stacked evaluation AND the cross-shard merge run in ONE jitted
+        dispatch (:meth:`~repro.core.executors.Executor
+        .positive_stacked_merged`): on one host, per-shard thread
+        parallelism buys nothing — the GIL serialises the Python-side
+        dispatches — so fusing them is what makes sharding overhead
+        sublinear.  Queues that don't align (mixed routes, direct shard
+        clients, complete-CT entries) fall back to one concurrent
+        ``svc.flush()`` per shard."""
+        services, engines = self._snapshot()[1:3]
+        if len(services) <= 1:
+            for svc in services:
+                svc.flush()
+            return
+        if len(engines) == len(services) \
+                and self._flush_fused(services, engines):
+            return
+        # list() propagates the first shard exception, like a serial loop
+        list(self._get_pool(len(services)).map(
+            lambda svc: svc.flush(), services))
+
+    def _get_pool(self, n: int) -> ThreadPoolExecutor:
+        pool = self._flush_pool
+        if pool is None or pool._max_workers < n:
+            pool = self._flush_pool = ThreadPoolExecutor(
+                max_workers=n, thread_name_prefix="router-flush")
+        return pool
+
+    def _flush_fused(self, services: List[CountingService],
+                     engines: List[CountingEngine]) -> bool:
+        """Drain every shard queue and try the fused cross-shard dispatch;
+        returns ``True`` when the drained work was fully handled (fused,
+        or executed per shard as a fallback) and ``False`` only when
+        nothing was drained because fusion is structurally unavailable.
+        Merged tables land directly on the in-flight router tickets —
+        :meth:`_resolve_many` then finds them already resolved and skips
+        its merge pass."""
+        drained = [svc.drain_pending() for svc in services]
+        if not any(drained):
+            return True
+        groups = self._fused_groups(engines, drained)
+        if groups is None:
+            self._execute_drained(services, drained)
+            return True
+        ex0 = engines[0].executor
+        dbs = [eng.db for eng in engines]
+        exs = [eng.executor for eng in engines]
+        stats = [eng.stats for eng in engines]
+        try:
+            for plans, per_shard_entries, keys in groups:
+                t0 = time.perf_counter()
+                with ExitStack() as timers:
+                    for eng in engines:
+                        timers.enter_context(eng.stats.timer("positive"))
+                    per_shard, merged = ex0.positive_stacked_merged(
+                        dbs, exs, plans, stats)
+                dt = time.perf_counter() - t0
+                sig = ("pos", plans[0].shape_signature())
+                for s, svc in enumerate(services):
+                    svc.metrics.observe_batch(sig, len(plans), dt)
+                    svc.deliver_external(
+                        list(zip(per_shard_entries[s], per_shard[s])))
+                for key, tab in zip(keys, merged):
+                    with self._lock:
+                        ticket = self._inflight.get(key)
+                    if ticket is not None:
+                        ticket._install(tab, len(services))
+                with self._lock:
+                    self.metrics.device_merges += 1
+                    self.metrics.fused_dispatches += 1
+        except BaseException as err:
+            # undelivered waiters must not hang: error + settle whatever
+            # deliver_external has not already settled, and clear the
+            # in-flight slots so later identical submits retry
+            for entries in drained:
+                for e in entries:
+                    if not e.event.is_set():
+                        if e.error is None and e.result is None:
+                            e.error = err
+                        e.settle()
+            with self._lock:
+                for _, _, keys in groups:
+                    for key in keys:
+                        self._inflight.pop(key, None)
+            raise
+        return True
+
+    def _fused_groups(self, engines: List[CountingEngine],
+                      drained: List[list]):
+        """Group aligned drained entries for the fused dispatch, or
+        ``None`` when the queues cannot fuse: unequal floods, complete-CT
+        entries, per-shard plans that are not the same object (one compile
+        cache serves every shard, so fan-outs share plans), shard stack
+        keys that diverge (edge counts straddling a pow2 bucket edge), or
+        a backend without a traced evaluator.  Each group is
+        ``(plans, entries_per_shard, router_keys)`` with one shared stack
+        key and finalise layout."""
+        n = len(drained[0])
+        if any(len(d) != n for d in drained):
+            return None
+        ex0 = engines[0].executor
+        maps = []
+        for d in drained:
+            mp = {}
+            for e in d:
+                if e.complete:
+                    return None
+                mp[(e.point.atoms, e.keep)] = e
+            maps.append(mp)
+        if any(mp.keys() != maps[0].keys() for mp in maps[1:]):
+            return None
+        groups: Dict[Tuple, Tuple[list, list, list]] = {}
+        order = []
+        try:
+            for e0 in drained[0]:
+                key = (e0.point.atoms, e0.keep)
+                plan = e0.plan
+                sk = plan_stack_key(engines[0].db, plan)
+                entries_s = [e0]
+                for eng, mp in zip(engines[1:], maps[1:]):
+                    es = mp[key]
+                    if es.plan is not plan \
+                            or plan_stack_key(eng.db, es.plan) != sk:
+                        return None
+                    entries_s.append(es)
+                lay = ex0.stacked_layout(plan)
+                if lay is None:
+                    return None
+                g = groups.get((sk, lay))
+                if g is None:
+                    g = groups[(sk, lay)] = (
+                        [], [[] for _ in engines], [])
+                    order.append(g)
+                g[0].append(plan)
+                for s, es in enumerate(entries_s):
+                    g[1][s].append(es)
+                g[2].append(key)
+        except NotImplementedError:
+            return None
+        return order
+
+    def _execute_drained(self, services: List[CountingService],
+                         drained: List[list]) -> None:
+        """Fallback for drained-but-unfusable queues: the normal batch
+        path per shard, concurrently when more than one shard has work."""
+        pairs = [(svc, ents) for svc, ents in zip(services, drained)
+                 if ents]
+        if len(pairs) <= 1:
+            for svc, ents in pairs:
+                svc.execute_drained(ents)
+            return
+        list(self._get_pool(len(pairs)).map(
+            lambda p: p[0].execute_drained(p[1]), pairs))
 
     def pending(self) -> int:
         """Total queries pending across all shard services."""
@@ -444,16 +788,26 @@ class CountingRouter:
         # from one side of any concurrent delta (writers wait in
         # apply_delta until the transaction finishes)
         with self._submit_gate:
-            tickets = [self.submit(sp, sk)
-                       for sp, sk in dict.fromkeys(subs)]
-            self.flush()
-            for t in tickets:          # merged positives land in the cache
-                t.result()
+            with ExitStack() as defers:
+                for svc in services:
+                    defers.enter_context(svc.defer_drains())
+                tickets = [self.submit(sp, sk)
+                           for sp, sk in dict.fromkeys(subs)]
+                self.flush()
+            # batched resolve: merged positives land in the router cache
+            # through one device reduction per shape group
+            self._resolve_many(tickets)
             provider = _MergedProvider(self, engines[0])
-            for i in todo:
+            # front-end negative phase, batched: same-shape butterfly
+            # stacks across ALL queries transform in one jitted dispatch
+            # each (mirrors the in-service complete path)
+            tabs = complete_ct_many(
+                [norm[i] for i in todo], provider,
+                use_butterfly=True,
+                mobius_fn=engines[0].mobius_fn(),
+                mobius_fused_fn=engines[0].mobius_fused_fn())
+            for i, tab in zip(todo, tabs):
                 point, keep = norm[i]
-                tab = complete_ct(point, keep, provider,
-                                  mobius_fn=engines[0].mobius_fn())
                 self._settle(("complete", point.atoms, keep), tab, epoch)
                 out[i] = tab
         return out                                       # type: ignore

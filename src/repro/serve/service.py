@@ -271,6 +271,7 @@ class CountingService:
         self._policy: Optional[OnDemandPositives] = None  # complete-CT path
         self._dispatcher_thread: Optional[threading.Thread] = None
         self._shut_down = False
+        self._defer_depth = 0          # see defer_drains()
         if dispatcher:
             self.start()
 
@@ -698,10 +699,63 @@ class CountingService:
         if entries:
             self._execute(entries)
 
+    @contextmanager
+    def defer_drains(self):
+        """Suspend the size/deadline dispatch triggers inside the block:
+        submits only QUEUE, nothing executes on the caller's thread until
+        its own :meth:`flush`.  For callers that hold a whole flood and
+        flush immediately after — the router enqueues every shard's full
+        query list under this and then drains all shards CONCURRENTLY, so
+        one shard's inline size-triggered drain can't serialise the other
+        shard's execution behind it.  Backpressure (in-flight count/byte
+        limits) stays armed — a runaway submit loop still force-drains.
+        Re-entrant and thread-safe."""
+        with self._lock:
+            self._defer_depth += 1
+        try:
+            yield self
+        finally:
+            with self._lock:
+                self._defer_depth -= 1
+
     def pending(self) -> int:
         """Number of queries currently queued (not yet dispatched)."""
         with self._lock:
             return len(self._pending)
+
+    # -- external (router-fused) execution -----------------------------------
+    def drain_pending(self) -> List[_Pending]:
+        """Take the whole queue for an EXTERNAL executor — the router's
+        fused cross-shard dispatch runs every shard's drained plans under
+        one jit.  The caller OWNS the drained entries: it must either
+        hand each a table via :meth:`deliver_external`, execute them with
+        :meth:`execute_drained`, or settle them with an error — an entry
+        dropped on the floor hangs its waiters forever."""
+        with self._lock:
+            return self._drain_all()
+
+    def execute_drained(self, entries: List[_Pending]) -> None:
+        """Run previously drained entries through the normal batch path
+        (the fused router flush falls back here when shard queues don't
+        align)."""
+        if entries:
+            self._execute(entries)
+
+    def deliver_external(self, delivered: Sequence[Tuple[_Pending,
+                                                         CtTable]]) -> None:
+        """Deliver externally computed tables for drained entries: the
+        usual sink/cache/result routing under the exec lock, then settle.
+        The tables must be exactly what :meth:`_execute` would have
+        produced (the fused path evaluates the same plans)."""
+        try:
+            with self._exec_lock:
+                now = time.perf_counter()
+                for e, tab in delivered:
+                    self.metrics.observe_wait(now - e.enqueued_at)
+                    self._deliver(e, tab)
+        finally:
+            for e, _ in delivered:
+                e.settle()
 
     def _drain_all(self) -> List[_Pending]:
         """Take the whole queue (lock held)."""
@@ -733,6 +787,8 @@ class CountingService:
         if over_count or over_bytes:
             self.metrics.backpressure_flushes += 1
             return self._drain_all()
+        if self._defer_depth:
+            return []                  # caller flushes itself; see
         if len(self._by_sig.get(entry.sig, ())) >= self.max_batch_size:
             self.metrics.size_flushes += 1
             return self._drain_bucket(entry.sig)

@@ -439,3 +439,266 @@ def test_router_metrics_rollup_counts_not_routable():
         router.submit(bad)
     snap = router.stats()["router"]
     assert snap["not_routable"] == 1 and snap["requests"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Device-side merging: the fan-out reassembly fast path, the fused drain
+# flush, and their host-path fallback all agree with the single-DB answer
+# ---------------------------------------------------------------------------
+
+def _force_host_merge(router):
+    """Disable both fused device-merge paths on THIS router instance —
+    count_many falls back to per-shard service submits and flush() to one
+    concurrent svc.flush() per shard, so answers come through the
+    original per-ticket merge."""
+    router._count_many_fanout = lambda *a, **k: None
+    router._fused_groups = lambda *a, **k: None
+
+
+def _completable_points(sdb, lattice):
+    """Routable points whose every butterfly positive sub-query is also
+    routable (what complete-CT needs)."""
+    from repro.core.mobius import positive_queries
+    out = []
+    for p in _routable_points(sdb, lattice):
+        keep = tuple(p.all_ct_vars(sdb.schema, include_rind=True))
+        try:
+            for sp, _ in positive_queries(p, keep, use_butterfly=True):
+                sdb.route(sp)
+        except NotRoutableError:
+            continue
+        out.append(p)
+    return out
+
+
+@pytest.mark.parametrize("sname", ["HYBRID", "ONDEMAND", "PRECOUNT",
+                                   "TUPLEID"])
+def test_merge_parity_device_host_single_db_per_strategy(sname):
+    """Device merge == host merge == single-DB strategy answer, for every
+    counting strategy: the strategy computes the complete family CT on
+    the unsharded database; a default router (fused device merging) and a
+    host-fallback router answer the same workload over 2 shards."""
+    from repro.core import make_strategy
+
+    db = mixed_db()
+    lattice = build_lattice(db.schema, 2)
+    sdb = shard_database(db, 2)
+    st = make_strategy(sname, executor="sparse")
+    st.prepare(db, lattice)
+    points = _completable_points(sdb, lattice)
+    assert points
+    queries = [(p, tuple(p.all_ct_vars(db.schema, include_rind=True)))
+               for p in points]
+    want = [np.asarray(st.family_ct(p, k).counts) for p, k in queries]
+
+    dev = CountingRouter(sdb, executor="sparse")
+    host = CountingRouter(sdb, executor="sparse")
+    _force_host_merge(host)
+    for router in (dev, host):
+        tabs = router.complete_many(queries)
+        for (p, _), tab, ref in zip(queries, tabs, want):
+            np.testing.assert_allclose(
+                np.asarray(tab.counts), ref, atol=1e-3,
+                err_msg=f"{sname} {p} via "
+                        f"{'device' if router is dev else 'host'} merge")
+    # both routers merged on device (complete workloads mix fan-out and
+    # single-shard sub-queries, so the FUSED dispatch may not engage —
+    # but the host-forced router must never have fused)
+    assert dev.stats()["router"]["device_merges"] >= 1
+    assert host.stats()["router"]["fused_dispatches"] == 0
+    assert host.stats()["router"]["merged_tables"] >= 1
+
+
+def test_count_many_fanout_fast_path_bypasses_services():
+    """An all-fan-out count_many reassembles shard inputs and answers at
+    single-DB cost: no shard service sees a request, answers equal the
+    single-DB engine, repeats hit the router cache, and invalidate()
+    forces a fresh evaluation."""
+    db = mixed_db()
+    lattice = build_lattice(db.schema, 2)
+    sdb = shard_database(db, 2)
+    router = CountingRouter(sdb, executor="sparse")
+    eng = CountingEngine(db, "sparse", CostStats())
+    points = [p for p in _routable_points(sdb, lattice)
+              if sdb.route(p)[0] == "fanout"]
+    assert len(points) >= 2
+    queries = [(p, None) for p in points]
+
+    tabs = router.count_many(queries)
+    for (p, _), tab in zip(queries, tabs):
+        want = eng.contract(p, None)
+        assert tab.vars == want.vars
+        np.testing.assert_allclose(np.asarray(tab.counts),
+                                   np.asarray(want.counts), atol=1e-3,
+                                   err_msg=str(p))
+    rt = router.stats()["router"]
+    agg = router.stats()["aggregate"]
+    assert rt["fused_dispatches"] >= 1
+    assert rt["device_merges"] >= 1
+    assert rt["fanout_requests"] == len(points)
+    assert rt["merged_tables"] == len(points) * 2
+    assert agg["enqueued"] == 0                     # services bypassed
+
+    # duplicates inside ONE list: first occurrence evaluates, repeats
+    # are absorbed (in-flight coalesce) without extra dispatches
+    router.invalidate()
+    before = router.stats()["router"]["fused_dispatches"]
+    dup = router.count_many(queries + queries)
+    np.testing.assert_array_equal(np.asarray(dup[0].counts),
+                                  np.asarray(dup[len(points)].counts))
+    rt = router.stats()["router"]
+    assert rt["coalesced"] >= len(points)
+    assert rt["fused_dispatches"] >= before + 1
+
+    # repeats across calls: served from the router's merged-result cache
+    before = rt["fused_dispatches"]
+    router.count_many(queries)
+    rt = router.stats()["router"]
+    assert rt["cache_hits"] >= len(points)
+    assert rt["fused_dispatches"] == before         # nothing re-evaluated
+
+    # a later submit() of the same key is already resolved
+    t = router.submit(points[0])
+    assert t.done
+
+
+def test_fused_flush_serves_submitted_tickets():
+    """submit() + flush(): the drain-based fused dispatch computes every
+    shard's table AND the merged table in one evaluation — tickets get
+    the merged answer, shard services get their per-shard deliveries
+    (metrics + caches), and the answers equal the single-DB engine."""
+    db = mixed_db()
+    lattice = build_lattice(db.schema, 2)
+    sdb = shard_database(db, 2)
+    router = CountingRouter(sdb, executor="sparse", max_batch_size=64)
+    eng = CountingEngine(db, "sparse", CostStats())
+    points = [p for p in _routable_points(sdb, lattice)
+              if sdb.route(p)[0] == "fanout"]
+    tickets = [router.submit(p) for p in points]
+    router.flush()
+    for p, t in zip(points, tickets):
+        want = eng.contract(p, None)
+        np.testing.assert_allclose(np.asarray(t.result().counts),
+                                   np.asarray(want.counts), atol=1e-3,
+                                   err_msg=str(p))
+    snap = router.stats()
+    assert snap["router"]["fused_dispatches"] >= 1
+    # per-shard deliveries reached the services: batches observed and
+    # results cached shard-side
+    assert snap["aggregate"]["batches"] >= 2
+    assert snap["aggregate"]["batched_queries"] >= 2 * len(points)
+    assert snap["aggregate"]["cache"]["entries"] >= 1
+
+
+def test_fused_flush_falls_back_on_misaligned_queues():
+    """Unequal shard queues (a direct shard-service client alongside the
+    router) cannot fuse: the drained work must still execute per shard
+    and every waiter must settle with the right answer."""
+    db = mixed_db()
+    lattice = build_lattice(db.schema, 2)
+    sdb = shard_database(db, 2)
+    router = CountingRouter(sdb, executor="sparse", max_batch_size=64)
+    eng = CountingEngine(db, "sparse", CostStats())
+    points = [p for p in _routable_points(sdb, lattice)
+              if sdb.route(p)[0] == "fanout"]
+    services = router._snapshot()[1]
+    t_router = router.submit(points[0])
+    extra = points[1]
+    t_direct = services[0].submit(extra)     # shard 0 queue is now longer
+    router.flush()
+    np.testing.assert_allclose(
+        np.asarray(t_router.result().counts),
+        np.asarray(eng.contract(points[0], None).counts), atol=1e-3)
+    # the direct ticket holds shard 0's PARTIAL count (its slice of the
+    # partitioned edges), not the merged answer — it must settle too
+    assert t_direct.result() is not None
+    assert router.stats()["router"]["fused_dispatches"] == 0
+
+
+def test_partial_overlapped_merge_under_staggered_shards():
+    """Host-path merging with 3 shards: when two shards settle before the
+    third, their tables fold into a running partial while the last shard
+    executes — partial_merges counts the overlapped fold, and the final
+    table still equals the single-DB answer."""
+    db = mixed_db()
+    lattice = build_lattice(db.schema, 2)
+    sdb = shard_database(db, 3)
+    router = CountingRouter(sdb, executor="sparse", max_batch_size=64)
+    _force_host_merge(router)
+    eng = CountingEngine(db, "sparse", CostStats())
+    p = next(q for q in _routable_points(sdb, lattice)
+             if sdb.route(q)[0] == "fanout")
+    t = router.submit(p)
+    services = router._snapshot()[1]
+    services[0].flush()                      # two shards settle early …
+    services[1].flush()
+    tab = t.result()                         # … third flushes inside wait
+    np.testing.assert_allclose(np.asarray(tab.counts),
+                               np.asarray(eng.contract(p, None).counts),
+                               atol=1e-3)
+    rt = router.stats()["router"]
+    assert rt["partial_merges"] >= 1
+    assert rt["merged_tables"] == 3
+
+    # and the merged table landed in the router cache zero-copy: the
+    # cached entry IS the ticket's table object
+    key = (p.atoms, router.engines[0].plan(p, None).keep)
+    assert router._results[key] is tab
+
+
+def test_fanout_fast_path_concurrent_with_deltas():
+    """The fan-out fast path linearizes against apply_delta: concurrent
+    floods and inserts interleave without torn reads — every flood answer
+    matches the single-DB engine at SOME insert prefix (never a mix)."""
+    db = mixed_db()
+    lattice = build_lattice(db.schema, 2)
+    sdb = shard_database(db, 2)
+    router = CountingRouter(sdb, executor="sparse")
+    points = [p for p in _routable_points(sdb, lattice)
+              if sdb.route(p)[0] == "fanout"
+              and any(a.rel == "R1" for a in p.atoms)][:3]
+    assert points
+
+    # two fresh ("R1" has no attrs) edges not present in the base store
+    present = {(int(s), int(d)) for s, d in zip(db.relations["R1"].src,
+                                                db.relations["R1"].dst)}
+    inserts = [(s, d) for s in range(7) for d in range(6)
+               if (s, d) not in present][:2]
+
+    # reference tables at every insert prefix, from fresh single engines
+    prefixes = []
+    for i in range(len(inserts) + 1):
+        ref_db = mixed_db()
+        for s, d in inserts[:i]:
+            ref_db.insert_facts("R1", [s], [d], None)
+        eng = CountingEngine(ref_db, "sparse", CostStats())
+        prefixes.append({p: np.asarray(eng.contract(p, None).counts)
+                         for p in points})
+    errors = []
+
+    def flood():
+        try:
+            for _ in range(4):
+                router.invalidate()        # measure the store, not cache
+                tabs = router.count_many([(p, None) for p in points])
+                got = {p: np.asarray(t.counts)
+                       for p, t in zip(points, tabs)}
+                ok = any(all(np.array_equal(got[p], pref[p])
+                             for p in points) for pref in prefixes)
+                assert ok, "flood observed a torn (mixed-delta) answer"
+        except Exception as e:                   # pragma: no cover
+            errors.append(e)
+
+    def writer():
+        try:
+            for s, d in inserts:
+                router.apply_delta("R1", [s], [d], None)
+        except Exception as e:                   # pragma: no cover
+            errors.append(e)
+
+    ts = [threading.Thread(target=flood), threading.Thread(target=writer)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errors, errors
