@@ -395,7 +395,7 @@ def bench_negative_flood(n_rels: int = 16, edges: int = 2000,
 
 def bench_sharded_flood(n_shards: int = 2, n_rels: int = 16,
                         edges: int = 2000, rounds: int = 5,
-                        seed: int = 0) -> List[dict]:
+                        seed: int = 0, trace: bool = False) -> List[dict]:
     """Sharded-vs-single sparse counting throughput (the ``--shards``
     dimension).
 
@@ -406,6 +406,11 @@ def bench_sharded_flood(n_shards: int = 2, n_rels: int = 16,
     executor.  Reports queries/s per mode and the sharded-over-single
     ratio — on one host this measures the routing/merge overhead; across
     real hosts each shard scans 1/``n_shards`` of the edge rows.
+
+    ``trace=True`` (the ``--trace`` flag) runs the sharded side with a
+    request tracer (slow threshold 0, so every query is offered) and
+    dumps the slow-query log — which queries were the tail, and which
+    dispatch path answered them.
     """
     from repro.core.database import shard_database
     from repro.serve import CountingRouter, CountingService
@@ -438,8 +443,13 @@ def bench_sharded_flood(n_shards: int = 2, n_rels: int = 16,
 
     # ---- sharded router ----------------------------------------------------
     sdb = shard_database(db, n_shards)
+    tracer = None
+    if trace:
+        from repro.obs import Tracer
+        tracer = Tracer(capacity=1 << 15, slow_threshold_s=0.0)
     router = CountingRouter(sdb, executor="sparse",
-                            max_batch_size=max(n_rels, 1))
+                            max_batch_size=max(n_rels, 1),
+                            tracer=tracer)
     jax.block_until_ready([t.counts for t in router.count_many(queries)])
     walls = []
     for _ in range(rounds):
@@ -459,6 +469,16 @@ def bench_sharded_flood(n_shards: int = 2, n_rels: int = 16,
           f"sharded={qps_sharded:8.1f} q/s  ratio={ratio:5.2f}x  "
           f"fanout={rs['fanout_requests']} merged={rs['merged_tables']}",
           flush=True)
+    slow_dump: List[dict] = []
+    if tracer is not None:
+        slow_dump = tracer.slow.as_dicts()[:10]
+        print(f"[shards] {config} slow-query log "
+              f"(top {len(slow_dump)} of {tracer.slow.offered} offered, "
+              f"{tracer.recorded} spans traced):", flush=True)
+        for q in slow_dump:
+            info = " ".join(f"{k}={v}" for k, v in q["info"].items())
+            print(f"[shards]   {q['duration_s'] * 1e3:8.3f}ms "
+                  f"{q['name']}  {info}", flush=True)
     for mode, wall, qps in (("single", wall_single, qps_single),
                             ("sharded", wall_sharded, qps_sharded)):
         rec = {"bench": "sharded_flood", "config": config,
@@ -468,6 +488,8 @@ def bench_sharded_flood(n_shards: int = 2, n_rels: int = 16,
                "qps": round(qps, 1), "completed": True}
         if mode == "sharded":
             rec["ratio_vs_single"] = round(ratio, 3)
+            if slow_dump:
+                rec["slow_queries"] = slow_dump
         out.append(rec)
     return out
 
@@ -615,6 +637,7 @@ def main(out_dir: str = "results/bench", scale: Optional[float] = None,
          shard_kw: Optional[dict] = None,
          mut_flood: bool = True,
          mut_flood_kw: Optional[dict] = None,
+         trace: bool = False,
          bench_json: Optional[str] = "BENCH_counting.json") -> dict:
     recs = run_all(datasets=datasets, scale=scale, budget_s=budget_s,
                    executors=executors)
@@ -651,7 +674,7 @@ def main(out_dir: str = "results/bench", scale: Optional[float] = None,
         art["negative_flood"] = neg_recs
     shard_recs: List[dict] = []
     for n in shards:
-        shard_recs.extend(bench_sharded_flood(n_shards=int(n),
+        shard_recs.extend(bench_sharded_flood(n_shards=int(n), trace=trace,
                                               **(shard_kw or {})))
     if shard_recs:
         art["sharded_flood"] = shard_recs
@@ -681,8 +704,12 @@ if __name__ == "__main__":
                     metavar="N",
                     help="also run the sharded-vs-single sparse flood for "
                          "each shard count given (e.g. --shards 2 4)")
+    ap.add_argument("--trace", action="store_true",
+                    help="run the sharded flood with request tracing on "
+                         "and dump its slow-query log")
     args = ap.parse_args()
     main(scale=args.scale, datasets=tuple(args.datasets),
          budget_s=args.budget_s, spotlight=not args.no_spotlight,
          flood=not args.no_flood, neg_flood=not args.no_neg_flood,
-         shards=tuple(args.shards), mut_flood=not args.no_mut_flood)
+         shards=tuple(args.shards), mut_flood=not args.no_mut_flood,
+         trace=args.trace)

@@ -21,6 +21,10 @@ laptops and CI runners, unlike absolute q/s):
 * the Pallas segment-sum kernel must match the XLA scatter path
   bit-for-bit in interpret mode (CPU CI's only way to execute the
   kernel body), and
+* request tracing must stay out of the serving path's way: the traced
+  sharded flood must hold within ``OBS_OVERHEAD_MAX`` of the untraced
+  flood (interleaved best-of-N rounds); the measured ratio plus a
+  metrics/trace artifact is written to ``results/bench/obs.json``, and
 * full-scale VisualGenome under a tight cache budget must complete
   within its budget (skippable via ``PERF_SMOKE_SKIP_VG=1``).
 
@@ -57,6 +61,15 @@ MIN_SHARDED_RATIO = 0.9
 # must beat flush-and-recount on an insert-heavy write/read mix
 SMOKE_MUT_FLOOD = dict(n_rels=6, edges=100000, delta_edges=128, rounds=2)
 MIN_MUT_SPEEDUP = 2.0
+# observability must be off-by-default-cheap AND cheap when on: the
+# traced sharded flood may cost at most 5% over the untraced one
+# (interleaved rounds, best-of-N per mode; a small absolute slack keeps
+# sub-ms jitter from flapping the gate).  The measured ratio + exported
+# metrics/trace summary land in results/bench/obs.json.
+SMOKE_OBS_FLOOD = dict(n_shards=2, n_rels=8, edges=4000, rounds=5, reps=4)
+OBS_OVERHEAD_MAX = 1.05
+OBS_OVERHEAD_SLACK_S = 2e-3
+OBS_JSON = "results/bench/obs.json"
 # the paper's headline config as a standing CI gate: full-scale
 # VisualGenome (15.8M rows) under a deliberately tight cache budget —
 # the LRU must keep evicting, so both counting phases and cache
@@ -156,6 +169,96 @@ def check_kernel_parity() -> list:
     return failures
 
 
+def check_tracing_overhead() -> list:
+    """Gate the observability stack's cost on the serving path: run the
+    ``SMOKE_OBS_FLOOD`` sharded flood with tracing off and on in
+    interleaved rounds (same process, same jit caches, same thermal
+    state) and require the best traced round within ``OBS_OVERHEAD_MAX``
+    of the best untraced one.  Writes ``results/bench/obs.json``: the
+    measured ratio, per-span counts, the router's full metrics snapshot,
+    and the Prometheus render size — the artifact CI keeps for the
+    observability surface."""
+    import time
+
+    import jax
+
+    from benchmarks.bench_counting import _flood_db
+    from repro.core import build_lattice
+    from repro.core.database import shard_database
+    from repro.obs import MetricsRegistry, NULL_TRACER, Tracer
+    from repro.serve import CountingRouter
+
+    kw = SMOKE_OBS_FLOOD
+    config = (f"shard{kw['n_shards']}x{kw['n_rels']}x{kw['edges']}"
+              f"r{kw['rounds']}")
+    db = _flood_db(kw["n_rels"], kw["edges"], seed=0)
+    queries = [(p, None) for p in build_lattice(db.schema, 1)]
+    sdb = shard_database(db, kw["n_shards"])
+    router = CountingRouter(sdb, executor="sparse",
+                            max_batch_size=max(kw["n_rels"], 1),
+                            tracer=NULL_TRACER)
+    tracer = Tracer(capacity=1 << 15)
+
+    def flood_round() -> float:
+        # several floods per timed round: a single flood is ~2 ms, far
+        # too small for a 5% relative gate, so each round accumulates
+        # ``reps`` floods (evictions excluded from the timed section)
+        wall = 0.0
+        for _ in range(kw["reps"]):
+            for e in router.engines:
+                e.cache.evict_all()
+            router.invalidate()          # measure work, not result cache
+            t0 = time.perf_counter()
+            jax.block_until_ready([t.counts
+                                   for t in router.count_many(queries)])
+            wall += time.perf_counter() - t0
+        return wall
+
+    for tr in (NULL_TRACER, tracer):     # warm both modes (jit compiles)
+        router.set_tracer(tr)
+        flood_round()
+    walls = {"disabled": [], "enabled": []}
+    for _ in range(kw["rounds"]):        # interleaved, so drift hits both
+        router.set_tracer(NULL_TRACER)
+        walls["disabled"].append(flood_round())
+        router.set_tracer(tracer)
+        walls["enabled"].append(flood_round())
+    best_dis = min(walls["disabled"])
+    best_en = min(walls["enabled"])
+    ratio = best_en / best_dis if best_dis > 0 else 1.0
+
+    failures = []
+    if ratio > OBS_OVERHEAD_MAX and best_en - best_dis > OBS_OVERHEAD_SLACK_S:
+        failures.append(
+            f"tracing_overhead/{config}: traced flood is {ratio:.3f}x the "
+            f"untraced one, over the {OBS_OVERHEAD_MAX:.2f}x bar")
+
+    span_counts: dict = {}
+    for rec in tracer.records():
+        span_counts[rec.name] = span_counts.get(rec.name, 0) + 1
+    reg = MetricsRegistry()
+    reg.register("router", router.stats)
+    prom = reg.prometheus()
+    art = {"bench": "tracing_overhead", "config": config,
+           "walls_disabled_s": [round(w, 5) for w in walls["disabled"]],
+           "walls_enabled_s": [round(w, 5) for w in walls["enabled"]],
+           "overhead_ratio": round(ratio, 4),
+           "gate": OBS_OVERHEAD_MAX,
+           "reps_per_round": kw["reps"],
+           "span_counts": span_counts,
+           "tracer": tracer.snapshot(),
+           "prometheus_lines": len(prom.splitlines()),
+           "router_stats": reg.collect()["router"]}
+    out = Path(OBS_JSON)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(art, indent=1, default=str))
+    print(f"[perf-smoke] tracing overhead {ratio:.3f}x "
+          f"(gate {OBS_OVERHEAD_MAX:.2f}x, {tracer.recorded} spans, "
+          f"{len(prom.splitlines())} prometheus lines) -> {OBS_JSON}",
+          flush=True)
+    return failures
+
+
 def jax_backend() -> str:
     import jax
     return jax.default_backend()
@@ -250,6 +353,7 @@ def main() -> int:
                 f"smoke run exceeded its budget")
 
     failures.extend(check_kernel_parity())
+    failures.extend(check_tracing_overhead())
 
     import os
     if not os.environ.get("PERF_SMOKE_SKIP_VG"):

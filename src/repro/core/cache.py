@@ -43,6 +43,7 @@ from collections import OrderedDict
 from typing import (Any, Callable, FrozenSet, Hashable, Iterable, List,
                     Optional, Tuple)
 
+from ..obs.trace import NULL_TRACER
 from .contract import CostStats
 
 
@@ -93,6 +94,9 @@ class CtCache:
         # cache from many client threads (OrderedDict reorder + byte
         # accounting are not atomic on their own)
         self._lock = threading.RLock()
+        # request tracer for hit/miss/evict events; NULL_TRACER is free, a
+        # real one is wired in by CountingService.set_tracer
+        self.tracer = NULL_TRACER
         self.nbytes = 0
         self.hits = 0
         self.misses = 0
@@ -108,13 +112,18 @@ class CtCache:
         return key in self._entries
 
     def get(self, key: Hashable, default=None):
+        tr = self.tracer
         with self._lock:
             hit = self._entries.get(key)
             if hit is None:
                 self.misses += 1
+                if tr.enabled:
+                    tr.event("cache.miss", key=key)
                 return default
             self._entries.move_to_end(key)
             self.hits += 1
+            if tr.enabled:
+                tr.event("cache.hit", key=key, nbytes=hit.nbytes)
             return hit.value
 
     def put(self, key: Hashable, value: Any,
@@ -180,6 +189,8 @@ class CtCache:
         self.nbytes -= e.nbytes
         if self.stats is not None:
             self.stats.bump_cache(-e.nbytes)
+        if self.tracer.enabled:
+            self.tracer.event("cache.evict", key=key, nbytes=e.nbytes)
 
     def _shrink_to_budget(self, just_added: Optional[Hashable] = None) -> None:
         if self.budget_bytes is None:

@@ -53,6 +53,7 @@ from typing import FrozenSet, List, Optional, Sequence, Set, Tuple
 
 import jax.numpy as jnp
 
+from ..obs.trace import NULL_TRACER
 from .cache import CtCache
 from .contract import CostStats
 from .ct import CtTable
@@ -131,6 +132,9 @@ class CountingEngine:
         # version it was computed under
         self.cache.deps_fn = key_deps
         self.cache.version_fn = lambda: self.db.version
+        # request tracer (NULL_TRACER is free); CountingService.set_tracer
+        # wires a real one through engine + executor + cache together
+        self.tracer = NULL_TRACER
         self.dtype = dtype
         # one rows-counted set per engine: policies AND the counting
         # service share artefact key namespaces ("pos"/"full"/...), so
@@ -249,23 +253,29 @@ class CountingEngine:
         small = delta.num_edges <= max_update_fraction * max(rel_edges, 1)
         delta_db = delta.as_db(self.db) if small else None
         cache = self.cache
-        for key in cache.keys_snapshot():
-            meta = cache.entry_meta(key)
-            if meta is None:           # concurrently evicted
-                continue
-            deps, _version = meta
-            if deps is not None and rel not in deps:
-                report.retained += 1
-                continue
-            new_val = None
-            if small:
-                new_val, nb = self._delta_update(key, delta_db, delta.sign)
-            if new_val is not None:
-                cache.put(key, new_val, nbytes=nb)   # re-stamps the version
-                cache.delta_updated += 1
-                report.updated += 1
-            elif cache.discard(key):
-                report.invalidated += 1
+        with self.tracer.span("engine.apply_delta", rel=rel, op=delta.op,
+                              num_edges=delta.num_edges,
+                              small=small) as sp:
+            for key in cache.keys_snapshot():
+                meta = cache.entry_meta(key)
+                if meta is None:           # concurrently evicted
+                    continue
+                deps, _version = meta
+                if deps is not None and rel not in deps:
+                    report.retained += 1
+                    continue
+                new_val = None
+                if small:
+                    new_val, nb = self._delta_update(key, delta_db,
+                                                     delta.sign)
+                if new_val is not None:
+                    cache.put(key, new_val, nbytes=nb)  # re-stamps version
+                    cache.delta_updated += 1
+                    report.updated += 1
+                elif cache.discard(key):
+                    report.invalidated += 1
+            sp.set(updated=report.updated, invalidated=report.invalidated,
+                   retained=report.retained)
         return report
 
     def _delta_update(self, key: Tuple, delta_db: RelationalDB,

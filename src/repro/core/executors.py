@@ -35,6 +35,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.profile import annotate
+from ..obs.trace import NULL_TRACER
 from .contract import CostStats, _khatri_rao_reduce, _onehot
 from .ct import CtTable
 from .database import RelationalDB
@@ -104,6 +106,9 @@ class Executor:
         self._mobius_fn = mobius_fn
         # (stack key, padded batch) -> (db, jitted vmapped evaluator)
         self._batch_cache: dict = {}
+        # request tracer for jit-dispatch spans (NULL_TRACER is free); a
+        # real one is wired in by CountingService.set_tracer
+        self.tracer = NULL_TRACER
 
     # -- negative phase -----------------------------------------------------
     def mobius(self, stack: jnp.ndarray, k: int) -> jnp.ndarray:
@@ -160,7 +165,10 @@ class Executor:
 
             fn = self._batch_cache[key] = jax.jit(run)
         batch = jnp.stack(stacks + [stacks[0]] * (b_pad - b))
-        out = fn(batch)
+        with self.tracer.span("exec.mobius_batch", stacks=b, k=k,
+                              b_pad=b_pad), \
+                annotate("exec.mobius_batch"):
+            out = fn(batch)
         return [out[i] for i in range(b)]
 
     def mobius_batch_fused(self, block_lists: Sequence[Sequence[jnp.ndarray]],
@@ -227,7 +235,10 @@ class Executor:
         flat = [blk for bs in block_lists for blk in bs]
         for bs in [block_lists[0]] * (b_pad - b):        # pad: replay query 0
             flat.extend(bs)
-        outs = fn(*flat)
+        with self.tracer.span("exec.mobius_batch_fused", stacks=b, k=k,
+                              b_pad=b_pad), \
+                annotate("exec.mobius_batch_fused"):
+            outs = fn(*flat)
         return list(outs[:b])
 
     def local_mode(self):
@@ -324,7 +335,10 @@ class Executor:
             for p in plans[1:])
         fn = self._stacked_fn(db, template, b_pad,
                               t_layout if fused else None)
-        rows = fn(*stacked)                       # drops the pad rows
+        with self.tracer.span("exec.positive_batch", plans=b, b_pad=b_pad,
+                              fused=fused), \
+                annotate("exec.positive_batch"):
+            rows = fn(*stacked)                   # drops the pad rows
         out: List[CtTable] = []
         for plan, row in zip(plans, rows):
             if fused:

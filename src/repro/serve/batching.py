@@ -40,6 +40,7 @@ from ..core.executors import Executor, plan_input_arrays, plan_stack_key
 from ..core.mobius import complete_ct_many, positive_queries
 from ..core.plan import ContractionPlan, group_by_signature
 from ..core.variables import CtVar, LatticePoint
+from ..obs.trace import NULL_TRACER, NullTracer
 from .metrics import ServiceMetrics
 
 __all__ = ["TableMerger", "execute_bucketed", "execute_complete_bucketed",
@@ -151,7 +152,8 @@ def execute_bucketed(executor: Executor, db: RelationalDB,
                      plans: Sequence[ContractionPlan],
                      stats: Optional[CostStats] = None,
                      max_batch_size: Optional[int] = None,
-                     metrics: Optional[ServiceMetrics] = None
+                     metrics: Optional[ServiceMetrics] = None,
+                     tracer: NullTracer = NULL_TRACER
                      ) -> List[CtTable]:
     """Evaluate ``plans`` in shape-signature micro-batches.
 
@@ -169,6 +171,9 @@ def execute_bucketed(executor: Executor, db: RelationalDB,
             signature bucket).
         metrics: optional :class:`~repro.serve.metrics.ServiceMetrics`
             that receives one ``observe_batch`` per micro-batch.
+        tracer: optional :class:`~repro.obs.trace.Tracer`; each
+            micro-batch dispatch becomes a ``batch.dispatch`` span
+            (nested under whatever span is open on this thread).
 
     Returns:
         One :class:`~repro.core.ct.CtTable` per plan, in input order.
@@ -182,9 +187,17 @@ def execute_bucketed(executor: Executor, db: RelationalDB,
         step = max_batch_size if max_batch_size else len(idxs)
         for s in range(0, len(idxs), max(step, 1)):
             chunk = idxs[s:s + max(step, 1)]
+            span = (tracer.span("batch.dispatch", sig=sig,
+                                queries=len(chunk))
+                    if tracer.enabled else None)
             t0 = time.perf_counter()
-            tabs = executor.positive_batch(db, [plans[i] for i in chunk],
-                                           stats)
+            if span is not None:
+                with span:
+                    tabs = executor.positive_batch(
+                        db, [plans[i] for i in chunk], stats)
+            else:
+                tabs = executor.positive_batch(db, [plans[i] for i in chunk],
+                                               stats)
             dt = time.perf_counter() - t0
             if metrics is not None:
                 metrics.observe_batch(sig, len(chunk), dt)
@@ -245,11 +258,13 @@ def execute_complete_bucketed(engine: CountingEngine, policy,
     for point, keep in queries:
         pos.extend(positive_queries(point, keep, use_butterfly))
     todo = policy.batchable_misses(pos)
+    tracer = getattr(engine, "tracer", NULL_TRACER)
     if todo:
         plans = [engine.plan(p, k) for p, k in todo]
         with timer("positive"):
             tabs = execute_bucketed(engine.executor, engine.db, plans,
-                                    stats, max_batch_size, metrics)
+                                    stats, max_batch_size, metrics,
+                                    tracer=tracer)
         for (p, _), plan, tab in zip(todo, plans, tabs):
             policy.absorb(p, plan.keep, tab)
 
@@ -257,13 +272,18 @@ def execute_complete_bucketed(engine: CountingEngine, policy,
     # butterfly-eligible query takes the fused path; blockwise queries
     # fall back to per-query complete_ct over mobius_fn
     fused_fn = engine.mobius_fused_fn()
-    if metrics is not None:
+    if metrics is not None or tracer.enabled:
         inner_fused = fused_fn
+        _metrics = metrics
 
         def fused_fn(blocks, k, perm):
-            t0 = time.perf_counter()
-            out = inner_fused(blocks, k, perm)
-            metrics.observe_mobius(len(blocks), time.perf_counter() - t0)
+            with (tracer.span("mobius.dispatch", stacks=len(blocks), k=k)
+                  if tracer.enabled else nullcontext()):
+                t0 = time.perf_counter()
+                out = inner_fused(blocks, k, perm)
+                dt = time.perf_counter() - t0
+            if _metrics is not None:
+                _metrics.observe_mobius(len(blocks), dt)
             return out
 
     # any residual data access (unwarmed misses, eviction recomputes) times

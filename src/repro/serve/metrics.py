@@ -7,29 +7,49 @@ rather than one offline run, so its health is expressed in service terms:
 how many requests short-circuited on the cache, how many were coalesced
 with an identical in-flight request, how large the signature buckets
 actually got (batching efficiency), and what each bucket's execution
-latency/throughput looks like.  Everything is plain counters — cheap
-enough to stay on in production — and :meth:`ServiceMetrics.snapshot`
-renders one JSON-able dict for dashboards/benchmarks.
+latency/throughput looks like.  Counters are mutated from client threads,
+the dispatcher thread, and router fan-out threads concurrently, so every
+mutation goes through :meth:`inc`/``observe_*`` which hold the instance's
+lock — plain ``+=`` on a shared counter loses increments under the
+thread-switch interleavings a flood produces.
+
+Totals hide tails, so alongside the counters each service keeps
+fixed-bucket log-scale :class:`~repro.obs.hist.LatencyHistogram`\\ s
+(p50/p95/p99 + max) for queue wait, bucket execution, and end-to-end
+latency; the router adds shard-merge and its own end-to-end views.
+Histogram merge is exactly associative, which is what lets
+:meth:`ServiceMetrics.merged` roll per-shard histograms into fleet-level
+percentiles without bias.
+
+:meth:`ServiceMetrics.snapshot` and :meth:`RouterMetrics.snapshot` are
+derived from ``dataclasses.fields`` — a newly added counter appears in
+dashboards automatically instead of silently vanishing — and render one
+JSON-able dict for dashboards/benchmarks (histograms as their
+count/mean/percentile summaries).
 
 When one front-end routes over many database shards
 (:class:`~repro.serve.router.CountingRouter`), each shard's service keeps
 its own :class:`ServiceMetrics`; :meth:`ServiceMetrics.merged` rolls the
-per-shard counters (and their signature buckets) up into one aggregate
-view, and :class:`RouterMetrics` adds the routing-level counters on top.
+per-shard counters (and their signature buckets and histograms) up into
+one aggregate view, and :class:`RouterMetrics` adds the routing-level
+counters on top.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Sequence, Tuple
 
 from ..core.cache import CtCache
+from ..obs.hist import LatencyHistogram
 
 
 @dataclass
 class BucketMetrics:
-    """One shape-signature bucket's execution statistics."""
+    """One shape-signature bucket's execution statistics (mutated only
+    under the owning :class:`ServiceMetrics` lock)."""
     signature: Tuple
     queries: int = 0              # queries executed through this bucket
     batches: int = 0              # positive_batch dispatches issued
@@ -46,8 +66,53 @@ class BucketMetrics:
                     exec_s=round(self.exec_s, 6), qps=round(self.qps, 1))
 
 
+class _LockedMetrics:
+    """Shared mutation/snapshot machinery for the metrics dataclasses.
+
+    Fields are partitioned by type: ints/floats sum on merge and appear
+    directly in snapshots, :class:`LatencyHistogram` fields merge
+    element-wise and snapshot as percentile summaries, and ``_``-prefixed
+    fields (the lock) are internal.  Subclasses handle any remaining
+    fields (``buckets``) themselves.
+    """
+
+    def inc(self, **deltas) -> None:
+        """Atomically add ``deltas`` to the named counter fields.
+
+        Usage::
+
+            metrics.inc(requests=1, cache_hits=1)
+        """
+        with self._lock:
+            for name, d in deltas.items():
+                setattr(self, name, getattr(self, name) + d)
+
+    @classmethod
+    def _numeric_fields(cls):
+        return [f.name for f in dataclasses.fields(cls)
+                if f.type in ("int", "float", int, float)
+                and not f.name.startswith("_")]
+
+    @classmethod
+    def _hist_fields(cls):
+        return [f.name for f in dataclasses.fields(cls)
+                if "LatencyHistogram" in str(f.type)
+                and not f.name.startswith("_")]
+
+    def _base_snapshot(self) -> dict:
+        """Field-derived snapshot core; caller holds no lock (we take it)."""
+        out = {}
+        with self._lock:
+            for name in self._numeric_fields():
+                v = getattr(self, name)
+                out[name] = round(v, 6) if isinstance(v, float) else v
+            for name in self._hist_fields():
+                out[name] = getattr(self, name).as_dict()
+        return out
+
+
 @dataclass
-class ServiceMetrics:
+class ServiceMetrics(_LockedMetrics):
     """Aggregate counters for one :class:`~repro.serve.service
     .CountingService` instance."""
     requests: int = 0             # submit()/submit_complete() calls
@@ -71,29 +136,47 @@ class ServiceMetrics:
     delta_invalidated: int = 0    # cache entries dropped as stale
     delta_retained: int = 0       # cache entries untouched by deltas
     buckets: Dict[Tuple, BucketMetrics] = field(default_factory=dict)
+    queue_wait_hist: LatencyHistogram = field(
+        default_factory=LatencyHistogram)   # per-request queue residency
+    bucket_exec_hist: LatencyHistogram = field(
+        default_factory=LatencyHistogram)   # per-dispatch execution latency
+    e2e_hist: LatencyHistogram = field(
+        default_factory=LatencyHistogram)   # submit -> result end-to-end
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
 
     def observe_mobius(self, n_stacks: int, dt: float) -> None:
         """Record one batched negative-phase dispatch covering
         ``n_stacks`` same-shape butterfly stacks."""
-        self.mobius_batches += 1
-        self.mobius_stacked += n_stacks
-        self.mobius_exec_s += dt
+        with self._lock:
+            self.mobius_batches += 1
+            self.mobius_stacked += n_stacks
+            self.mobius_exec_s += dt
 
     def observe_batch(self, signature: Tuple, n_queries: int,
                       dt: float) -> None:
-        b = self.buckets.get(signature)
-        if b is None:
-            b = self.buckets[signature] = BucketMetrics(signature)
-        b.queries += n_queries
-        b.batches += 1
-        b.max_batch = max(b.max_batch, n_queries)
-        b.exec_s += dt
-        self.batches += 1
-        self.batched_queries += n_queries
-        self.exec_s += dt
+        with self._lock:
+            b = self.buckets.get(signature)
+            if b is None:
+                b = self.buckets[signature] = BucketMetrics(signature)
+            b.queries += n_queries
+            b.batches += 1
+            b.max_batch = max(b.max_batch, n_queries)
+            b.exec_s += dt
+            self.batches += 1
+            self.batched_queries += n_queries
+            self.exec_s += dt
+            self.bucket_exec_hist.observe(dt)
 
     def observe_wait(self, dt: float) -> None:
-        self.wait_s += dt
+        with self._lock:
+            self.wait_s += dt
+            self.queue_wait_hist.observe(dt)
+
+    def observe_e2e(self, dt: float) -> None:
+        """Record one request's submit→settle latency."""
+        with self._lock:
+            self.e2e_hist.observe(dt)
 
     @property
     def qps(self) -> float:
@@ -103,9 +186,10 @@ class ServiceMetrics:
     def merged(cls, many: Sequence["ServiceMetrics"]) -> "ServiceMetrics":
         """Roll several services' counters up into one aggregate view.
 
-        Scalar counters and timers sum; signature buckets with the same
-        signature merge (queries/batches/time sum, ``max_batch`` takes the
-        max).  The inputs are not modified.
+        Scalar counters and timers sum; latency histograms merge
+        element-wise (exactly associative); signature buckets with the
+        same signature merge (queries/batches/time sum, ``max_batch``
+        takes the max).  The inputs are not modified.
 
         Args:
             many: the per-shard :class:`ServiceMetrics` instances.
@@ -119,49 +203,40 @@ class ServiceMetrics:
             agg = ServiceMetrics.merged([svc.metrics for svc in shards])
         """
         out = cls()
-        scalar = [f.name for f in dataclasses.fields(cls)
-                  if f.name != "buckets"]       # future counters sum too
+        scalar = cls._numeric_fields()
+        hists = cls._hist_fields()
         for m in many:
-            for name in scalar:
-                setattr(out, name, getattr(out, name) + getattr(m, name))
-            for sig, b in m.buckets.items():
-                agg = out.buckets.get(sig)
-                if agg is None:
-                    agg = out.buckets[sig] = BucketMetrics(sig)
-                agg.queries += b.queries
-                agg.batches += b.batches
-                agg.max_batch = max(agg.max_batch, b.max_batch)
-                agg.exec_s += b.exec_s
+            with m._lock:
+                for name in scalar:
+                    setattr(out, name, getattr(out, name) + getattr(m, name))
+                for name in hists:
+                    getattr(out, name).merge(getattr(m, name))
+                for sig, b in m.buckets.items():
+                    agg = out.buckets.get(sig)
+                    if agg is None:
+                        agg = out.buckets[sig] = BucketMetrics(sig)
+                    agg.queries += b.queries
+                    agg.batches += b.batches
+                    agg.max_batch = max(agg.max_batch, b.max_batch)
+                    agg.exec_s += b.exec_s
         return out
 
     def snapshot(self, cache: Optional[CtCache] = None) -> dict:
-        """One JSON-able health dict; pass the engine's cache to include
-        its hit/miss/eviction/dropped counters alongside service counters."""
-        out = dict(
-            requests=self.requests, complete_requests=self.complete_requests,
-            cache_hits=self.cache_hits,
-            coalesced=self.coalesced, enqueued=self.enqueued,
-            flushes=self.flushes, size_flushes=self.size_flushes,
-            wait_flushes=self.wait_flushes,
-            backpressure_flushes=self.backpressure_flushes,
-            batches=self.batches, batched_queries=self.batched_queries,
-            mobius_batches=self.mobius_batches,
-            mobius_stacked=self.mobius_stacked,
-            mobius_exec_s=round(self.mobius_exec_s, 6),
-            exec_s=round(self.exec_s, 6), wait_s=round(self.wait_s, 6),
-            qps=round(self.qps, 1),
-            deltas=self.deltas, delta_updated=self.delta_updated,
-            delta_invalidated=self.delta_invalidated,
-            delta_retained=self.delta_retained,
-            buckets=[b.as_dict() for b in self.buckets.values()],
-        )
+        """One JSON-able health dict covering every dataclass field (new
+        counters appear automatically), plus the computed ``qps``; pass
+        the engine's cache to include its hit/miss/eviction/dropped
+        counters alongside service counters."""
+        out = self._base_snapshot()
+        out["qps"] = round(self.qps, 1)
+        with self._lock:
+            out["buckets"] = [b.as_dict() for b in self.buckets.values()]
         if cache is not None:
             out["cache"] = cache.info()
         return out
 
 
 @dataclass
-class RouterMetrics:
+class RouterMetrics(_LockedMetrics):
     """Routing-level counters of one :class:`~repro.serve.router
     .CountingRouter` — what happens *above* the per-shard services."""
     requests: int = 0             # router submit() calls
@@ -177,21 +252,24 @@ class RouterMetrics:
     complete_requests: int = 0    # routed complete-CT (Möbius) queries
     deltas: int = 0               # apply_delta() mutations routed to shards
     rebalances: int = 0           # online shard splits performed
+    merge_hist: LatencyHistogram = field(
+        default_factory=LatencyHistogram)   # per-ticket shard-merge latency
+    e2e_hist: LatencyHistogram = field(
+        default_factory=LatencyHistogram)   # router submit -> settled result
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
+
+    def observe_merge(self, dt: float) -> None:
+        with self._lock:
+            self.merge_hist.observe(dt)
+
+    def observe_e2e(self, dt: float) -> None:
+        with self._lock:
+            self.e2e_hist.observe(dt)
 
     def snapshot(self) -> dict:
-        """JSON-able dict of the routing counters (one flat level; the
+        """JSON-able dict of the routing counters, derived from the
+        dataclass fields (one flat level plus histogram summaries; the
         per-shard service counters live in
         :meth:`~repro.serve.router.CountingRouter.stats`)."""
-        return dict(requests=self.requests,
-                    fanout_requests=self.fanout_requests,
-                    single_shard_requests=self.single_shard_requests,
-                    merged_tables=self.merged_tables,
-                    device_merges=self.device_merges,
-                    partial_merges=self.partial_merges,
-                    fused_dispatches=self.fused_dispatches,
-                    not_routable=self.not_routable,
-                    cache_hits=self.cache_hits,
-                    coalesced=self.coalesced,
-                    complete_requests=self.complete_requests,
-                    deltas=self.deltas,
-                    rebalances=self.rebalances)
+        return self._base_snapshot()

@@ -50,6 +50,7 @@ from ..core.executors import (fanout_stack_key, make_executor,
                               plan_stack_key)
 from ..core.mobius import complete_ct_many, positive_queries
 from ..core.variables import CtVar, LatticePoint
+from ..obs.trace import NullTracer, SpanContext, default_tracer
 from .batching import TableMerger
 from .metrics import RouterMetrics, ServiceMetrics
 from .service import CountingService, CountTicket
@@ -78,7 +79,8 @@ class RouterTicket:
                  tickets: Sequence[CountTicket], merge: bool,
                  key: Optional[Tuple] = None,
                  result: Optional[CtTable] = None,
-                 epoch: int = 0):
+                 epoch: int = 0,
+                 trace_ctx: Optional[SpanContext] = None):
         self._router = router
         self._tickets = list(tickets)
         self._merge = merge
@@ -86,6 +88,8 @@ class RouterTicket:
         self._epoch = epoch            # cache generation at submit time
         self._result: Optional[CtTable] = result
         self._resolve_lock = threading.Lock()
+        self._trace_ctx = trace_ctx    # the router.submit span's context
+        self._t0 = time.perf_counter()  # router-level e2e reference
 
     @property
     def done(self) -> bool:
@@ -135,9 +139,25 @@ class RouterTicket:
                     raise
                 self._router._settle(self._key, out, self._epoch)
                 self._result = out
+                self._observe_settled("overlapped")
         finally:
             self._resolve_lock.release()
         return self._result
+
+    def _observe_settled(self, path: str) -> None:
+        """Router-level end-to-end accounting for this query: latency
+        histogram, cache-install trace event, slow-query log offer."""
+        router = self._router
+        dt = time.perf_counter() - self._t0
+        router.metrics.observe_e2e(dt)
+        tr = router.tracer
+        if tr.enabled:
+            tr.event("router.cache_install", parent=self._trace_ctx,
+                     path=path)
+        slow = tr.slow
+        if slow is not None and self._key is not None:
+            slow.offer("router.e2e", dt, path=path, key=self._key,
+                       shards=len(self._tickets))
 
     def _merge_overlapped(self, remaining) -> CtTable:
         """Collect the per-shard tables, merging as tickets settle: every
@@ -149,16 +169,21 @@ class RouterTicket:
         if len(pending) == 1:
             return pending[0].result(remaining())
         router = self._router
+        tr = router.tracer
+        shard_of = {id(t): s for s, t in enumerate(self._tickets)}
         vars_out = None
         partial = None                 # running device-side sum
         n_merged = 0
         folds = 0
+        straggler = 0                  # shard whose table arrived last
+        t_merge0 = time.perf_counter()
         while pending:
             ready = [t for t in pending if t.done]
             if not ready:              # nothing settled: block on one shard
                 ready = [pending[0]]   # (its result() flushes that shard)
             tabs = [t.result(remaining()) for t in ready]
             pending = [t for t in pending if t not in ready]
+            straggler = shard_of[id(ready[-1])]
             if vars_out is None:
                 vars_out = tabs[0].vars
             arrays = ([] if partial is None else [partial]) \
@@ -168,11 +193,16 @@ class RouterTicket:
             if len(arrays) > 1:
                 folds += 1
         out = CtTable(vars_out, partial)
+        dt = time.perf_counter() - t_merge0
         if self._merge and n_merged > 1:
-            with router._lock:
-                router.metrics.merged_tables += n_merged
-                router.metrics.device_merges += folds
-                router.metrics.partial_merges += max(folds - 1, 0)
+            router.metrics.inc(merged_tables=n_merged, device_merges=folds,
+                               partial_merges=max(folds - 1, 0))
+            router.metrics.observe_merge(dt)
+            if tr.enabled:
+                tr.record("router.merge", t_merge0, t_merge0 + dt,
+                          parent=self._trace_ctx, path="overlapped",
+                          folds=folds, merged=n_merged,
+                          straggler_shard=straggler)
         return out
 
     def _shard_tables(self, timeout: Optional[float] = None
@@ -191,10 +221,10 @@ class RouterTicket:
             if self._result is not None:
                 return
             if self._merge and n_merged > 1:
-                with self._router._lock:
-                    self._router.metrics.merged_tables += n_merged
+                self._router.metrics.inc(merged_tables=n_merged)
             self._router._settle(self._key, tab, self._epoch)
             self._result = tab
+            self._observe_settled("batched")
 
 
 class _MergedProvider:
@@ -240,6 +270,10 @@ class CountingRouter:
         dtype: accumulation dtype for every shard engine.
         metrics: routing-level counters; defaults to a fresh
             :class:`~repro.serve.metrics.RouterMetrics`.
+        tracer: request tracer shared by the router AND every shard
+            service/engine/cache (see :mod:`repro.obs.trace`); defaults
+            to :func:`~repro.obs.trace.default_tracer` — the free no-op
+            tracer unless ``REPRO_TRACE`` enables one.
 
     Usage::
 
@@ -257,12 +291,14 @@ class CountingRouter:
                  cache_result_bytes: int = 64 << 20,
                  dtype=jnp.float32,
                  rebalance_rows: Optional[int] = None,
-                 metrics: Optional[RouterMetrics] = None):
+                 metrics: Optional[RouterMetrics] = None,
+                 tracer: Optional[NullTracer] = None):
         self.sdb = sdb
         self.cache_entries = cache_entries
         self.cache_result_bytes = cache_result_bytes
         self.rebalance_rows = rebalance_rows
         self.metrics = metrics if metrics is not None else RouterMetrics()
+        self.tracer = tracer if tracer is not None else default_tracer()
         self._lock = threading.Lock()      # metrics + router cache state
         # one writer at a time: apply_delta and rebalance serialise here
         # (readers never take it — they work on snapshots)
@@ -287,7 +323,8 @@ class CountingRouter:
         self._svc_kw = dict(max_batch_size=max_batch_size,
                             max_wait_s=max_wait_s,
                             max_in_flight=max_in_flight,
-                            max_pending_bytes=max_pending_bytes)
+                            max_pending_bytes=max_pending_bytes,
+                            tracer=self.tracer)
         self.engines: List[CountingEngine] = []
         self.services: List[CountingService] = []
         for shard in sdb.shards:
@@ -320,6 +357,22 @@ class CountingRouter:
     def n_shards(self) -> int:
         return self.sdb.n_shards
 
+    def set_tracer(self, tracer: NullTracer) -> "CountingRouter":
+        """Wire one tracer through the router and every shard stack
+        (services, engines, executors, caches); shard stacks built by a
+        later :meth:`rebalance` inherit it too.  Pass
+        :data:`~repro.obs.trace.NULL_TRACER` to turn tracing back off.
+
+        Usage::
+
+            router.set_tracer(Tracer())
+        """
+        self.tracer = tracer
+        self._svc_kw["tracer"] = tracer
+        for svc in self._snapshot()[1]:
+            svc.set_tracer(tracer)
+        return self
+
     # -- client API ---------------------------------------------------------
     def submit(self, point: LatticePoint,
                keep: Optional[Sequence[CtVar]] = None) -> RouterTicket:
@@ -347,41 +400,63 @@ class CountingRouter:
                 under the database's partitioning (see
                 :meth:`~repro.core.database.ShardedDatabase.route`).
         """
+        tr = self.tracer
+        if not tr.enabled:
+            return self._submit_routed(point, keep, None)
+        with tr.span("router.submit", atoms=point.atoms) as sp:
+            return self._submit_routed(point, keep, sp)
+
+    def _submit_routed(self, point: LatticePoint,
+                       keep: Optional[Sequence[CtVar]],
+                       span) -> RouterTicket:
+        """:meth:`submit` body; ``span`` is the open ``router.submit``
+        span (or ``None`` when tracing is off) — the routing decision and
+        per-shard submits are annotated onto it and its context becomes
+        the parent of every downstream span of this query."""
         sdb, services, engines, epoch = self._snapshot()
+        ctx = span.context if span is not None else None
         key = (point.atoms, engines[0].plan(point, keep).keep)
         with self._lock:
-            self.metrics.requests += 1
+            self.metrics.inc(requests=1)
             hit = self._results.get(key)
             if hit is not None:
                 self._results.move_to_end(key)
-                self.metrics.cache_hits += 1
-                return RouterTicket(self, (), merge=False, result=hit)
+                self.metrics.inc(cache_hits=1)
+                if span is not None:
+                    span.set(mode="cache_hit")
+                return RouterTicket(self, (), merge=False, result=hit,
+                                    trace_ctx=ctx)
             inflight = self._inflight.get(key)
             if inflight is not None:
-                self.metrics.coalesced += 1
+                self.metrics.inc(coalesced=1)
+                if span is not None:
+                    span.set(mode="coalesced")
                 return inflight
         try:
             mode, shard = sdb.route(point)
         except NotRoutableError:
-            with self._lock:
-                self.metrics.not_routable += 1
+            self.metrics.inc(not_routable=1)
+            if span is not None:
+                span.set(mode="not_routable")
             raise
-        with self._lock:
-            if mode == "fanout":
-                self.metrics.fanout_requests += 1
-            else:
-                self.metrics.single_shard_requests += 1
+        if span is not None:
+            span.set(mode=mode, shards=(len(services) if mode == "fanout"
+                                        else 1))
         if mode == "fanout":
+            self.metrics.inc(fanout_requests=1)
             # the gate keeps a concurrent apply_delta from landing between
             # two shard enqueues of the SAME query (see __init__)
             with self._submit_gate:
-                tickets = [svc.submit(point, keep) for svc in services]
+                tickets = [svc.submit(point, keep, trace_ctx=ctx)
+                           for svc in services]
             ticket = RouterTicket(self, tickets, merge=True, key=key,
-                                  epoch=epoch)
+                                  epoch=epoch, trace_ctx=ctx)
         else:
+            self.metrics.inc(single_shard_requests=1)
             ticket = RouterTicket(
-                self, [services[shard % len(services)].submit(point, keep)],
-                merge=False, key=key, epoch=epoch)
+                self, [services[shard % len(services)].submit(
+                    point, keep, trace_ctx=ctx)],
+                merge=False, key=key, epoch=epoch, trace_ctx=ctx)
         with self._lock:
             # benign race: a concurrent identical submit may have landed
             # first — keep the first ticket; shard-level coalescing already
@@ -475,24 +550,26 @@ class CountingRouter:
         except NotImplementedError:
             return None
         resolved: Dict[Tuple, CtTable] = {}
+        n_hits = n_coal = n_fan = 0
         with self._lock:
             seen: set = set()
             for key in keys:
-                self.metrics.requests += 1
                 if key in resolved or key in seen:
                     if key in resolved:
-                        self.metrics.cache_hits += 1
+                        n_hits += 1
                     else:
-                        self.metrics.coalesced += 1
+                        n_coal += 1
                     continue
                 hit = self._results.get(key)
                 if hit is not None:
                     self._results.move_to_end(key)
-                    self.metrics.cache_hits += 1
+                    n_hits += 1
                     resolved[key] = hit
                 else:
                     seen.add(key)
-                    self.metrics.fanout_requests += 1
+                    n_fan += 1
+        self.metrics.inc(requests=len(keys), cache_hits=n_hits,
+                         coalesced=n_coal, fanout_requests=n_fan)
         todo = seen
         if todo:
             stats = [eng.stats for eng in engines]
@@ -506,16 +583,37 @@ class CountingRouter:
                     if not live:
                         continue
                     gplans = [p for p, _ in live]
+                    t0 = time.perf_counter()
                     merged = ex0.positive_fanout_merged(
                         dbs, gplans, sdb.partitioned, stats)
+                    dt = time.perf_counter() - t0
                     for (_, key), tab in zip(live, merged):
                         self._settle(key, tab, epoch)
                         resolved[key] = tab
-                    with self._lock:
-                        self.metrics.device_merges += 1
-                        self.metrics.fused_dispatches += 1
-                        self.metrics.merged_tables += (len(gplans)
-                                                       * len(dbs))
+                    self.metrics.inc(device_merges=1, fused_dispatches=1,
+                                     merged_tables=len(gplans) * len(dbs))
+                    self.metrics.observe_merge(dt)
+                    tr = self.tracer
+                    if tr.enabled:
+                        # retroactive per-query roots: the fast path has no
+                        # per-query submit, but the trace must still show
+                        # which dispatch answered each query
+                        t1 = t0 + dt
+                        for _, key in live:
+                            self.metrics.observe_e2e(dt)
+                            root = tr.record("router.submit", t0, t1,
+                                             mode="fanout_fused",
+                                             atoms=key[0])
+                            tr.record("router.merge", t0, t1, parent=root,
+                                      path="fanout_fused",
+                                      merged=len(dbs), shards=len(dbs))
+                    else:
+                        for _ in live:
+                            self.metrics.observe_e2e(dt)
+                    slow = self.tracer.slow
+                    if slow is not None:
+                        slow.offer("router.e2e", dt, path="fanout_fused",
+                                   queries=len(gplans), shards=len(dbs))
         return [resolved[key] for key in keys]
 
     def _resolve_many(self, tickets: Sequence["RouterTicket"]
@@ -540,8 +638,7 @@ class CountingRouter:
             for t, tab, tabs in zip(todo, merged, shard_tabs):
                 t._install(tab, len(tabs))
             if dispatches:
-                with self._lock:
-                    self.metrics.device_merges += dispatches
+                self.metrics.inc(device_merges=dispatches)
         return [t.result() for t in tickets]
 
     # -- scheduling ---------------------------------------------------------
@@ -616,9 +713,12 @@ class CountingRouter:
                         ticket = self._inflight.get(key)
                     if ticket is not None:
                         ticket._install(tab, len(services))
-                with self._lock:
-                    self.metrics.device_merges += 1
-                    self.metrics.fused_dispatches += 1
+                self.metrics.inc(device_merges=1, fused_dispatches=1)
+                self.metrics.observe_merge(dt)
+                tr = self.tracer
+                if tr.enabled:
+                    tr.record("router.fused_flush", t0, t0 + dt,
+                              plans=len(plans), shards=len(services))
         except BaseException as err:
             # undelivered waiters must not hang: error + settle whatever
             # deliver_external has not already settled, and clear the
@@ -763,17 +863,18 @@ class CountingRouter:
             norm.append((point, tuple(keep)))
         out: List[Optional[CtTable]] = [None] * len(norm)
         todo: List[int] = []
+        n_hits = 0
         with self._lock:               # complete-table result cache
-            self.metrics.complete_requests += len(norm)
             for i, (point, keep) in enumerate(norm):
                 hit = self._results.get(("complete", point.atoms, keep))
                 if hit is not None:
                     self._results.move_to_end(("complete", point.atoms,
                                                keep))
-                    self.metrics.cache_hits += 1
+                    n_hits += 1
                     out[i] = hit
                 else:
                     todo.append(i)
+        self.metrics.inc(complete_requests=len(norm), cache_hits=n_hits)
         if not todo:
             return out                                   # type: ignore
         subs: List[Tuple[LatticePoint, Tuple]] = []
@@ -870,8 +971,7 @@ class CountingRouter:
                 # epoch-invalidate while the gate still blocks readers, so
                 # no submit can serve a pre-delta merged result afterwards
                 self.invalidate()
-            with self._lock:
-                self.metrics.deltas += 1
+            self.metrics.inc(deltas=1)
         if self.rebalance_rows is not None:
             for s in range(sdb.n_shards):
                 if sdb.partitioned_rows(s) > self.rebalance_rows:
@@ -933,7 +1033,7 @@ class CountingRouter:
                 self._results.clear()
                 self._results_bytes = 0
                 self._epoch += 1       # mid-flight merges settle, not cache
-                self.metrics.rebalances += 1
+            self.metrics.inc(rebalances=1)
         old_svc.flush()                # drain stragglers on the old stack
         return new_idx
 
@@ -1000,4 +1100,4 @@ class CountingRouter:
                     cache_agg[k] = cache_agg.get(k, 0) + v
         agg["cache"] = cache_agg
         return {"router": self.metrics.snapshot(), "aggregate": agg,
-                "shards": shard_snaps}
+                "shards": shard_snaps, "tracer": self.tracer.snapshot()}

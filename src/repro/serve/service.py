@@ -61,6 +61,7 @@ from ..core.database import FactDelta
 from ..core.engine import CountingEngine, DeltaReport, OnDemandPositives
 from ..core.plan import ContractionPlan
 from ..core.variables import CtVar, LatticePoint
+from ..obs.trace import NullTracer, SpanContext, default_tracer
 from .batching import execute_bucketed, execute_complete_bucketed
 from .metrics import ServiceMetrics
 
@@ -78,7 +79,7 @@ class _Pending:
 
     __slots__ = ("point", "keep", "plan", "sig", "complete", "sinks",
                  "cache_result", "enqueued_at", "event", "result", "error",
-                 "callbacks")
+                 "callbacks", "trace_ctx")
 
     def __init__(self, point: LatticePoint, keep: Tuple[CtVar, ...],
                  plan: ContractionPlan, complete: bool = False):
@@ -94,6 +95,10 @@ class _Pending:
         self.event = threading.Event()
         self.result: Optional[CtTable] = None
         self.error: Optional[BaseException] = None
+        # parent span for this query's service-side spans: set from the
+        # submitter's trace context (e.g. the router's submit span), then
+        # re-pointed at the queue-residency span once drained
+        self.trace_ctx: Optional[SpanContext] = None
         # fired (once each) after the event is set: the asyncio bridge —
         # waiters that cannot block a thread park a loop.call_soon_threadsafe
         # hook here instead (callbacks must be idempotent: the
@@ -231,6 +236,10 @@ class CountingService:
             (see :func:`~repro.core.mobius.complete_ct`).
         metrics: counters sink; defaults to a fresh
             :class:`~repro.serve.metrics.ServiceMetrics`.
+        tracer: request tracer wired through the service, its engine,
+            executor, and cache (see :mod:`repro.obs.trace`); defaults to
+            :func:`~repro.obs.trace.default_tracer` — the free no-op
+            tracer unless the ``REPRO_TRACE`` env var enables one.
 
     Raises:
         ValueError: ``max_batch_size < 1``.
@@ -248,7 +257,8 @@ class CountingService:
                  max_pending_bytes: Optional[int] = None,
                  dispatcher: bool = False,
                  use_butterfly: bool = True,
-                 metrics: Optional[ServiceMetrics] = None):
+                 metrics: Optional[ServiceMetrics] = None,
+                 tracer: Optional[NullTracer] = None):
         if max_batch_size < 1:
             raise ValueError("max_batch_size must be >= 1")
         self.engine = engine
@@ -259,6 +269,7 @@ class CountingService:
                                   is not None else engine.cache.budget_bytes)
         self.use_butterfly = use_butterfly
         self.metrics = metrics if metrics is not None else ServiceMetrics()
+        self.set_tracer(tracer if tracer is not None else default_tracer())
         self._lock = threading.RLock()         # queue state
         # execution + cache writes; re-entrant so a caller already holding
         # the fence() (e.g. the router's all-shard delta fence) can invoke
@@ -275,10 +286,29 @@ class CountingService:
         if dispatcher:
             self.start()
 
+    def set_tracer(self, tracer: NullTracer) -> "CountingService":
+        """Wire one tracer through the whole stack this service fronts:
+        the service itself, its engine (``apply_delta`` spans), the
+        engine's executor (jit-dispatch spans), and the shared cache
+        (hit/miss/evict events).  Pass :data:`~repro.obs.trace
+        .NULL_TRACER` to turn tracing back off.
+
+        Usage::
+
+            svc.set_tracer(Tracer())
+        """
+        self.tracer = tracer
+        eng = self.engine
+        eng.tracer = tracer
+        eng.executor.tracer = tracer
+        eng.cache.tracer = tracer
+        return self
+
     # -- client API ---------------------------------------------------------
     def submit(self, point: LatticePoint,
                keep: Optional[Sequence[CtVar]] = None,
-               sink: Optional[Sink] = None) -> CountTicket:
+               sink: Optional[Sink] = None,
+               trace_ctx: Optional[SpanContext] = None) -> CountTicket:
         """Enqueue one positive-count query; returns immediately.
 
         With no ``sink`` the result is cached under the engine's on-demand
@@ -291,6 +321,9 @@ class CountingService:
             keep: ct-table axes; defaults to every entity/edge attribute
                 of the point.
             sink: optional result callback, called during batch execution.
+            trace_ctx: parent span context for this query's service-side
+                spans — pass the submitter's span (e.g. the router's) to
+                keep the whole request in one trace.
 
         Returns:
             A :class:`CountTicket` (already ``done`` on a cache hit).
@@ -300,11 +333,14 @@ class CountingService:
             ticket = svc.submit(point, keep)
         """
         plan = self.engine.plan(point, keep)
-        return self._enqueue(point, plan.keep, plan, sink, complete=False)
+        return self._enqueue(point, plan.keep, plan, sink, complete=False,
+                             trace_ctx=trace_ctx)
 
     def submit_complete(self, point: LatticePoint,
                         keep: Optional[Sequence[CtVar]] = None,
-                        sink: Optional[Sink] = None) -> CountTicket:
+                        sink: Optional[Sink] = None,
+                        trace_ctx: Optional[SpanContext] = None
+                        ) -> CountTicket:
         """Enqueue one complete-CT query (positive + Möbius negative
         phase); returns immediately.
 
@@ -333,24 +369,25 @@ class CountingService:
                                      include_rind=True)
         keep_t = tuple(keep)
         plan = self.engine.plan(point, keep_t)   # signature + byte estimate
-        return self._enqueue(point, keep_t, plan, sink, complete=True)
+        return self._enqueue(point, keep_t, plan, sink, complete=True,
+                             trace_ctx=trace_ctx)
 
     def _enqueue(self, point: LatticePoint, keep_t: Tuple[CtVar, ...],
                  plan: ContractionPlan, sink: Optional[Sink],
-                 complete: bool) -> CountTicket:
+                 complete: bool,
+                 trace_ctx: Optional[SpanContext] = None) -> CountTicket:
         to_execute: List[_Pending] = []
+        tr = self.tracer
         with self._lock:
             if self._shut_down:
                 raise ServiceShutdown("submit on a shut-down service")
-            self.metrics.requests += 1
-            if complete:
-                self.metrics.complete_requests += 1
+            self.metrics.inc(requests=1, complete_requests=int(complete))
             if sink is None:
                 cache_key = (self._complete_key(point, keep_t) if complete
                              else self._cache_key(point, keep_t))
                 hit = self.engine.cache.get(cache_key)
                 if hit is not None:
-                    self.metrics.cache_hits += 1
+                    self.metrics.inc(cache_hits=1)
                     return CountTicket(self, result=hit)
             req_key = ("complete" if complete else "pos",
                        point.atoms, keep_t)
@@ -360,16 +397,20 @@ class CountingService:
                     entry.sinks.append(sink)
                 else:
                     entry.cache_result = True
-                self.metrics.coalesced += 1
+                self.metrics.inc(coalesced=1)
+                if tr.enabled:
+                    tr.event("service.coalesced", parent=trace_ctx,
+                             atoms=point.atoms)
                 return CountTicket(self, entry=entry)
             entry = _Pending(point, keep_t, plan, complete)
+            entry.trace_ctx = trace_ctx
             entry.cache_result = sink is None
             if sink is not None:
                 entry.sinks.append(sink)
             self._pending[req_key] = entry
             self._by_sig.setdefault(entry.sig, []).append(req_key)
             self._pending_bytes += self._estimate_bytes(plan)
-            self.metrics.enqueued += 1
+            self.metrics.inc(enqueued=1)
             ticket = CountTicket(self, entry=entry)
             to_execute = self._drain_triggered(entry)
             self._wake.notify_all()      # dispatcher re-arms its deadline
@@ -520,11 +561,9 @@ class CountingService:
             if delta is None:
                 return None
             report = self.engine.apply_delta(delta, **kw)
-        with self._lock:
-            self.metrics.deltas += 1
-            self.metrics.delta_updated += report.updated
-            self.metrics.delta_invalidated += report.invalidated
-            self.metrics.delta_retained += report.retained
+        self.metrics.inc(deltas=1, delta_updated=report.updated,
+                         delta_invalidated=report.invalidated,
+                         delta_retained=report.retained)
         return report
 
     def insert_facts(self, rel: str, src, dst,
@@ -677,7 +716,10 @@ class CountingService:
                                  for e in self._pending.values())
                     due = self.max_wait_s - (time.perf_counter() - oldest)
                     if due <= 0:
-                        self.metrics.wait_flushes += 1
+                        self.metrics.inc(wait_flushes=1)
+                        if self.tracer.enabled:
+                            self.tracer.event("service.flush",
+                                              trigger="deadline")
                         entries = self._drain_all()
                     else:
                         timeout = due
@@ -747,15 +789,19 @@ class CountingService:
         usual sink/cache/result routing under the exec lock, then settle.
         The tables must be exactly what :meth:`_execute` would have
         produced (the fused path evaluates the same plans)."""
+        tr = self.tracer
         try:
             with self._exec_lock:
                 now = time.perf_counter()
                 for e, tab in delivered:
                     self.metrics.observe_wait(now - e.enqueued_at)
+                    if tr.enabled:
+                        e.trace_ctx = tr.record(
+                            "service.queue", e.enqueued_at, now,
+                            parent=e.trace_ctx, external=True)
                     self._deliver(e, tab)
         finally:
-            for e, _ in delivered:
-                e.settle()
+            self._settle_all([e for e, _ in delivered])
 
     def _drain_all(self) -> List[_Pending]:
         """Take the whole queue (lock held)."""
@@ -764,7 +810,7 @@ class CountingService:
         self._by_sig.clear()
         self._pending_bytes = 0
         if entries:
-            self.metrics.flushes += 1
+            self.metrics.inc(flushes=1)
         return entries
 
     def _drain_bucket(self, sig: Tuple) -> List[_Pending]:
@@ -774,7 +820,7 @@ class CountingService:
         self._pending_bytes -= sum(self._estimate_bytes(e.plan)
                                    for e in entries)
         if entries:
-            self.metrics.flushes += 1
+            self.metrics.inc(flushes=1)
         return entries
 
     def _drain_triggered(self, entry: _Pending) -> List[_Pending]:
@@ -784,18 +830,26 @@ class CountingService:
         over_bytes = (self.max_pending_bytes is not None
                       and self._pending_bytes > self.max_pending_bytes
                       and len(self._pending) > 1)
+        tr = self.tracer
         if over_count or over_bytes:
-            self.metrics.backpressure_flushes += 1
+            self.metrics.inc(backpressure_flushes=1)
+            if tr.enabled:
+                tr.event("service.flush", trigger="backpressure",
+                         over_count=over_count, over_bytes=over_bytes)
             return self._drain_all()
         if self._defer_depth:
             return []                  # caller flushes itself; see
         if len(self._by_sig.get(entry.sig, ())) >= self.max_batch_size:
-            self.metrics.size_flushes += 1
+            self.metrics.inc(size_flushes=1)
+            if tr.enabled:
+                tr.event("service.flush", trigger="size", sig=entry.sig)
             return self._drain_bucket(entry.sig)
         if self.max_wait_s is not None:
             oldest = min(e.enqueued_at for e in self._pending.values())
             if time.perf_counter() - oldest >= self.max_wait_s:
-                self.metrics.wait_flushes += 1
+                self.metrics.inc(wait_flushes=1)
+                if tr.enabled:
+                    tr.event("service.flush", trigger="deadline")
                 return self._drain_all()
         return []
 
@@ -806,29 +860,50 @@ class CountingService:
         # already out of the queue, so every event MUST be set even on
         # failure — a waiter left unsignalled would hang forever.
         eng = self.engine
+        tr = self.tracer
         try:
             with self._exec_lock:
                 now = time.perf_counter()
                 for e in entries:
                     self.metrics.observe_wait(now - e.enqueued_at)
+                    if tr.enabled:
+                        # the queue span is only known now (retroactive);
+                        # re-point the entry at it so its exec span nests
+                        e.trace_ctx = tr.record(
+                            "service.queue", e.enqueued_at, now,
+                            parent=e.trace_ctx, sig=e.sig)
                 positives = [e for e in entries if not e.complete]
                 completes = [e for e in entries if e.complete]
                 if positives:
+                    t0 = time.perf_counter()
                     with eng.stats.timer("positive"):
                         tabs = execute_bucketed(
                             eng.executor, eng.db,
                             [e.plan for e in positives],
                             eng.stats, max_batch_size=self.max_batch_size,
-                            metrics=self.metrics)
+                            metrics=self.metrics, tracer=tr)
+                    if tr.enabled:
+                        t1 = time.perf_counter()
+                        for e in positives:
+                            tr.record("service.exec", t0, t1,
+                                      parent=e.trace_ctx, phase="positive",
+                                      batch=len(positives))
                     for e, tab in zip(positives, tabs):
                         self._deliver(e, tab)
                 if completes:
+                    t0 = time.perf_counter()
                     tabs = execute_complete_bucketed(
                         eng, self._complete_policy(),
                         [(e.point, e.keep) for e in completes],
                         eng.stats, max_batch_size=self.max_batch_size,
                         metrics=self.metrics,
                         use_butterfly=self.use_butterfly)
+                    if tr.enabled:
+                        t1 = time.perf_counter()
+                        for e in completes:
+                            tr.record("service.exec", t0, t1,
+                                      parent=e.trace_ctx, phase="complete",
+                                      batch=len(completes))
                     for e, tab in zip(completes, tabs):
                         self._deliver(e, tab)
         except BaseException as err:
@@ -837,8 +912,20 @@ class CountingService:
                     e.error = err          # propagate to every waiter
             raise
         finally:
-            for e in entries:
-                e.settle()
+            self._settle_all(entries)
+
+    def _settle_all(self, entries: Sequence[_Pending]) -> None:
+        """Wake every waiter, then record each entry's submit→settle
+        latency (and offer it to the slow-query log when tracing)."""
+        done = time.perf_counter()
+        slow = self.tracer.slow
+        for e in entries:
+            e.settle()
+            dt = done - e.enqueued_at
+            self.metrics.observe_e2e(dt)
+            if slow is not None:
+                slow.offer("service.e2e", dt, sig=e.sig,
+                           complete=e.complete, atoms=e.point.atoms)
 
     def _deliver(self, e: _Pending, tab: CtTable) -> None:
         """Route one finished query: sinks, cache write, result slot."""
@@ -889,4 +976,6 @@ class CountingService:
 
             print(svc.stats()["qps"], svc.stats()["cache"]["hits"])
         """
-        return self.metrics.snapshot(self.engine.cache)
+        out = self.metrics.snapshot(self.engine.cache)
+        out["tracer"] = self.tracer.snapshot()
+        return out

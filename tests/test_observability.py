@@ -1,0 +1,541 @@
+"""Observability-stack tests: tracing, percentile telemetry, export.
+
+* :mod:`repro.obs.hist` — log-bucket percentile histograms whose merge is
+  exactly associative/commutative (what lets per-shard histograms roll up
+  into fleet percentiles without bias).
+* :mod:`repro.obs.trace` — ring-buffered request spans: implicit
+  same-thread nesting, explicit cross-thread parenting by value,
+  retroactive spans, and tree reconstruction.
+* :mod:`repro.serve.metrics` — lock-guarded counters stay EXACT under a
+  concurrent flood (the seed's plain ``+=`` lost increments); snapshots
+  are derived from ``dataclasses.fields`` so no counter can silently
+  vanish from dashboards; ``merged`` is an element-wise sum.
+* End to end — a traced flood over a 2-shard router reconstructs, per
+  query, the full path router submit → shard queue → bucket execution →
+  shard merge → cache install, with per-stage percentiles exported to
+  Prometheus text and JSON.
+"""
+
+import dataclasses
+import json
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (CostStats, CountingEngine, build_lattice,
+                        shard_database)
+from repro.obs import (LatencyHistogram, MetricsRegistry, N_BUCKETS,
+                       NULL_TRACER, SlowQueryLog, Tracer, build_trees,
+                       default_tracer)
+from repro.obs import profile
+from repro.obs.trace import NullTracer
+from repro.serve import (CountingRouter, CountingService, RouterMetrics,
+                         ServiceMetrics)
+from tests.test_distributed_counting import _routable_points
+from tests.test_mutations import fresh_pairs
+from tests.test_serve import flood_db, mixed_db
+
+
+# ------------------------------------------------------------- histogram --
+
+def _random_hist(rng, n=50, scale=0.02):
+    h = LatencyHistogram()
+    for _ in range(n):
+        h.observe(float(rng.uniform(0, scale)))
+    return h
+
+
+def test_histogram_buckets_and_percentiles():
+    h = LatencyHistogram()
+    assert h.percentile(0.99) == 0.0                 # empty reports zero
+    for ms in (1, 1, 1, 1, 1, 1, 1, 1, 1, 100):      # one 100ms straggler
+        h.observe(ms / 1e3)
+    assert h.count == 10
+    assert h.percentile(0.50) <= h.percentile(0.95) <= h.percentile(0.99)
+    # the p99 bucket bound is within 2x of the true tail by construction
+    assert 0.1 <= h.percentile(0.99) <= 0.2
+    assert h.max_s == pytest.approx(0.1)
+    d = h.as_dict()
+    assert set(d) == {"count", "mean_s", "p50_s", "p95_s", "p99_s", "max_s"}
+    # a single observation's percentile is capped at the observed max
+    one = LatencyHistogram()
+    one.observe(0.003)
+    assert one.percentile(0.5) == pytest.approx(0.003)
+
+
+def test_histogram_bucket_of_bounds():
+    assert LatencyHistogram.bucket_of(0.0) == 0
+    assert LatencyHistogram.bucket_of(-1.0) == 0
+    assert LatencyHistogram.bucket_of(1e12) == N_BUCKETS - 1
+    for d in (1e-9, 1e-6, 1e-3, 1.0):
+        i = LatencyHistogram.bucket_of(d)
+        assert d <= LatencyHistogram.bucket_upper_s(i)
+
+
+def test_histogram_merge_associative_and_commutative():
+    rng = np.random.default_rng(0)
+    hs = [_random_hist(rng) for _ in range(4)]
+    left = LatencyHistogram()
+    for h in hs:
+        left.merge(h)
+    right = LatencyHistogram()
+    for h in reversed(hs):
+        right.merge(h)
+    nested = LatencyHistogram.merged(
+        [LatencyHistogram.merged(hs[:2]), LatencyHistogram.merged(hs[2:])])
+    assert left == right == nested
+    assert left.count == sum(h.count for h in hs)
+    assert left.sum_s == pytest.approx(sum(h.sum_s for h in hs))
+    assert left.max_s == max(h.max_s for h in hs)
+    for i in range(N_BUCKETS):
+        assert left.counts[i] == sum(h.counts[i] for h in hs)
+    for h in hs:                                     # inputs untouched
+        assert h.count == 50
+
+
+def test_histogram_prometheus_bucket_shape():
+    h = LatencyHistogram()
+    for ms in (1, 2, 4, 50):
+        h.observe(ms / 1e3)
+    buckets = h.nonzero_buckets()
+    assert buckets[-1][1] == h.count                 # cumulative counts
+    uppers = [u for u, _ in buckets]
+    assert uppers == sorted(uppers)
+
+
+# ----------------------------------------------------------------- tracer --
+
+def test_tracer_nesting_and_trees():
+    tr = Tracer(capacity=64)
+    with tr.span("root", mode="fanout") as root:
+        ctx = root.context
+        with tr.span("child"):
+            pass
+    tr.record("retro", 0.0, 1.0, parent=ctx, shard=1)
+    tr.event("mark", parent=ctx)
+    trees = tr.trees()
+    assert len(trees) == 1
+    (t,) = trees
+    assert t["spans"] == 4
+    (r,) = t["roots"]
+    assert r["name"] == "root" and r["attrs"]["mode"] == "fanout"
+    assert {c["name"] for c in r["children"]} == {"child", "retro", "mark"}
+
+
+def test_tracer_cross_thread_parenting():
+    tr = Tracer()
+    with tr.span("submit") as sp:
+        ctx = sp.context
+
+    def worker():
+        t0 = time.perf_counter()
+        tr.record("queue", t0, time.perf_counter(), parent=ctx)
+
+    th = threading.Thread(target=worker)
+    th.start()
+    th.join()
+    recs = tr.records()
+    assert len({r.trace_id for r in recs}) == 1      # one trace, two threads
+    child = next(r for r in recs if r.name == "queue")
+    parent = next(r for r in recs if r.name == "submit")
+    assert child.parent_id == parent.span_id
+    assert child.thread != parent.thread
+
+
+def test_tracer_ring_drops_oldest():
+    tr = Tracer(capacity=4)
+    for i in range(10):
+        tr.event(f"e{i}")
+    snap = tr.snapshot()
+    assert snap["recorded"] == 10
+    assert snap["resident"] == 4
+    assert snap["dropped"] == 6
+    assert [r.name for r in tr.records()] == ["e6", "e7", "e8", "e9"]
+    tr.clear()
+    assert tr.snapshot()["recorded"] == 0
+
+
+def test_build_trees_promotes_orphans():
+    tr = Tracer(capacity=2)                          # parent falls off
+    ctx = tr.record("parent", 0.0, 1.0)
+    tr.event("a", parent=ctx)
+    tr.event("b", parent=ctx)
+    assert [r.name for r in tr.records()] == ["a", "b"]
+    trees = build_trees(tr.records())
+    (t,) = trees
+    assert {r["name"] for r in t["roots"]} == {"a", "b"}
+
+
+def test_null_tracer_is_inert():
+    tr = NULL_TRACER
+    assert not tr.enabled and tr.slow is None
+    with tr.span("x", attrs=1) as sp:
+        assert sp.context is None
+        sp.set(y=2)
+    assert tr.record("r", 0.0, 1.0) is None
+    assert tr.records() == [] and tr.trees() == []
+    assert tr.snapshot()["enabled"] is False
+
+
+def test_default_tracer_env_knob(monkeypatch):
+    monkeypatch.delenv("REPRO_TRACE", raising=False)
+    assert default_tracer() is NULL_TRACER
+    monkeypatch.setenv("REPRO_TRACE", "0")
+    assert default_tracer() is NULL_TRACER
+    monkeypatch.setenv("REPRO_TRACE", "4096")
+    tr = default_tracer()
+    assert isinstance(tr, Tracer) and tr.capacity == 4096
+    monkeypatch.setenv("REPRO_TRACE", "on")
+    assert default_tracer().capacity == 65536
+    monkeypatch.setenv("REPRO_TRACE_SLOW_MS", "10")
+    assert default_tracer().slow.threshold_s == pytest.approx(0.01)
+
+
+def test_service_picks_up_env_tracer(monkeypatch):
+    monkeypatch.setenv("REPRO_TRACE", "512")
+    db = flood_db(n_rels=2, edges=8)
+    eng = CountingEngine(db, "sparse", CostStats())
+    svc = CountingService(eng, max_batch_size=8)
+    try:
+        assert svc.tracer.enabled and svc.tracer.capacity == 512
+        # one tracer instance threaded through engine/executor/cache
+        assert eng.tracer is svc.tracer
+        assert eng.executor.tracer is svc.tracer
+        assert eng.cache.tracer is svc.tracer
+        point = build_lattice(db.schema, 1)[0]
+        svc.count(point)
+        names = {r.name for r in svc.tracer.records()}
+        assert "service.queue" in names
+        assert "service.exec" in names
+        assert svc.stats()["tracer"]["enabled"] is True
+    finally:
+        svc.shutdown()
+
+
+# --------------------------------------------------------------- slow log --
+
+def test_slow_query_log_keeps_top_k():
+    log = SlowQueryLog(threshold_s=0.0, top_k=3)
+    for i, ms in enumerate([5, 1, 9, 3, 7]):
+        log.offer(f"q{i}", ms / 1e3, shard=i)
+    got = [round(q.duration_s * 1e3) for q in log.entries()]
+    assert got == [9, 7, 5]                          # slowest first
+    assert log.offered == 5 and log.admitted >= 3
+    assert log.entries()[0].info["shard"] == 2
+    assert all(set(d) == {"name", "duration_s", "at", "info"}
+               for d in log.as_dicts())
+
+
+def test_slow_query_log_threshold_and_disable():
+    log = SlowQueryLog(threshold_s=0.05, top_k=4)
+    assert not log.offer("fast", 0.01)
+    assert log.offer("slow", 0.10)
+    assert len(log.entries()) == 1
+    off = SlowQueryLog(threshold_s=None)
+    assert not off.offer("anything", 99.0)
+    assert off.entries() == []
+
+
+# ---------------------------------------------------------------- metrics --
+
+def test_snapshots_cover_every_dataclass_field():
+    """Satellite: snapshots are field-derived — a newly added counter
+    cannot silently vanish from dashboards."""
+    svc_snap = ServiceMetrics().snapshot()
+    for f in dataclasses.fields(ServiceMetrics):
+        if not f.name.startswith("_"):
+            assert f.name in svc_snap, f.name
+    rt_snap = RouterMetrics().snapshot()
+    for f in dataclasses.fields(RouterMetrics):
+        if not f.name.startswith("_"):
+            assert f.name in rt_snap, f.name
+    # histograms snapshot as percentile summaries
+    assert svc_snap["queue_wait_hist"]["count"] == 0
+    assert rt_snap["merge_hist"]["p99_s"] == 0.0
+
+
+def test_metrics_inc_exact_under_concurrent_flood():
+    """Satellite: the seed's racy ``metrics.x += 1`` lost increments when
+    client/dispatcher/fan-out threads collided; ``inc`` must be exact."""
+    m = ServiceMetrics()
+    n_threads, n_iter = 8, 2000
+    old = sys.getswitchinterval()
+    sys.setswitchinterval(1e-6)                      # force interleavings
+    try:
+        def worker():
+            for _ in range(n_iter):
+                m.inc(requests=1, enqueued=1)
+                m.observe_wait(1e-6)
+        threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    finally:
+        sys.setswitchinterval(old)
+    assert m.requests == n_threads * n_iter
+    assert m.enqueued == n_threads * n_iter
+    assert m.queue_wait_hist.count == n_threads * n_iter
+
+
+def test_service_metrics_merged_is_elementwise_sum():
+    """Satellite property: ``merged`` equals the element-wise sum over
+    every numeric field, histogram, and signature bucket (where
+    ``max_batch`` takes the max, not the sum)."""
+    rng = np.random.default_rng(3)
+    many = []
+    for i in range(3):
+        m = ServiceMetrics()
+        for name in ServiceMetrics._numeric_fields():
+            m.inc(**{name: int(rng.integers(0, 50))})
+        for _ in range(int(rng.integers(5, 25))):
+            m.observe_wait(float(rng.uniform(0, 0.01)))
+            m.observe_e2e(float(rng.uniform(0, 0.05)))
+        m.observe_batch(("sig", i % 2), int(rng.integers(1, 9)), 0.001)
+        many.append(m)
+    agg = ServiceMetrics.merged(many)
+    for name in ServiceMetrics._numeric_fields():
+        assert getattr(agg, name) == pytest.approx(
+            sum(getattr(m, name) for m in many)), name
+    for name in ServiceMetrics._hist_fields():
+        assert getattr(agg, name) == LatencyHistogram.merged(
+            getattr(m, name) for m in many), name
+    for sig, b in agg.buckets.items():
+        parts = [m.buckets[sig] for m in many if sig in m.buckets]
+        assert b.queries == sum(p.queries for p in parts)
+        assert b.batches == sum(p.batches for p in parts)
+        assert b.exec_s == pytest.approx(sum(p.exec_s for p in parts))
+        assert b.max_batch == max(p.max_batch for p in parts)
+    for m in many:                                   # inputs untouched
+        assert m is not agg
+
+
+def test_router_metrics_merge_and_e2e_histograms():
+    m = RouterMetrics()
+    m.observe_merge(0.002)
+    m.observe_e2e(0.004)
+    snap = m.snapshot()
+    assert snap["merge_hist"]["count"] == 1
+    assert snap["e2e_hist"]["count"] == 1
+    assert snap["e2e_hist"]["max_s"] == pytest.approx(0.004)
+
+
+# --------------------------------------------------------------- registry --
+
+def test_registry_prometheus_and_json_rendering():
+    m = ServiceMetrics()
+    m.inc(requests=3, cache_hits=1)
+    m.observe_wait(0.002)
+    reg = MetricsRegistry()
+    reg.register("svc", m.snapshot)                  # callable source
+    reg.register("hists", lambda: {"queue_wait": m.queue_wait_hist})
+    reg.register("plain", {"up": True, "shards": [1, 2]})
+    assert reg.sources() == ["hists", "plain", "svc"]
+    text = reg.prometheus()
+    assert "repro_svc_requests 3" in text
+    assert "repro_svc_cache_hits 1" in text
+    assert "repro_svc_queue_wait_hist_p99_s" in text   # flattened summary
+    assert 'repro_hists_queue_wait_bucket{le="+Inf"} 1' in text
+    assert "repro_hists_queue_wait_count 1" in text    # native histogram
+    assert "repro_plain_up 1" in text
+    assert "repro_plain_shards_1 2" in text
+    data = json.loads(reg.to_json(indent=2))
+    assert data["svc"]["requests"] == 3
+    assert data["hists"]["queue_wait"]["count"] == 1
+    reg.unregister("plain")
+    assert "repro_plain_up" not in reg.prometheus()
+
+
+def test_registry_rejects_unusable_source():
+    reg = MetricsRegistry()
+    reg.register("bad", 42)
+    with pytest.raises(TypeError):
+        reg.collect()
+
+
+# ---------------------------------------------------------------- profile --
+
+def test_profiler_annotation_knob():
+    assert not profile.enabled()
+    with profile.annotate("off"):                    # inert when disabled
+        pass
+    profile.enable()
+    try:
+        assert profile.enabled()
+        with profile.annotate("exec.positive_batch"):
+            pass
+    finally:
+        profile.disable()
+    assert not profile.enabled()
+
+
+# ------------------------------------------------------------ end to end --
+
+def _assert_trace_integrity(records):
+    """Every recorded span closed, and parents precede their children."""
+    by_id = {r.span_id: r for r in records}
+    for r in records:
+        assert r.t1 >= r.t0, r
+        if r.parent_id is not None and r.parent_id in by_id:
+            parent = by_id[r.parent_id]
+            assert parent.trace_id == r.trace_id
+            assert parent.t0 <= r.t0 + 1e-9, (parent, r)
+
+
+def test_traced_sharded_flood_reconstructs_span_trees():
+    """Acceptance: a traced flood over 2 shards yields, per query, a
+    span tree covering router submit → shard queue → bucket execution →
+    shard merge → cache install, with per-stage percentiles exported."""
+    db = mixed_db()
+    lattice = build_lattice(db.schema, 2)
+    sdb = shard_database(db, 2)
+    tracer = Tracer(capacity=1 << 14, slow_threshold_s=0.0)
+    router = CountingRouter(sdb, executor="sparse", max_batch_size=8,
+                            tracer=tracer)
+    points = _routable_points(sdb, lattice)
+    # per-ticket path: submit everything, then resolve (result() flushes)
+    tickets = [router.submit(p) for p in points]
+    for t in tickets:
+        t.result()
+    records = tracer.records()
+    _assert_trace_integrity(records)
+    names = {r.name for r in records}
+    assert {"router.submit", "service.queue", "service.exec",
+            "router.merge", "router.cache_install"} <= names
+    trees = build_trees(records)
+    fanout_roots = [r for t in trees for r in t["roots"]
+                    if r["name"] == "router.submit"
+                    and r["attrs"].get("mode") == "fanout"]
+    assert fanout_roots
+    for root in fanout_roots:
+        kids = {c["name"] for c in root["children"]}
+        assert {"service.queue", "router.merge",
+                "router.cache_install"} <= kids, kids
+        queues = [c for c in root["children"] if c["name"] == "service.queue"]
+        assert len(queues) == 2                      # one per shard
+        # bucket execution hangs off the queue residency span
+        assert any(g["name"] == "service.exec"
+                   for q in queues for g in q["children"])
+        merge = next(c for c in root["children"]
+                     if c["name"] == "router.merge")
+        assert merge["attrs"]["straggler_shard"] in (0, 1)
+        assert merge["attrs"]["path"] == "overlapped"
+    # per-stage percentiles surfaced through the snapshots
+    snap = router.stats()
+    assert snap["router"]["e2e_hist"]["count"] >= len(fanout_roots)
+    assert snap["router"]["merge_hist"]["count"] >= 1
+    assert snap["aggregate"]["queue_wait_hist"]["count"] >= 1
+    assert snap["aggregate"]["bucket_exec_hist"]["count"] >= 1
+    assert snap["aggregate"]["e2e_hist"]["count"] >= 1
+    assert snap["tracer"]["slow_queries"]             # threshold 0: logged
+    # cache hit short-circuit is traced too
+    router.count(points[0])
+    assert any(r.name == "router.submit"
+               and (r.attrs or {}).get("mode") == "cache_hit"
+               for r in tracer.records())
+    # and the whole thing exports to Prometheus + JSON
+    reg = MetricsRegistry()
+    reg.register("router", router.stats)
+    text = reg.prometheus()
+    assert "repro_router_router_e2e_hist_p99_s" in text
+    assert "repro_router_aggregate_queue_wait_hist_p50_s" in text
+    assert "repro_router_tracer_recorded" in text
+    data = json.loads(reg.to_json())
+    assert data["router"]["router"]["requests"] == len(points) + 1
+
+
+def test_traced_mixed_read_write_flood_counters_exact():
+    """Satellite acceptance: counters stay exact and traces stay
+    well-formed under a concurrent mixed read/write flood."""
+    db = mixed_db()
+    ref_db = mixed_db()                # mutated in lockstep: fresh edges
+    lattice = build_lattice(db.schema, 2)
+    sdb = shard_database(db, 2)
+    tracer = Tracer(capacity=1 << 15)
+    router = CountingRouter(sdb, executor="sparse", max_batch_size=4,
+                            tracer=tracer)
+    points = _routable_points(sdb, lattice)
+    n_readers, n_reads, n_writes = 4, 6, 3
+    errors = []
+
+    def reader(seed):
+        rng = np.random.default_rng(seed)
+        for _ in range(n_reads):
+            try:
+                router.count(points[int(rng.integers(len(points)))])
+            except Exception as e:                   # pragma: no cover
+                errors.append(e)
+
+    def writer():
+        rng = np.random.default_rng(99)
+        for _ in range(n_writes):
+            rel = sorted(db.relations)[int(rng.integers(3))]
+            src, dst = fresh_pairs(ref_db, rel, 1, rng)
+            attrs = {a.name: rng.integers(0, a.card, size=1).astype(np.int32)
+                     for a in ref_db.relations[rel].type.attrs}
+            try:
+                router.insert_facts(rel, src, dst, attrs)
+                ref_db.insert_facts(rel, src, dst, attrs)
+            except Exception as e:                   # pragma: no cover
+                errors.append(e)
+
+    threads = [threading.Thread(target=reader, args=(s,))
+               for s in range(n_readers)] + [threading.Thread(target=writer)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    snap = router.stats()
+    assert snap["router"]["requests"] == n_readers * n_reads   # exact
+    assert snap["router"]["deltas"] == n_writes                # exact
+    _assert_trace_integrity(tracer.records())
+    names = {r.name for r in tracer.records()}
+    assert "engine.apply_delta" in names
+    assert "router.submit" in names
+
+
+def test_count_many_fanout_fast_path_is_traced():
+    """The fused fan-out fast path records retroactive per-query roots so
+    a trace still shows which dispatch answered each query."""
+    db = flood_db(n_rels=3, edges=16)
+    lattice = build_lattice(db.schema, 1)
+    sdb = shard_database(db, 2)
+    tracer = Tracer(capacity=4096)
+    router = CountingRouter(sdb, executor="sparse", tracer=tracer)
+    points = _routable_points(sdb, lattice)
+    router.count_many([(p, None) for p in points])
+    if router.stats()["router"]["fused_dispatches"] == 0:
+        pytest.skip("fanout fast path unavailable for this workload")
+    records = tracer.records()
+    _assert_trace_integrity(records)
+    fused = [r for r in records if r.name == "router.submit"
+             and (r.attrs or {}).get("mode") == "fanout_fused"]
+    assert fused
+    trees = build_trees(records)
+    roots = [r for t in trees for r in t["roots"]
+             if r["attrs"].get("mode") == "fanout_fused"]
+    assert roots and all(
+        any(c["name"] == "router.merge"
+            and c["attrs"]["path"] == "fanout_fused"
+            for c in r["children"]) for r in roots)
+
+
+def test_tracing_can_be_turned_off_again():
+    db = flood_db(n_rels=2, edges=8)
+    sdb = shard_database(db, 2)
+    tracer = Tracer(capacity=256)
+    router = CountingRouter(sdb, executor="sparse", tracer=tracer)
+    points = _routable_points(sdb, build_lattice(db.schema, 1))
+    router.count(points[0])
+    assert tracer.records()
+    router.set_tracer(NULL_TRACER)
+    tracer.clear()
+    router.count(points[-1] if len(points) > 1 else points[0])
+    assert tracer.records() == []                    # fully unwired
+    for svc in router.services:
+        assert isinstance(svc.tracer, NullTracer)
+        assert not svc.tracer.enabled
