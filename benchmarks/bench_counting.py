@@ -598,6 +598,102 @@ def bench_mutation_flood(n_rels: int = 6, edges: int = 100000,
     return out
 
 
+def bench_discovery(dataset: str = "IMDb", scale: float = 0.05,
+                    rounds: int = 3, seed: int = 0,
+                    max_chain_length: int = 1, max_parents: int = 2,
+                    strategy: str = "HYBRID") -> List[dict]:
+    """Served vs local model-discovery throughput (the ``--discovery``
+    dimension).
+
+    The same hill-climbing discovery runs two ways on the IMDb-style
+    schema: through a bare in-process strategy (the local oracle) and
+    through a :class:`CountingService` (batched, coalesced, cached —
+    the served path).  Each timed round drops the score memo but keeps
+    the CT caches warm, so both modes redo identical BDeu scoring work
+    over identical counts and the ratio isolates the serve layer's
+    round-trip overhead on search traffic.  The two modes' timed rounds
+    are interleaved and the reported ratio is the *median of per-pair*
+    served/local families/s (each pair ran back-to-back, so ambient
+    load cancels within a pair and the median drops pairs a scheduler
+    blip hit one-sided — same reasoning as the tracing-overhead gate);
+    per-mode rounds/s and families/s are best-of-``rounds``.  The
+    perf-smoke gate requires ratio >= 0.9x.
+    """
+    from repro.discover import DiscoveryService
+    from repro.serve import CountingService
+
+    config = f"disc{dataset}s{scale}r{rounds}"
+    out: List[dict] = []
+    modes = ("local", "served")
+    sigs: Dict[str, dict] = {}
+    dsvcs: Dict[str, DiscoveryService] = {}
+    for mode in modes:
+        db = paper_benchmark_db(dataset, seed=seed, scale=scale)
+        if mode == "local":
+            dsvc = DiscoveryService(make_strategy(strategy), db=db,
+                                    max_chain_length=max_chain_length,
+                                    max_parents=max_parents)
+        else:
+            svc = CountingService(CountingEngine(db, "sparse", CostStats()))
+            dsvc = DiscoveryService(svc,
+                                    max_chain_length=max_chain_length,
+                                    max_parents=max_parents)
+        sigs[mode] = dsvc.discover().signature()   # warm CTs + jit caches
+        dsvcs[mode] = dsvc
+    walls: Dict[str, List[float]] = {m: [] for m in modes}
+    round_counts: Dict[str, List[int]] = {m: [] for m in modes}
+    fam_counts: Dict[str, List[int]] = {m: [] for m in modes}
+    for _ in range(rounds):       # interleaved: drift hits both modes
+        for mode in modes:
+            dsvc = dsvcs[mode]
+            dsvc.reset_memo()    # re-score everything over warm counts
+            before = dsvc.metrics.snapshot()["rounds"]
+            t0 = time.perf_counter()
+            res = dsvc.discover()
+            walls[mode].append(time.perf_counter() - t0)
+            round_counts[mode].append(
+                dsvc.metrics.snapshot()["rounds"] - before)
+            fam_counts[mode].append(res.families_scored)
+    perf: Dict[str, Tuple[float, float, float]] = {}
+    for mode in modes:
+        rounds_per_s = max(
+            (r / w for r, w in zip(round_counts[mode], walls[mode])
+             if w > 0), default=0.0)
+        fams_per_s = max(
+            (f / w for f, w in zip(fam_counts[mode], walls[mode])
+             if w > 0), default=0.0)
+        perf[mode] = (sum(walls[mode]), rounds_per_s, fams_per_s)
+    assert sigs["served"] == sigs["local"], \
+        "served discovery diverged from the local oracle"
+    # Ratio = median of per-pair ratios: round i of each mode ran
+    # back-to-back, so ambient load cancels within a pair, and the
+    # median drops pairs where a scheduler blip hit only one side.
+    pair_ratios = [
+        (fam_counts["served"][i] / walls["served"][i])
+        / (fam_counts["local"][i] / walls["local"][i])
+        for i in range(len(walls["local"]))
+        if walls["local"][i] > 0 and walls["served"][i] > 0
+        and fam_counts["local"][i] > 0]
+    ratio = statistics.median(pair_ratios) if pair_ratios else float("inf")
+    print(f"[discovery] {config} local={perf['local'][2]:8.1f} fam/s "
+          f"({perf['local'][1]:6.1f} rounds/s)  "
+          f"served={perf['served'][2]:8.1f} fam/s "
+          f"({perf['served'][1]:6.1f} rounds/s)  ratio={ratio:5.2f}x",
+          flush=True)
+    for mode in ("local", "served"):
+        wall, rps, fps = perf[mode]
+        rec = {"bench": "discovery", "config": config, "dataset": dataset,
+               "strategy": strategy if mode == "local" else "SERVICE",
+               "executor": "sparse", "mode": mode,
+               "queries": rounds, "wall_s": round(wall, 4),
+               "qps": round(fps, 1), "rounds_per_s": round(rps, 1),
+               "families_per_s": round(fps, 1), "completed": True}
+        if mode == "served":
+            rec["ratio_vs_local"] = round(ratio, 3)
+        out.append(rec)
+    return out
+
+
 def write_outputs(art: dict, out_dir: str = "results/bench",
                   bench_json: Optional[str] = "BENCH_counting.json") -> None:
     """One canonical artifact; the root trajectory file is derived.
@@ -637,6 +733,8 @@ def main(out_dir: str = "results/bench", scale: Optional[float] = None,
          shard_kw: Optional[dict] = None,
          mut_flood: bool = True,
          mut_flood_kw: Optional[dict] = None,
+         discovery: bool = False,
+         discovery_kw: Optional[dict] = None,
          trace: bool = False,
          bench_json: Optional[str] = "BENCH_counting.json") -> dict:
     recs = run_all(datasets=datasets, scale=scale, budget_s=budget_s,
@@ -683,8 +781,12 @@ def main(out_dir: str = "results/bench", scale: Optional[float] = None,
         mut_recs = bench_mutation_flood(executors=tuple(executors),
                                         **(mut_flood_kw or {}))
         art["mutation_flood"] = mut_recs
+    disc_recs: List[dict] = []
+    if discovery:
+        disc_recs = bench_discovery(**(discovery_kw or {}))
+        art["discovery"] = disc_recs
     art["trajectory"] = (bench_trajectory(recs) + flood_recs + neg_recs
-                         + shard_recs + mut_recs)
+                         + shard_recs + mut_recs + disc_recs)
     write_outputs(art, out_dir=out_dir, bench_json=bench_json)
     return art
 
@@ -707,9 +809,12 @@ if __name__ == "__main__":
     ap.add_argument("--trace", action="store_true",
                     help="run the sharded flood with request tracing on "
                          "and dump its slow-query log")
+    ap.add_argument("--discovery", action="store_true",
+                    help="also run the served-vs-local model-discovery "
+                         "throughput bench (rounds/s + families/s)")
     args = ap.parse_args()
     main(scale=args.scale, datasets=tuple(args.datasets),
          budget_s=args.budget_s, spotlight=not args.no_spotlight,
          flood=not args.no_flood, neg_flood=not args.no_neg_flood,
          shards=tuple(args.shards), mut_flood=not args.no_mut_flood,
-         trace=args.trace)
+         discovery=args.discovery, trace=args.trace)

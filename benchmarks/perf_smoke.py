@@ -11,13 +11,18 @@ laptops and CI runners, unlike absolute q/s):
 
 * the speedup must stay >= ``MIN_BATCHED_SPEEDUP`` (the serve layer's
   acceptance bar), and
-* it must not fall more than ``REGRESSION_FACTOR``x below the best
+* it must not fall more than ``REGRESSION_FACTOR``x below the *median*
   speedup previously recorded for the same flood config in the
-  trajectory, and
+  trajectory (median, not max: the trajectory mixes hosts of very
+  different speeds, and one lucky fast-host run must not poison the
+  gate for every slower host after it), and
 * the reduced counting runs must complete within their budget, and
 * the sharded flood must hold >= ``MIN_SHARDED_RATIO`` of single-DB
   throughput (the router's fan-out merge fast path), also
   regression-checked against the trajectory, and
+* served model discovery must hold >= ``MIN_DISCOVERY_RATIO`` of the
+  local oracle's families/s on identical warm-count scoring work (the
+  serve layer must not tax the search loop), also regression-checked, and
 * the Pallas segment-sum kernel must match the XLA scatter path
   bit-for-bit in interpret mode (CPU CI's only way to execute the
   kernel body), and
@@ -36,6 +41,7 @@ Run:  PYTHONPATH=src:. python benchmarks/perf_smoke.py
 from __future__ import annotations
 
 import json
+import statistics
 import sys
 from pathlib import Path
 
@@ -61,6 +67,13 @@ MIN_SHARDED_RATIO = 0.9
 # must beat flush-and-recount on an insert-heavy write/read mix
 SMOKE_MUT_FLOOD = dict(n_rels=6, edges=100000, delta_edges=128, rounds=2)
 MIN_MUT_SPEEDUP = 2.0
+# model discovery through the serve layer must not tax the search loop:
+# served families/s must hold >= MIN_DISCOVERY_RATIO of the local oracle
+# on identical (warm-count, cold-memo) scoring work, regression-checked
+# against the trajectory like every other dimension
+SMOKE_DISCOVERY = dict(dataset="IMDb", scale=0.15, rounds=5,
+                       max_chain_length=1, max_parents=2)
+MIN_DISCOVERY_RATIO = 0.9
 # observability must be off-by-default-cheap AND cheap when on: the
 # traced sharded flood may cost at most 5% over the untraced one
 # (interleaved rounds, best-of-N per mode; a small absolute slack keeps
@@ -102,26 +115,31 @@ def shard_config_tag(n_shards: int) -> str:
     return f"shard{n_shards}x{f['n_rels']}x{f['edges']}r{f['rounds']}"
 
 
+def discovery_config_tag() -> str:
+    f = SMOKE_DISCOVERY
+    return f"disc{f['dataset']}s{f['scale']}r{f['rounds']}"
+
+
 def prior_sharded_ratio(history: list, config: str) -> float:
-    """Best recorded sharded-over-single ratio for one shard config."""
-    best = 0.0
-    for rec in history:
-        if (rec.get("bench") == "sharded_flood"
+    """Median recorded sharded-over-single ratio for one shard config
+    (median for the same cross-host robustness as
+    ``prior_batched_speedup``)."""
+    vals = [float(rec.get("ratio_vs_single", 0.0))
+            for rec in history
+            if (rec.get("bench") == "sharded_flood"
                 and rec.get("mode") == "sharded"
-                and rec.get("config") == config):
-            best = max(best, float(rec.get("ratio_vs_single", 0.0)))
-    return best
+                and rec.get("config") == config)]
+    return statistics.median(vals) if vals else 0.0
 
 
 def prior_vg_wall(history: list) -> float:
-    """Best (lowest) recorded full-scale VisualGenome wall seconds."""
-    best = 0.0
-    for rec in history:
-        if (rec.get("bench") == "vg_full_scale"
-                and rec.get("completed")):
-            w = float(rec.get("wall_s", 0.0))
-            best = w if best == 0.0 else min(best, w)
-    return best
+    """Median recorded full-scale VisualGenome wall seconds (median for
+    the same cross-host robustness as ``prior_batched_speedup``)."""
+    vals = [float(rec.get("wall_s", 0.0))
+            for rec in history
+            if (rec.get("bench") == "vg_full_scale"
+                and rec.get("completed"))]
+    return statistics.median(vals) if vals else 0.0
 
 
 def check_kernel_parity() -> list:
@@ -268,16 +286,21 @@ def prior_batched_speedup(history: list, config: str,
                           bench: str = "service_flood",
                           field: str = "speedup_vs_per_query",
                           mode: str = "batched") -> dict:
-    """Best recorded speedup per executor for one flood config+mode."""
-    best: dict = {}
+    """Median recorded speedup per executor for one flood config+mode.
+
+    Median, not max: BENCH_counting.json accumulates runs from hosts of
+    very different speeds, and a single lucky run on a fast machine
+    would otherwise poison the regression gate for every slower host
+    that follows.  The median self-corrects as the trajectory grows."""
+    vals: dict = {}
     for rec in history:
         if (rec.get("bench") == bench
                 and rec.get("mode") == mode
                 and rec.get("config") == config
                 and field in rec):
-            ex = rec.get("executor")
-            best[ex] = max(best.get(ex, 0.0), float(rec[field]))
-    return best
+            vals.setdefault(rec.get("executor"), []).append(
+                float(rec[field]))
+    return {ex: statistics.median(v) for ex, v in vals.items()}
 
 
 def main() -> int:
@@ -297,6 +320,9 @@ def main() -> int:
         field="speedup_vs_recount", mode="delta")
     shard_baselines = {n: prior_sharded_ratio(history, shard_config_tag(n))
                        for n in SMOKE_SHARDS}
+    disc_baseline = prior_batched_speedup(
+        history, discovery_config_tag(), bench="discovery",
+        field="ratio_vs_local", mode="served")
     vg_baseline = prior_vg_wall(history)
 
     art = bench_counting.main(
@@ -305,6 +331,7 @@ def main() -> int:
         neg_flood=True, neg_flood_kw=dict(SMOKE_NEG_FLOOD),
         shards=SMOKE_SHARDS, shard_kw=dict(SMOKE_SHARD_KW),
         mut_flood=True, mut_flood_kw=dict(SMOKE_MUT_FLOOD),
+        discovery=True, discovery_kw=dict(SMOKE_DISCOVERY),
         bench_json=BENCH_JSON)
 
     failures = []
@@ -344,6 +371,22 @@ def main() -> int:
         if prior and ratio * REGRESSION_FACTOR < prior:
             failures.append(
                 f"sharded_flood/{rec['config']}: ratio {ratio:.2f}x is a "
+                f">{REGRESSION_FACTOR:.0f}x regression vs recorded "
+                f"{prior:.2f}x")
+    for rec in art.get("discovery", []):
+        if rec.get("mode") != "served":
+            continue
+        ratio = float(rec.get("ratio_vs_local", 0.0))
+        if ratio < MIN_DISCOVERY_RATIO:
+            failures.append(
+                f"discovery/{rec['config']}: served discovery holds only "
+                f"{ratio:.2f}x of local families/s, below the "
+                f"{MIN_DISCOVERY_RATIO:.1f}x bar — the serve layer is "
+                f"taxing the search loop")
+        prior = disc_baseline.get(rec.get("executor"), 0.0)
+        if prior and ratio * REGRESSION_FACTOR < prior:
+            failures.append(
+                f"discovery/{rec['config']}: ratio {ratio:.2f}x is a "
                 f">{REGRESSION_FACTOR:.0f}x regression vs recorded "
                 f"{prior:.2f}x")
     for rec in art["runs"]:
@@ -394,6 +437,9 @@ def main() -> int:
     parts += [
         f"shard{n}>={max(MIN_SHARDED_RATIO, r / REGRESSION_FACTOR):.2f}x"
         for n, r in shard_baselines.items() if r > 0]
+    parts += [
+        f"discovery>={max(MIN_DISCOVERY_RATIO, r / REGRESSION_FACTOR):.2f}x"
+        for r in disc_baseline.values() if r > 0]
     gated = ", ".join(parts) or "baseline recorded"
     print(f"[perf-smoke] OK (speedup gate: {gated})", flush=True)
     return 0

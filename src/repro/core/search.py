@@ -16,13 +16,26 @@ instead of one Python → XLA round-trip per family.  Scores are memoised
 globally by (child, parents): the same family is generated repeatedly
 during search (and across lattice points), which is exactly what makes
 counts caching pay off.
+
+The counting backend is **pluggable**: any object with the
+``family_ct(point, keep)`` / ``family_ct_many(point, keeps)`` protocol can
+serve the family tables — a bare :class:`~repro.core.strategies.Strategy`,
+a :class:`~repro.serve.service.CountingService`, or a sharded
+:class:`~repro.serve.router.CountingRouter` (see
+:mod:`repro.discover.providers`) — so one search loop covers local,
+served, and distributed execution, and parity between them is a table
+equality, not a code-path equivalence.  Candidate moves are sorted into a
+canonical order before the argmax, so exact score ties break identically
+no matter which backend produced the tables.
 """
 
 from __future__ import annotations
 
 import itertools
+import time
 from dataclasses import dataclass
-from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Set, Tuple
+from typing import (Callable, Dict, FrozenSet, Iterable, List, MutableMapping,
+                    Optional, Sequence, Set, Tuple)
 
 import jax.numpy as jnp
 import numpy as np
@@ -45,18 +58,62 @@ class BNModel:
 
 Family = Tuple[CtVar, FrozenSet[CtVar]]          # (child, parents)
 
+# round hook: (point, n_moves, families_scored_this_round, t0, t1)
+RoundCallback = Callable[[LatticePoint, int, int, float, float], None]
+
 
 class StructureSearch:
-    def __init__(self, db: RelationalDB, strategy: Strategy,
+    """Greedy hill-climbing over one pluggable count provider.
+
+    Args:
+        db: the database (used for its schema; may be ``None`` when
+            ``schema`` or a ``counts`` provider with a ``schema``
+            attribute is given — the served/distributed deployments).
+        strategy: the counting strategy; doubles as the default count
+            provider (``family_ct`` / ``family_ct_many``).
+        counts: count-provider override — any object with the strategy's
+            family-table protocol (service- or router-backed, see
+            :mod:`repro.discover.providers`).
+        score_cache: external score memo (``in`` / ``[]`` protocol on
+            ``(child, parents)`` keys).  :class:`~repro.discover.service
+            .DiscoveryService` injects a version-scoped view here so
+            concurrent searches share one memo that composes with store
+            mutations; by default each search owns a private dict.
+        round_cb: optional per-climbing-round hook
+            ``(point, n_moves, n_scored, t0, t1)`` — the discovery
+            service's search-round spans and histograms attach here.
+    """
+
+    def __init__(self, db: Optional[RelationalDB], strategy: Optional[Strategy],
                  max_parents: int = 3, ess: float = 1.0,
-                 max_moves: int = 200, batch_scoring: bool = True):
+                 max_moves: int = 200, batch_scoring: bool = True,
+                 counts: Optional[object] = None,
+                 schema: Optional[object] = None,
+                 score_cache: Optional[MutableMapping] = None,
+                 round_cb: Optional[RoundCallback] = None):
         self.db = db
         self.strategy = strategy
+        self.counts = counts if counts is not None else strategy
+        if self.counts is None:
+            raise ValueError("StructureSearch needs a strategy or a counts "
+                             "provider")
+        if schema is not None:
+            self.schema = schema
+        elif db is not None:
+            self.schema = db.schema
+        else:
+            self.schema = self.counts.schema
         self.max_parents = max_parents
         self.ess = ess
         self.max_moves = max_moves
         self.batch_scoring = batch_scoring
-        self._score_cache: Dict[Family, float] = {}
+        self.round_cb = round_cb
+        self._score_cache: MutableMapping[Family, float] = (
+            score_cache if score_cache is not None else {})
+        # which relations each scored family's table depended on (the
+        # point's relation set at scoring time) — the delta-refresh layer
+        # uses this to carry forward scores a write cannot have changed
+        self.family_deps: Dict[Family, FrozenSet[str]] = {}
         self.families_scored = 0
         self.batch_calls = 0          # vmapped BDeu dispatches issued
 
@@ -66,8 +123,9 @@ class StructureSearch:
         key = (child, parents)
         if key not in self._score_cache:
             keep = tuple(sorted(parents)) + (child,)
-            tab = self.strategy.family_ct(point, keep)
+            tab = self.counts.family_ct(point, keep)
             self._score_cache[key] = family_score(tab, child, self.ess)
+            self.family_deps[key] = point.rels
             self.families_scored += 1
         return self._score_cache[key]
 
@@ -90,9 +148,9 @@ class StructureSearch:
             return
         keeps = [tuple(sorted(parents)) + (child,)
                  for child, parents in todo]
-        fetch_many = getattr(self.strategy, "family_ct_many", None)
+        fetch_many = getattr(self.counts, "family_ct_many", None)
         tabs = (fetch_many(point, keeps) if fetch_many is not None
-                else [self.strategy.family_ct(point, k) for k in keeps])
+                else [self.counts.family_ct(point, k) for k in keeps])
         groups: Dict[Tuple[int, int], List[Tuple[Family, jnp.ndarray]]] = {}
         for (child, parents), tab in zip(todo, tabs):
             nijk = family_nijk(tab, child)
@@ -111,6 +169,7 @@ class StructureSearch:
             self.batch_calls += 1
             for (fam, _), s in zip(members, scores):
                 self._score_cache[fam] = float(s)
+                self.family_deps[fam] = point.rels
         self.families_scored += len(todo)
 
     # -- acyclicity ----------------------------------------------------------
@@ -133,7 +192,11 @@ class StructureSearch:
     def _candidate_moves(self, nodes: Sequence[CtVar],
                          parents: Dict[CtVar, Set[CtVar]]
                          ) -> List[Tuple[str, CtVar, CtVar, FrozenSet[CtVar]]]:
-        """All legal single-edge moves, in deterministic enumeration order."""
+        """All legal single-edge moves, sorted into a canonical order
+        (op, src, dst, parent set) — the argmax's strict ``>`` then breaks
+        exact score ties on the SAME move regardless of enumeration order,
+        which is what makes served/distributed discovery reproduce the
+        local oracle edge-for-edge rather than only score-approximately."""
         moves = []
         for src, dst in itertools.permutations(nodes, 2):
             if src in parents[dst]:
@@ -146,12 +209,13 @@ class StructureSearch:
                     continue
                 moves.append(("add", src, dst,
                               frozenset(parents[dst] | {src})))
+        moves.sort(key=lambda m: (m[0], m[1], m[2], tuple(sorted(m[3]))))
         return moves
 
     def climb_point(self, point: LatticePoint,
                     init_parents: Optional[Dict[CtVar, Set[CtVar]]] = None
                     ) -> BNModel:
-        nodes = list(point.all_ct_vars(self.db.schema, include_rind=True))
+        nodes = list(point.all_ct_vars(self.schema, include_rind=True))
         parents: Dict[CtVar, Set[CtVar]] = {n: set() for n in nodes}
         if init_parents:
             for c, ps in init_parents.items():
@@ -166,6 +230,8 @@ class StructureSearch:
                                       for n in nodes))
         total = sum(sc(n) for n in nodes)
         for _ in range(self.max_moves):
+            t0 = time.perf_counter()
+            scored_before = self.families_scored
             moves = self._candidate_moves(nodes, parents)
             if self.batch_scoring:
                 # one vmapped scoring pass over the whole round's frontier
@@ -177,6 +243,10 @@ class StructureSearch:
                 if delta > best_delta:
                     best_delta = delta
                     best_apply = (op, src, dst)
+            if self.round_cb is not None:
+                self.round_cb(point, len(moves),
+                              self.families_scored - scored_before,
+                              t0, time.perf_counter())
             if best_apply is None:
                 break
             op, src, dst = best_apply
@@ -190,7 +260,19 @@ class StructureSearch:
                        total)
 
     # -- learn-and-join over the lattice --------------------------------------
-    def run(self, lattice: Sequence[LatticePoint]) -> Dict[LatticePoint, BNModel]:
+    def run(self, lattice: Sequence[LatticePoint],
+            init_models: Optional[Dict[LatticePoint, BNModel]] = None
+            ) -> Dict[LatticePoint, BNModel]:
+        """Learn-and-join bottom-up over the lattice.
+
+        Args:
+            lattice: bottom-up ordered lattice points.
+            init_models: warm-start models (the refresh hook) — each
+                point's climb starts from its previous model's edges on
+                top of the usual sub-point inheritance, so an online
+                refresh hill-climbs locally from the current model
+                instead of from scratch.
+        """
         models: Dict[LatticePoint, BNModel] = {}
         for point in lattice:          # lattice is bottom-up ordered
             init: Dict[CtVar, Set[CtVar]] = {}
@@ -198,6 +280,9 @@ class StructureSearch:
                 if sub.rels < point.rels:      # inherit sub-point edges
                     for c, ps in m.parents.items():
                         init.setdefault(c, set()).update(ps)
+            if init_models is not None and point in init_models:
+                for c, ps in init_models[point].parents.items():
+                    init.setdefault(c, set()).update(ps)
             models[point] = self.climb_point(point, init)
         return models
 

@@ -15,7 +15,7 @@ This package deliberately imports nothing from :mod:`repro.core` or
 :mod:`repro.serve`, so every layer of the stack can depend on it.
 """
 
-from .hist import LatencyHistogram, N_BUCKETS
+from .hist import CountHistogram, LatencyHistogram, N_BUCKETS
 from .profile import annotate
 from .registry import MetricsRegistry, prometheus_lines
 from .slowlog import SlowQuery, SlowQueryLog
@@ -23,7 +23,7 @@ from .trace import (NULL_TRACER, NullTracer, Span, SpanContext, SpanRecord,
                     Tracer, build_trees, default_tracer)
 
 __all__ = [
-    "LatencyHistogram", "N_BUCKETS",
+    "CountHistogram", "LatencyHistogram", "N_BUCKETS",
     "annotate",
     "MetricsRegistry", "prometheus_lines",
     "SlowQuery", "SlowQueryLog",

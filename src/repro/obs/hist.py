@@ -21,7 +21,7 @@ from __future__ import annotations
 
 from typing import Dict, Iterable, List, Optional, Sequence
 
-__all__ = ["LatencyHistogram", "N_BUCKETS"]
+__all__ = ["CountHistogram", "LatencyHistogram", "N_BUCKETS"]
 
 N_BUCKETS = 64
 
@@ -141,3 +141,47 @@ class LatencyHistogram:
         d = self.as_dict()
         return (f"LatencyHistogram(n={d['count']}, p50={d['p50_s']}s, "
                 f"p99={d['p99_s']}s, max={d['max_s']}s)")
+
+
+class CountHistogram(LatencyHistogram):
+    """The same log2-bucketed machinery over dimensionless counts.
+
+    ``observe(n)`` records an integer magnitude (e.g. families re-scored
+    per refresh) instead of a duration.  Reusing the latency buckets via
+    the nanosecond scaling would shift every observation by 1e9, so the
+    count variant buckets the raw value; the merge/percentile algebra is
+    inherited unchanged.
+
+    Usage::
+
+        h = CountHistogram()
+        h.observe(37)                     # 37 families this refresh
+        h.as_dict()["p95"]                # un-suffixed keys: counts, not s
+    """
+
+    __slots__ = ()
+
+    @staticmethod
+    def bucket_of(value: float) -> int:
+        n = int(value)
+        if n <= 0:
+            return 0
+        return min(n.bit_length(), N_BUCKETS - 1)
+
+    @staticmethod
+    def bucket_upper_s(i: int) -> float:
+        return float(1 << i)
+
+    def as_dict(self) -> Dict[str, float]:
+        """Snapshot summary with un-suffixed keys (these are counts)."""
+        return dict(count=self.count,
+                    mean=round(self.mean_s, 3),
+                    p50=round(self.percentile(0.50), 3),
+                    p95=round(self.percentile(0.95), 3),
+                    p99=round(self.percentile(0.99), 3),
+                    max=round(self.max_s, 3))
+
+    def __repr__(self) -> str:       # pragma: no cover - debugging aid
+        d = self.as_dict()
+        return (f"CountHistogram(n={d['count']}, p50={d['p50']}, "
+                f"p99={d['p99']}, max={d['max']})")

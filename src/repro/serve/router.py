@@ -325,6 +325,7 @@ class CountingRouter:
                             max_in_flight=max_in_flight,
                             max_pending_bytes=max_pending_bytes,
                             tracer=self.tracer)
+        self._discovery = None             # lazily built DiscoveryService
         self.engines: List[CountingEngine] = []
         self.services: List[CountingService] = []
         for shard in sdb.shards:
@@ -1079,6 +1080,23 @@ class CountingRouter:
             self._inflight.pop(key, None)
 
     # -- observability ------------------------------------------------------
+    def discovery(self, **kwargs):
+        """The model-discovery service running over this router (built
+        lazily on first call, then shared, so concurrent clients' searches
+        share one warm score memo over the sharded store).  Keyword
+        arguments are forwarded to :class:`~repro.discover.service
+        .DiscoveryService` on first construction and ignored afterwards.
+
+        Usage::
+
+            result = router.discovery().discover()
+        """
+        if self._discovery is None:
+            from ..discover import DiscoveryService
+            self._discovery = DiscoveryService(self, tracer=self.tracer,
+                                               **kwargs)
+        return self._discovery
+
     def stats(self) -> dict:
         """Health snapshot: routing counters, the per-shard service
         snapshots, and their roll-up.
@@ -1099,5 +1117,8 @@ class CountingRouter:
                 if isinstance(v, (int, float)) and not isinstance(v, bool):
                     cache_agg[k] = cache_agg.get(k, 0) + v
         agg["cache"] = cache_agg
-        return {"router": self.metrics.snapshot(), "aggregate": agg,
-                "shards": shard_snaps, "tracer": self.tracer.snapshot()}
+        out = {"router": self.metrics.snapshot(), "aggregate": agg,
+               "shards": shard_snaps, "tracer": self.tracer.snapshot()}
+        if self._discovery is not None:
+            out["discovery"] = self._discovery.stats()
+        return out

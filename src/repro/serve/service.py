@@ -283,6 +283,7 @@ class CountingService:
         self._dispatcher_thread: Optional[threading.Thread] = None
         self._shut_down = False
         self._defer_depth = 0          # see defer_drains()
+        self._discovery = None         # lazily built DiscoveryService
         if dispatcher:
             self.start()
 
@@ -968,6 +969,23 @@ class CountingService:
         itemsize = np.dtype(self.engine.dtype).itemsize
         return int(np.prod(plan.out_shape, dtype=np.int64)) * itemsize
 
+    def discovery(self, **kwargs):
+        """The model-discovery service running over this counting service
+        (built lazily on first call, then shared — so every caller's
+        searches hit one warm score memo).  Keyword arguments are
+        forwarded to :class:`~repro.discover.service.DiscoveryService`
+        on first construction and ignored afterwards.
+
+        Usage::
+
+            result = svc.discovery().discover()
+        """
+        if self._discovery is None:
+            from ..discover import DiscoveryService
+            self._discovery = DiscoveryService(self, tracer=self.tracer,
+                                               **kwargs)
+        return self._discovery
+
     def stats(self) -> dict:
         """Service + cache health snapshot (JSON-able; see
         :meth:`~repro.serve.metrics.ServiceMetrics.snapshot`).
@@ -978,4 +996,6 @@ class CountingService:
         """
         out = self.metrics.snapshot(self.engine.cache)
         out["tracer"] = self.tracer.snapshot()
+        if self._discovery is not None:
+            out["discovery"] = self._discovery.stats()
         return out

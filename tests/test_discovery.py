@@ -1,0 +1,267 @@
+"""Oracle-parity and chaos layer for served/distributed model discovery.
+
+The correctness spine of the discovery service: whatever backend the
+hill-climb counts through — bare strategy, batching service, sharded
+router — and however the store mutates, the learned model must be
+*edge-identical* (and score-identical within fp tolerance) to the local
+``StructureSearch`` oracle run on an equivalent store."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import build_lattice, discover_model, make_strategy
+from repro.core.database import shard_database
+from repro.core.engine import CountingEngine
+from repro.discover import DiscoveryService, models_signature
+from repro.serve.router import CountingRouter
+from repro.serve.service import CountingService
+from tests.test_counting_core import tiny_db
+from tests.test_mutations import fresh_pairs
+
+STRATEGIES = ["PRECOUNT", "ONDEMAND", "HYBRID", "TUPLEID"]
+SCORE_TOL = 1e-3
+
+
+def _oracle(db, strategy="ONDEMAND", **kw):
+    models, _ = discover_model(db, make_strategy(strategy),
+                               max_chain_length=2, **kw)
+    return models_signature(models), sum(m.score for m in models.values())
+
+
+# -- (a) served == local == sharded, all 4 strategies -------------------------
+
+@pytest.fixture(scope="module")
+def oracle():
+    return _oracle(tiny_db(0))
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_local_discovery_matches_oracle_per_strategy(strategy, oracle):
+    """DiscoveryService over each bare strategy == plain discover_model."""
+    db = tiny_db(0)
+    svc = DiscoveryService(make_strategy(strategy), db=db)
+    res = svc.discover()
+    sig, score = oracle
+    assert res.signature() == sig
+    assert res.score == pytest.approx(score, abs=SCORE_TOL)
+    assert res.restarts == 0
+    assert res.families_scored > 0
+
+
+def test_served_discovery_matches_oracle(oracle):
+    db = tiny_db(0)
+    csvc = CountingService(CountingEngine(db, "sparse"))
+    res = csvc.discovery().discover()
+    sig, score = oracle
+    assert res.signature() == sig
+    assert res.score == pytest.approx(score, abs=SCORE_TOL)
+    # entry point memoizes one shared service and surfaces its stats
+    assert csvc.discovery() is csvc.discovery()
+    assert csvc.stats()["discovery"]["discoveries"] == 1
+
+
+def test_sharded_router_discovery_matches_oracle(oracle):
+    db = tiny_db(0)
+    router = CountingRouter(shard_database(db, 2), executor="sparse")
+    res = router.discovery().discover()
+    sig, score = oracle
+    assert res.signature() == sig
+    assert res.score == pytest.approx(score, abs=SCORE_TOL)
+    assert router.discovery() is router.discovery()
+    assert router.stats()["discovery"]["discoveries"] == 1
+
+
+def test_all_backends_agree_exactly():
+    """The three backends' signatures must be mutually identical — the
+    strongest form: one assert over all of them at once."""
+    db = tiny_db(1)
+    results = {}
+    results["local"] = DiscoveryService(make_strategy("HYBRID"),
+                                        db=db).discover()
+    results["served"] = DiscoveryService(
+        CountingService(CountingEngine(tiny_db(1), "sparse"))).discover()
+    results["sharded"] = DiscoveryService(
+        CountingRouter(shard_database(tiny_db(1), 2),
+                       executor="sparse")).discover()
+    sigs = {k: r.signature() for k, r in results.items()}
+    assert sigs["local"] == sigs["served"] == sigs["sharded"]
+    scores = [r.score for r in results.values()]
+    assert max(scores) - min(scores) < SCORE_TOL
+
+
+# -- (b) delta refresh: selective, counter-asserted, == full relearn ---------
+
+def _mutate(db, strategy_or_none=None, seed=7):
+    """Insert a few not-yet-present Reg edges; returns the FactDelta."""
+    rng = np.random.default_rng(seed)
+    src, dst = fresh_pairs(db, "Reg", 3, rng)
+    delta = db.insert_facts("Reg", src, dst,
+                            {"grade": rng.integers(0, 2, size=3)
+                             .astype(np.int32)})
+    if strategy_or_none is not None:
+        strategy_or_none.apply_delta(delta)
+    return delta
+
+
+def test_refresh_matches_fresh_relearn_and_rescans_selectively():
+    db = tiny_db(0)
+    svc = DiscoveryService(make_strategy("ONDEMAND"), db=db)
+    first = svc.discover()
+
+    delta = _mutate(db, svc.provider.strategy)
+    report = svc.refresh(delta)
+
+    # the counter assertion: only dependency-intersecting families were
+    # re-scored; RA-only families were carried forward untouched
+    assert report.changed == frozenset({"Reg"})
+    assert report.retained > 0
+    assert report.rescored > 0
+    assert report.rescored < report.total_families
+
+    # and the refreshed model is bit-identical to learning from scratch
+    # on the mutated database
+    sig, score = _oracle(db)
+    assert report.result.signature() == sig
+    assert report.result.score == pytest.approx(score, abs=SCORE_TOL)
+    # version token advanced past the pre-delta result's
+    assert report.result.version != first.version
+
+
+def test_refresh_through_served_backend():
+    db = tiny_db(0)
+    csvc = CountingService(CountingEngine(db, "sparse"))
+    dsvc = csvc.discovery()
+    dsvc.discover()
+    # fenced write through the service; the delta names the relation
+    rng = np.random.default_rng(11)
+    src, dst = fresh_pairs(csvc.engine.db, "Reg", 2, rng)
+    report = csvc.insert_facts("Reg", src, dst,
+                               {"grade": rng.integers(0, 2, size=2)
+                                .astype(np.int32)})
+    rep = dsvc.refresh("Reg")
+    assert rep.retained > 0
+    assert rep.rescored < rep.total_families
+    sig, score = _oracle(csvc.engine.db)
+    assert rep.result.signature() == sig
+    assert rep.result.score == pytest.approx(score, abs=SCORE_TOL)
+    snap = csvc.stats()["discovery"]
+    assert snap["refreshes"] == 1
+    assert snap["families_retained"] == rep.retained
+    assert snap["rescored_hist"]["count"] == 1
+    assert report is not None
+
+
+def test_refresh_on_untouched_relation_rescans_nothing_new():
+    """A delta on RA must retain every Reg-only family score."""
+    db = tiny_db(0)
+    svc = DiscoveryService(make_strategy("ONDEMAND"), db=db)
+    svc.discover()
+    rng = np.random.default_rng(3)
+    src, dst = fresh_pairs(db, "RA", 1, rng)
+    delta = db.insert_facts("RA", src, dst,
+                            {"sal": rng.integers(0, 2, size=1)
+                             .astype(np.int32)})
+    svc.provider.strategy.apply_delta(delta)
+    rep = svc.refresh(delta)
+    assert rep.changed == frozenset({"RA"})
+    # every family whose deps are {Reg} alone survived the version bump
+    assert rep.retained > 0
+    assert rep.rescored < rep.total_families
+    sig, score = _oracle(db)
+    assert rep.result.signature() == sig
+
+
+def test_warm_start_refresh_is_selective_and_valid():
+    """warm_start=True trades exact relearn-parity for fewer rounds; it
+    must still re-score selectively and produce a well-formed model."""
+    db = tiny_db(0)
+    svc = DiscoveryService(make_strategy("ONDEMAND"), db=db)
+    svc.discover()
+    delta = _mutate(db, svc.provider.strategy)
+    rep = svc.refresh(delta, warm_start=True)
+    assert rep.retained > 0
+    assert rep.rescored < rep.total_families
+    for m in rep.result.models.values():
+        assert np.isfinite(m.score)
+
+
+# -- (c) concurrent searches + write flood ------------------------------------
+
+def test_concurrent_searches_share_cache_and_agree_under_write_flood():
+    db = tiny_db(0)
+    csvc = CountingService(CountingEngine(db, "sparse"))
+    dsvc = csvc.discovery(max_restarts=500)
+    dsvc.discover()                      # warm the CT cache + score memo
+
+    stop_writes = threading.Event()
+    mid_results, finals, errors = [], {}, []
+
+    def writer():
+        rng = np.random.default_rng(23)
+        try:
+            for i in range(5):
+                src, dst = fresh_pairs(csvc.engine.db, "Reg", 1, rng)
+                csvc.insert_facts("Reg", src, dst,
+                                  {"grade": rng.integers(0, 2, size=1)
+                                   .astype(np.int32)})
+                time.sleep(0.05)
+        except Exception as e:            # pragma: no cover - debug aid
+            errors.append(e)
+        finally:
+            stop_writes.set()
+
+    def searcher(name):
+        try:
+            while not stop_writes.is_set():
+                mid_results.append(dsvc.discover())
+            finals[name] = dsvc.discover()
+        except Exception as e:
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer)]
+    threads += [threading.Thread(target=searcher, args=(f"s{i}",))
+                for i in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+
+    # both clients converged on the same final model of the same version
+    a, b = finals["s0"], finals["s1"]
+    assert a.version == b.version
+    assert a.signature() == b.signature()
+    assert a.score == pytest.approx(b.score, abs=SCORE_TOL)
+
+    # ... which equals a from-scratch local relearn of the final store
+    sig, score = _oracle(csvc.engine.db)
+    assert a.signature() == sig
+    assert a.score == pytest.approx(score, abs=SCORE_TOL)
+
+    # every mid-flight result is internally consistent: any result minted
+    # at the final version must be the final model (no torn mixes)
+    for r in mid_results:
+        if r.version == a.version:
+            assert r.signature() == a.signature()
+
+    # no torn counts: family tables read after quiesce are non-negative
+    # integers (a torn pre/post-delta merge would leave fractional or
+    # negative cells)
+    lattice = build_lattice(csvc.engine.db.schema, 2)
+    point = lattice[-1]
+    keep = tuple(point.all_ct_vars(csvc.engine.db.schema,
+                                   include_rind=True))[:3]
+    tab = csvc.count_complete(point, keep)
+    arr = np.asarray(tab.counts)
+    assert (arr >= -1e-4).all()
+    np.testing.assert_allclose(arr, np.round(arr), atol=1e-3)
+
+    # the shared memo actually served both clients: warm discovers on a
+    # quiesced store do no fresh scoring at all
+    before = dsvc.metrics.snapshot()["families_scored"]
+    again = dsvc.discover()
+    assert again.signature() == a.signature()
+    assert dsvc.metrics.snapshot()["families_scored"] == before

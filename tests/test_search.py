@@ -1,0 +1,183 @@
+"""Direct edge-case coverage for the hill-climbing structure search
+(:mod:`repro.core.search`), which was previously only exercised through
+the strategy-parity tests."""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (Attribute, EntityType, Relationship, Schema,
+                        build_lattice, discover_model, make_strategy,
+                        synth_db)
+from repro.core.search import StructureSearch, family_score
+from tests.test_counting_core import tiny_db
+
+
+def _prepared_search(db, max_parents=3, **kw):
+    st = make_strategy("ONDEMAND")
+    st.prepare(db, build_lattice(db.schema, 2))
+    return StructureSearch(db, st, max_parents=max_parents, **kw)
+
+
+# -- max_parents=0 ------------------------------------------------------------
+
+def test_max_parents_zero_learns_empty_graphs():
+    db = tiny_db(0)
+    st = make_strategy("ONDEMAND")
+    models, _ = discover_model(db, st, max_chain_length=2, max_parents=0)
+    assert models
+    for m in models.values():
+        assert all(len(ps) == 0 for ps in m.parents.values())
+        assert m.edges() == []
+        assert np.isfinite(m.score)
+
+
+# -- single-variable lattice points ------------------------------------------
+
+def test_single_variable_point_climbs_without_moves():
+    """An attribute-free schema collapses each point to its rind variable
+    alone: no legal moves exist, and the climb must still terminate with
+    a finite-scored single-node model."""
+    schema = Schema(
+        entities=(EntityType("u", 4, ()),),
+        relationships=(Relationship("Fr", "u", "u", ()),),
+    )
+    db = synth_db(schema, {"Fr": 5}, seed=0)
+    st = make_strategy("ONDEMAND")
+    models, _ = discover_model(db, st, max_chain_length=1)
+    assert models
+    for m in models.values():
+        assert len(m.nodes) == 1
+        assert m.edges() == []
+        assert np.isfinite(m.score)
+
+
+# -- cardinality-1 domains ---------------------------------------------------
+
+def test_card_one_domain_is_inert():
+    """A one-value attribute carries zero information; search must handle
+    the degenerate axis (no NaNs from the single-cell N_ijk marginals)."""
+    schema = Schema(
+        entities=(
+            EntityType("s", 5, (Attribute("iq", 2), Attribute("one", 1))),
+            EntityType("c", 4, (Attribute("diff", 2),)),
+        ),
+        relationships=(Relationship("Reg", "s", "c", (Attribute("g", 2),)),),
+    )
+    db = synth_db(schema, {"Reg": 7}, seed=0)
+    st = make_strategy("ONDEMAND")
+    models, _ = discover_model(db, st, max_chain_length=1)
+    for m in models.values():
+        assert np.isfinite(m.score)
+        ones = [n for n in m.nodes if "one" in str(n)]
+        assert ones, "card-1 variable must still be a node"
+
+
+# -- _creates_cycle property --------------------------------------------------
+
+def _is_acyclic(parents):
+    # Kahn's algorithm over the parent map
+    indeg = {n: len(ps) for n, ps in parents.items()}
+    children = {n: [] for n in parents}
+    for c, ps in parents.items():
+        for p in ps:
+            children[p].append(c)
+    frontier = [n for n, d in indeg.items() if d == 0]
+    seen = 0
+    while frontier:
+        n = frontier.pop()
+        seen += 1
+        for c in children[n]:
+            indeg[c] -= 1
+            if indeg[c] == 0:
+                frontier.append(c)
+    return seen == len(parents)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_random_accepted_moves_keep_dag_acyclic(seed):
+    """Property: any add admitted by ``_creates_cycle`` (and any delete)
+    keeps the graph a DAG — checked against an independent Kahn's
+    topological sort after every accepted mutation."""
+    rng = random.Random(seed)
+    nodes = list(range(8))
+    parents = {n: set() for n in nodes}
+    accepted_adds = 0
+    for _ in range(400):
+        src, dst = rng.sample(nodes, 2)
+        if src in parents[dst]:
+            parents[dst].remove(src)
+        elif not StructureSearch._creates_cycle(parents, src, dst):
+            parents[dst].add(src)
+            accepted_adds += 1
+        assert _is_acyclic(parents), f"cycle after {src}->{dst}"
+    assert accepted_adds > 0
+
+
+def test_creates_cycle_rejects_back_edge():
+    # chain 0 -> 1 -> 2 (parents map: child -> {parents})
+    parents = {0: set(), 1: {0}, 2: {1}}
+    # closing an edge back up the chain would cycle: dst is an ancestor
+    # of src, reachable by walking src's parent links
+    assert StructureSearch._creates_cycle(parents, 1, 0)
+    assert StructureSearch._creates_cycle(parents, 2, 0)
+    assert StructureSearch._creates_cycle(parents, 2, 1)
+    # a forward shortcut 0 -> 2 creates no cycle
+    assert not StructureSearch._creates_cycle(parents, 0, 2)
+
+
+# -- batched vs. unbatched scoring -------------------------------------------
+
+def test_batched_and_unbatched_scoring_agree():
+    db = tiny_db(1)
+    lattice = build_lattice(db.schema, 2)
+    runs = {}
+    for batched in (True, False):
+        st = make_strategy("ONDEMAND")
+        st.prepare(db, lattice)
+        search = StructureSearch(db, st, max_parents=2,
+                                 batch_scoring=batched)
+        models = search.run(lattice)
+        runs[batched] = (search._score_cache, models)
+    cache_b, models_b = runs[True]
+    cache_u, models_u = runs[False]
+    assert cache_b.keys() >= cache_u.keys()      # batching prefetches more
+    for fam in cache_u:
+        assert cache_b[fam] == pytest.approx(cache_u[fam], abs=1e-3)
+    sig = lambda ms: {str(p): sorted((str(c), sorted(map(str, ps)))
+                                     for c, ps in m.parents.items())
+                      for p, m in ms.items()}
+    assert sig(models_b) == sig(models_u)
+    for p in models_b:
+        assert models_b[p].score == pytest.approx(models_u[p].score,
+                                                  abs=1e-3)
+    assert runs[True][0] is not runs[False][0]
+
+
+# -- pow2 padding isolation ---------------------------------------------------
+
+def test_pow2_padding_rows_never_leak_into_scores():
+    """``batch_scores`` pads each N_ijk stack to a power-of-two batch to
+    stabilise the jit cache; the padded all-zero rows must never leak —
+    every cached score must equal the unbatched single-family score."""
+    db = tiny_db(2)
+    lattice = build_lattice(db.schema, 2)
+    st = make_strategy("ONDEMAND")
+    st.prepare(db, lattice)
+    search = StructureSearch(db, st, batch_scoring=True)
+    point = lattice[-1]
+    nodes = list(point.all_ct_vars(db.schema, include_rind=True))
+    # 3 same-shape families -> padded to 4: the classic leak shape
+    child = nodes[0]
+    fams = [(child, frozenset([p])) for p in nodes[1:4]]
+    search.batch_scores(point, iter(fams))
+    assert search.batch_calls >= 1
+    for fam_child, fam_parents in fams:
+        keep = tuple(sorted(fam_parents)) + (fam_child,)
+        tab = st.family_ct(point, keep)
+        want = family_score(tab, fam_child, search.ess)
+        got = search._score_cache[(fam_child, fam_parents)]
+        assert got == pytest.approx(want, abs=1e-3)
+    # and zero-score rows were sliced off, not cached under any family
+    assert len(search._score_cache) == len(fams)
