@@ -26,6 +26,10 @@ plus the serve-layer dimensions:
     hash-partitioned database behind the CountingRouter (one service per
     shard, counts merged at the front-end) vs the single-database
     service, sparse executor on both sides.
+  * tenant_flood — a multi-tenant fleet (N logical databases behind one
+    TenantRegistry, tiered GREEN/YELLOW/RED workloads): per-tenant
+    serial dispatch vs cross-tenant batched dispatch (same-shape plans
+    from different tenants stacked into one jit).
   * mutation_flood — an insert-heavy write flood against warmed caches:
     delta count maintenance (fine-grained invalidation + in-place
     updates over just the delta edges) vs recount-from-scratch (the
@@ -306,6 +310,93 @@ def bench_service_flood(n_rels: int = 16, edges: int = 2000,
             if mode == "batched":
                 rec["speedup_vs_per_query"] = round(speedup, 3)
             out.append(rec)
+    return out
+
+
+def bench_tenant_flood(n_tenants: int = 4, edges: int = 800,
+                       rounds: int = 3,
+                       executors: Sequence[str] = ("dense", "sparse"),
+                       seed: int = 0) -> List[dict]:
+    """Multi-tenant fleet flood: per-tenant serial dispatch vs the
+    registry's cross-tenant batched dispatch.
+
+    ``n_tenants`` logical databases share one schema (the tiered
+    GREEN/YELLOW/RED supply-chain pattern space from
+    ``benchmarks/workloads.py``) behind one
+    :class:`~repro.serve.tenancy.TenantRegistry`.  Each round every
+    tenant answers the full tiered mix cold (the shared cache is evicted
+    between rounds).  The per-tenant baseline is STRONG — each tenant's
+    ``count_many`` still signature-buckets and stacks within the
+    tenant — so the measured speedup is purely the cross-tenant
+    stacking win (same-shape plans from different tenants riding one
+    jitted dispatch instead of one dispatch per tenant per shape).
+    """
+    try:
+        from benchmarks.workloads import (supply_chain_schema,
+                                          tenant_fleet, tiered_points)
+    except ImportError:                 # run as a script from benchmarks/
+        from workloads import (supply_chain_schema, tenant_fleet,
+                               tiered_points)
+    from repro.serve import TenantRegistry
+
+    fleet = tenant_fleet(n_tenants, supply_chain_schema(), edges=edges,
+                         seed=seed)
+    schema = fleet[0][1].schema
+    tiers = tiered_points(schema, 3)
+    mix = tiers["GREEN"] + tiers["YELLOW"] + tiers["RED"]
+    tier_counts = {t: len(v) for t, v in tiers.items()}
+    config = f"tenants{n_tenants}x{edges}r{rounds}"
+    out: List[dict] = []
+    for ex in executors:
+        reg = TenantRegistry(executor=ex)
+        for tid, db in fleet:
+            reg.add_tenant(tid, db)
+        tenant_qs = [(p, None) for p in mix]
+        all_qs = [(tid, p, None) for tid, _ in fleet for p in mix]
+        n_queries = rounds * len(all_qs)
+
+        def serial_round():
+            reg.cache.evict_all()
+            for tid, _ in fleet:
+                jax.block_until_ready(
+                    [t.counts for t in
+                     reg.tenant(tid).service.count_many(tenant_qs)])
+
+        def cross_round():
+            reg.cache.evict_all()
+            jax.block_until_ready(
+                [t.counts for t in reg.count_many(all_qs)])
+
+        serial_round()                  # warm jits/staging for both modes
+        cross_round()
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            serial_round()
+        wall_s = time.perf_counter() - t0
+        qps_s = n_queries / wall_s
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            cross_round()
+        wall_c = time.perf_counter() - t0
+        qps_c = n_queries / wall_c
+
+        speedup = qps_c / qps_s if qps_s > 0 else float("inf")
+        print(f"[tenants] {config} {ex:6s} "
+              f"per_tenant={qps_s:8.1f} q/s  "
+              f"cross_tenant={qps_c:8.1f} q/s  speedup={speedup:5.2f}x",
+              flush=True)
+        for mode, wall, qps in (("per_tenant", wall_s, qps_s),
+                                ("cross_tenant", wall_c, qps_c)):
+            rec = {"bench": "tenant_flood", "config": config,
+                   "dataset": "synthfleet", "strategy": "REGISTRY",
+                   "executor": ex, "mode": mode, "tenants": n_tenants,
+                   "queries": n_queries, "tier_mix": tier_counts,
+                   "wall_s": round(wall, 4), "qps": round(qps, 1),
+                   "completed": True}
+            if mode == "cross_tenant":
+                rec["speedup_vs_per_tenant"] = round(speedup, 3)
+            out.append(rec)
+        reg.shutdown()
     return out
 
 
@@ -733,6 +824,8 @@ def main(out_dir: str = "results/bench", scale: Optional[float] = None,
          shard_kw: Optional[dict] = None,
          mut_flood: bool = True,
          mut_flood_kw: Optional[dict] = None,
+         tenant_flood: bool = False,
+         tenant_flood_kw: Optional[dict] = None,
          discovery: bool = False,
          discovery_kw: Optional[dict] = None,
          trace: bool = False,
@@ -781,12 +874,18 @@ def main(out_dir: str = "results/bench", scale: Optional[float] = None,
         mut_recs = bench_mutation_flood(executors=tuple(executors),
                                         **(mut_flood_kw or {}))
         art["mutation_flood"] = mut_recs
+    tenant_recs: List[dict] = []
+    if tenant_flood:
+        tenant_recs = bench_tenant_flood(executors=tuple(executors),
+                                         **(tenant_flood_kw or {}))
+        art["tenant_flood"] = tenant_recs
     disc_recs: List[dict] = []
     if discovery:
         disc_recs = bench_discovery(**(discovery_kw or {}))
         art["discovery"] = disc_recs
     art["trajectory"] = (bench_trajectory(recs) + flood_recs + neg_recs
-                         + shard_recs + mut_recs + disc_recs)
+                         + shard_recs + mut_recs + tenant_recs
+                         + disc_recs)
     write_outputs(art, out_dir=out_dir, bench_json=bench_json)
     return art
 
@@ -812,9 +911,13 @@ if __name__ == "__main__":
     ap.add_argument("--discovery", action="store_true",
                     help="also run the served-vs-local model-discovery "
                          "throughput bench (rounds/s + families/s)")
+    ap.add_argument("--tenant-flood", action="store_true",
+                    help="also run the multi-tenant fleet flood "
+                         "(cross-tenant batched vs per-tenant serial)")
     args = ap.parse_args()
     main(scale=args.scale, datasets=tuple(args.datasets),
          budget_s=args.budget_s, spotlight=not args.no_spotlight,
          flood=not args.no_flood, neg_flood=not args.no_neg_flood,
          shards=tuple(args.shards), mut_flood=not args.no_mut_flood,
+         tenant_flood=args.tenant_flood,
          discovery=args.discovery, trace=args.trace)

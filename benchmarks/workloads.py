@@ -1,0 +1,217 @@
+"""Tiered multi-tenant workload generation for the serving benchmarks.
+
+Pattern-space enumeration by complexity tier (the GREEN/YELLOW/RED
+phasing used by ontology-driven pattern discovery):
+
+* **GREEN** — single-relationship patterns: one atom, the cheapest
+  ct-tables, always the first phase of a discovery run.
+* **YELLOW** — two-relationship chains across DISTINCT entity types:
+  medium fan-out joins.
+* **RED** — everything expensive: chains of three or more atoms, or any
+  chain through a self-relationship (same entity type on both ends —
+  the recursive joins that dominate worst-case cost).
+
+Three small example schemas with deliberately different shapes (a
+social network with a self-relationship, an FMCG purchase graph, a
+supply chain) stand in for distinct logical databases, and
+:func:`tenant_fleet` builds the N-tenant database set the multi-tenant
+bench floods through a :class:`~repro.serve.tenancy.TenantRegistry`.
+
+Everything here is deterministic given ``seed``.
+
+Usage::
+
+    tiers = tiered_points(social_schema(), max_chain_length=3)
+    mix = query_mix(schema, n=200, weights={"GREEN": 3, "YELLOW": 2,
+                                            "RED": 1}, seed=7)
+    fleet = tenant_fleet(4, schema, edges=800, seed=0)
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core.database import (Attribute, EntityType, RelationalDB,
+                                 Relationship, Schema, synth_db)
+from repro.core.search import build_lattice
+from repro.core.variables import LatticePoint
+
+__all__ = [
+    "GREEN", "YELLOW", "RED", "TIERS",
+    "classify", "tiered_points", "query_mix", "tenant_fleet",
+    "social_schema", "fmcg_schema", "supply_chain_schema",
+    "EXAMPLE_SCHEMAS",
+]
+
+GREEN = "GREEN"
+YELLOW = "YELLOW"
+RED = "RED"
+TIERS = (GREEN, YELLOW, RED)
+
+
+# -- complexity tiers --------------------------------------------------------
+def classify(schema: Schema, point: LatticePoint) -> str:
+    """Assign one lattice point to its complexity tier.
+
+    Args:
+        schema: the relational schema the point was enumerated over.
+        point: a non-empty lattice point.
+
+    Returns:
+        ``"GREEN"`` (one atom), ``"YELLOW"`` (two-atom chain with no
+        self-relationship), or ``"RED"`` (>= 3 atoms, or any atom over
+        a self-relationship).
+
+    Usage::
+
+        tier = classify(schema, point)
+    """
+    if not point.atoms:
+        raise ValueError("cannot classify the empty lattice point")
+    self_rel = any(schema.relationship(a.rel).src
+                   == schema.relationship(a.rel).dst
+                   for a in point.atoms)
+    if self_rel or point.length >= 3:
+        return RED
+    return GREEN if point.length == 1 else YELLOW
+
+
+def tiered_points(schema: Schema, max_chain_length: int = 3
+                  ) -> Dict[str, List[LatticePoint]]:
+    """Enumerate the pattern space and bucket it by tier.
+
+    Args:
+        schema: relational schema to enumerate chains over.
+        max_chain_length: longest relationship chain to enumerate.
+
+    Returns:
+        ``{"GREEN": [...], "YELLOW": [...], "RED": [...]}`` — every
+        tier key is present (possibly empty), and the union is exactly
+        the non-empty lattice.
+
+    Usage::
+
+        tiers = tiered_points(social_schema())
+        assert tiers["RED"]          # self-relationship chains land here
+    """
+    out: Dict[str, List[LatticePoint]] = {t: [] for t in TIERS}
+    for point in build_lattice(schema, max_chain_length):
+        if point.atoms:
+            out[classify(schema, point)].append(point)
+    return out
+
+
+def query_mix(schema: Schema, n: int,
+              weights: Optional[Mapping[str, float]] = None,
+              max_chain_length: int = 3,
+              seed: int = 0) -> List[LatticePoint]:
+    """A deterministic tier-weighted query stream.
+
+    Args:
+        schema: relational schema to enumerate.
+        n: number of queries to draw (with replacement).
+        weights: relative draw weight per tier; tiers with no points are
+            dropped from the draw.  Defaults to ``{GREEN: 3, YELLOW: 2,
+            RED: 1}`` — the cheap-heavy mix a warm discovery loop emits.
+        max_chain_length: pattern-space depth.
+        seed: RNG seed (same seed, same stream).
+
+    Returns:
+        ``n`` lattice points.
+
+    Usage::
+
+        stream = query_mix(schema, 200, seed=3)
+    """
+    if weights is None:
+        weights = {GREEN: 3.0, YELLOW: 2.0, RED: 1.0}
+    tiers = tiered_points(schema, max_chain_length)
+    pool = [(t, pts) for t, pts in tiers.items()
+            if pts and weights.get(t, 0) > 0]
+    if not pool:
+        raise ValueError("no enumerable patterns for the requested mix")
+    rng = random.Random(seed)
+    names = [t for t, _ in pool]
+    w = [float(weights[t]) for t in names]
+    by_tier = dict(pool)
+    return [rng.choice(by_tier[t])
+            for t in rng.choices(names, weights=w, k=n)]
+
+
+# -- example schemas ---------------------------------------------------------
+def social_schema() -> Schema:
+    """A social network: the ``Follows`` self-relationship makes its RED
+    tier non-empty at chain length 2 already."""
+    return Schema(
+        [EntityType("User", 60, [Attribute("age", 3),
+                                 Attribute("active", 2)]),
+         EntityType("Post", 40, [Attribute("topic", 3)])],
+        [Relationship("Follows", "User", "User", []),
+         Relationship("Likes", "User", "Post", [Attribute("strength", 2)])])
+
+
+def fmcg_schema() -> Schema:
+    """A fast-moving-consumer-goods purchase graph (customers, products,
+    stores)."""
+    return Schema(
+        [EntityType("Customer", 50, [Attribute("segment", 3)]),
+         EntityType("Product", 30, [Attribute("brand", 2),
+                                    Attribute("organic", 2)]),
+         EntityType("Store", 20, [Attribute("region", 2)])],
+        [Relationship("Buys", "Customer", "Product",
+                      [Attribute("promo", 2)]),
+         Relationship("Stocks", "Store", "Product", [])])
+
+
+def supply_chain_schema() -> Schema:
+    """A supply chain (suppliers, parts, plants) with a self-relationship
+    on parts (bill-of-materials style ``ComponentOf``)."""
+    return Schema(
+        [EntityType("Supplier", 25, [Attribute("tier", 2)]),
+         EntityType("Part", 45, [Attribute("critical", 2)]),
+         EntityType("Plant", 15, [Attribute("country", 3)])],
+        [Relationship("Supplies", "Supplier", "Part", []),
+         Relationship("ComponentOf", "Part", "Part", []),
+         Relationship("Uses", "Plant", "Part", [Attribute("volume", 2)])])
+
+
+EXAMPLE_SCHEMAS = {
+    "social": social_schema,
+    "fmcg": fmcg_schema,
+    "supply_chain": supply_chain_schema,
+}
+
+
+# -- tenant fleets -----------------------------------------------------------
+def tenant_fleet(n_tenants: int, schema: Optional[Schema] = None,
+                 edges: int = 800, seed: int = 0
+                 ) -> List[Tuple[str, RelationalDB]]:
+    """Build ``n_tenants`` logical databases over ONE shared schema.
+
+    Sharing the schema OBJECT is deliberate: plan compilation caches by
+    schema, so every tenant's identical query compiles to the same plan
+    and cross-tenant signature buckets stack into one jitted dispatch
+    (different edge sets per tenant — the data differs, the shapes
+    align).
+
+    Args:
+        n_tenants: fleet size.
+        schema: shared schema; defaults to :func:`social_schema`.
+        edges: edges per relationship per tenant.
+        seed: base seed; tenant ``i`` synthesises with ``seed + i``.
+
+    Returns:
+        ``[(tenant_id, db), ...]`` with ids ``"t0".."t{n-1}"``.
+
+    Usage::
+
+        fleet = tenant_fleet(4, edges=800)
+        for tid, db in fleet:
+            registry.add_tenant(tid, db)
+    """
+    if schema is None:
+        schema = social_schema()
+    edges_per_rel = {r.name: edges for r in schema.relationships}
+    return [(f"t{i}", synth_db(schema, edges_per_rel, seed=seed + i))
+            for i in range(n_tenants)]

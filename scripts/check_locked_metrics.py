@@ -1,0 +1,76 @@
+"""Locked-metrics mutation checker (the CI docs job).
+
+Every serving counter (:class:`repro.serve.metrics.ServiceMetrics` /
+``RouterMetrics``) is a ``_LockedMetrics`` dataclass: mutations must go
+through ``metrics.inc(field=n)``, which takes the metrics lock — a bare
+``metrics.requests += 1`` on a shared instance is a lost-update data
+race that only shows up as drifting counters under concurrency.
+
+This check walks ``src/repro`` and fails on any bare augmented
+assignment to an attribute of a ``metrics``-named receiver::
+
+    self.metrics.requests += 1        # FAIL: racy lost update
+    m.coalesced -= 1                  # FAIL: bare mutation
+    self.metrics.inc(requests=1)      # OK:  locked increment
+    stats.ct_rows += tab.nnz_rows()   # OK:  CostStats is not locked
+
+The receiver rule is name-based (``metrics`` / ``*_metrics`` / ``m``
+bound to a metrics object can't be distinguished statically, so the
+check targets the conventional names actually used in the tree:
+``metrics`` and anything ending in ``metrics``).  ``repro/serve/
+metrics.py`` itself is exempt — the lock lives there.
+
+Exits 1 when any mutation is found.
+
+Run:  python scripts/check_locked_metrics.py
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+SRC = ROOT / "src" / "repro"
+
+# `<anything>metrics.<field> +=/-=` — the receiver must be a metrics
+# object by naming convention; `.inc(` calls never match (no `=`).
+MUTATION_RE = re.compile(
+    r"\b[A-Za-z_][A-Za-z0-9_.]*metrics\.[A-Za-z_][A-Za-z0-9_]*\s*[+-]=")
+
+# the lock implementation itself (and only it) may touch fields directly
+EXEMPT = {SRC / "serve" / "metrics.py"}
+
+
+def check_file(path: Path) -> list:
+    errors = []
+    for lineno, line in enumerate(path.read_text().splitlines(), 1):
+        code = line.split("#", 1)[0]
+        m = MUTATION_RE.search(code)
+        if m:
+            errors.append(f"{path.relative_to(ROOT)}:{lineno}: bare "
+                          f"metrics mutation {m.group(0)!r} — use "
+                          f"metrics.inc(field=n) (locked)")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    for path in sorted(SRC.rglob("*.py")):
+        if path in EXEMPT:
+            continue
+        errors.extend(check_file(path))
+    for err in errors:
+        print(err, file=sys.stderr)
+    if errors:
+        print(f"\n{len(errors)} unlocked metrics mutation(s)",
+              file=sys.stderr)
+        return 1
+    print(f"locked-metrics check OK "
+          f"({sum(1 for _ in SRC.rglob('*.py'))} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

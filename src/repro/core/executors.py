@@ -387,7 +387,8 @@ class Executor:
         are tiny and stay; staged input stacks hold device memory)."""
         staged = [k for k in self._batch_cache
                   if isinstance(k, tuple) and k
-                  and k[0] in ("stacked_inputs", "fanout_inputs")]
+                  and k[0] in ("stacked_inputs", "fanout_inputs",
+                               "multi_inputs")]
         while len(staged) >= self._MAX_INPUT_CACHE:
             self._batch_cache.pop(staged.pop(0), None)
 
@@ -421,6 +422,127 @@ class Executor:
         fn = jax.jit(run)
         self._batch_cache[key] = (db, fn)
         return fn
+
+    # -- cross-database stacked evaluation (multi-tenant serve path) --------
+    def positive_batch_multi(self, dbs: Sequence[RelationalDB],
+                             plans: Sequence[ContractionPlan],
+                             stats_list: Optional[Sequence[
+                                 Optional[CostStats]]] = None,
+                             min_stack: int = 2) -> List[CtTable]:
+        """:meth:`positive_batch` across MANY databases: item ``i`` is
+        ``plans[i]`` evaluated against ``dbs[i]``.
+
+        The traced evaluator reads only the plan's input arrays — the
+        database supplies static metadata (sizes, cards) that
+        :func:`plan_stack_key` captures — so rows from *different*
+        databases with equal stack keys stack into the SAME jitted
+        dispatch.  This is what makes a shared multi-tenant fleet faster
+        than N isolated services: same-shape plans from different tenants
+        ride one trace.
+
+        Args:
+            dbs: one database per plan (repeats allowed and common).
+            plans: compiled plans, positionally paired with ``dbs``.
+            stats_list: optional per-item
+                :class:`~repro.core.contract.CostStats` (typically each
+                tenant engine's); accounting matches each database
+                running its own plans.
+            min_stack: smallest group worth tracing a stacked evaluator
+                for.
+
+        Returns:
+            One :class:`~repro.core.ct.CtTable` per item, positionally
+            aligned and numerically identical to evaluating each
+            ``(db, plan)`` pair alone.
+
+        Usage::
+
+            tabs = executor.positive_batch_multi(dbs, plans)
+        """
+        results: List[Optional[CtTable]] = [None] * len(plans)
+        groups: "dict" = {}
+        for i, (db, plan) in enumerate(zip(dbs, plans)):
+            groups.setdefault(plan_stack_key(db, plan), []).append(i)
+        for idxs in groups.values():
+            g_dbs = [dbs[i] for i in idxs]
+            g_plans = [plans[i] for i in idxs]
+            g_stats = [stats_list[i] if stats_list is not None else None
+                       for i in idxs]
+            tabs = None
+            if len(idxs) >= min_stack:
+                try:
+                    tabs = self._positive_stacked_multi(g_dbs, g_plans,
+                                                        g_stats)
+                except NotImplementedError:
+                    tabs = None
+            if tabs is None:
+                tabs = [self.positive(d, p, s)
+                        for d, p, s in zip(g_dbs, g_plans, g_stats)]
+            for i, t in zip(idxs, tabs):
+                results[i] = t
+        return results
+
+    def _positive_stacked_multi(self, dbs: Sequence[RelationalDB],
+                                plans: Sequence[ContractionPlan],
+                                stats_list: Sequence[Optional[CostStats]]
+                                ) -> List[CtTable]:
+        """One vmapped execution of stack-compatible ``(db, plan)`` rows.
+        The jitted evaluator is the same one :meth:`_positive_stacked`
+        uses (traced against the group's first database — valid for every
+        member because equal stack keys pin all static metadata); only the
+        input staging differs, pulling each row's arrays from its own
+        database."""
+        template = plans[0]
+        b = len(plans)
+        b_pad = 1 << max(b - 1, 0).bit_length()
+        stacked = self._staged_inputs_multi(dbs, plans, b_pad)
+        t_layout = _finalise_layout(template, self._flat_vars(template))
+        fused = t_layout is not None and all(
+            _finalise_layout(p, self._flat_vars(p)) == t_layout
+            for p in plans[1:])
+        fn = self._stacked_fn(dbs[0], template, b_pad,
+                              t_layout if fused else None)
+        with self.tracer.span("exec.positive_batch_multi", plans=b,
+                              b_pad=b_pad, fused=fused,
+                              dbs=len({id(d) for d in dbs})), \
+                annotate("exec.positive_batch_multi"):
+            rows = fn(*stacked)
+        out: List[CtTable] = []
+        for db, plan, row, stats in zip(dbs, plans, rows, stats_list):
+            if fused:
+                fvars = self._flat_vars(plan)
+                out_vars = tuple(fvars[i] for i in t_layout[1])
+                out.append(CtTable(out_vars, row))
+                if stats is not None:
+                    stats.ct_cells += int(np.prod(t_layout[0],
+                                                  dtype=np.int64))
+            else:
+                out.append(_finalise(row, self._flat_vars(plan), plan.keep,
+                                     stats))
+            if stats is not None:
+                _count_plan_joins(db, plan, stats)
+        return out
+
+    def _staged_inputs_multi(self, dbs: Sequence[RelationalDB],
+                             plans: Sequence[ContractionPlan],
+                             b_pad: int) -> Tuple[jnp.ndarray, ...]:
+        """Per-row input packs stacked on device, each row staged from its
+        own database — cached per (db ids, store versions, plan list) like
+        the fan-out path, so a repeated multi-tenant flood over unchanged
+        stores re-dispatches without re-staging a host byte."""
+        in_key = ("multi_inputs", tuple(id(db) for db in dbs),
+                  tuple(db.version for db in dbs),
+                  tuple(id(p) for p in plans), b_pad)
+        hit = self._batch_cache.get(in_key)
+        if hit is not None and all(a is b for a, b in zip(hit[0], dbs)):
+            return hit[2]
+        packs = [plan_input_arrays(db, p) for db, p in zip(dbs, plans)]
+        packs = packs + [packs[0]] * (b_pad - len(plans))
+        stacked = tuple(jnp.asarray(np.stack([p[j] for p in packs]))
+                        for j in range(len(packs[0])))
+        self._trim_input_cache()
+        self._batch_cache[in_key] = (list(dbs), list(plans), stacked)
+        return stacked
 
     # -- cross-shard fused evaluation (router flood path) -------------------
     def stacked_layout(self, plan: ContractionPlan):

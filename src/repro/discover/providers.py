@@ -37,9 +37,19 @@ from __future__ import annotations
 
 from typing import List, Optional, Sequence, Tuple
 
+from ..core.cache import DEFAULT_TENANT
 from ..core.database import RelationalDB
 from ..core.strategies import Strategy
 from ..core.variables import LatticePoint
+
+
+def _tenant_token(backend, base: Tuple) -> Tuple:
+    """Prefix a version token with the backend's tenant id, so a shared
+    score memo keyed by ``(version, family)`` keeps tenants' scores
+    disjoint: one tenant's writes move ONLY its own token.  Default-tenant
+    backends keep the bare token (single-DB memos are unchanged)."""
+    tenant = getattr(backend, "tenant", DEFAULT_TENANT)
+    return base if tenant == DEFAULT_TENANT else ("tenant", tenant) + base
 
 __all__ = [
     "LocalCounts",
@@ -110,7 +120,8 @@ class ServiceCounts:
         pass
 
     def version(self) -> Tuple:
-        return ("db", self.service.engine.db.version)
+        return _tenant_token(self.service,
+                             ("db", self.service.engine.db.version))
 
     def family_ct(self, point: LatticePoint, keep):
         return self.service.count_complete(point, keep)
@@ -141,7 +152,9 @@ class RouterCounts:
 
     def version(self) -> Tuple:
         sdb = self.router._snapshot()[0]
-        return ("shards",) + tuple(sh.version for sh in sdb.shards)
+        return _tenant_token(
+            self.router,
+            ("shards",) + tuple(sh.version for sh in sdb.shards))
 
     def family_ct(self, point: LatticePoint, keep):
         return self.router.count_complete(point, keep)

@@ -179,6 +179,14 @@ class DiscoveryService:
         tracer: span sink; defaults to the backend's tracer when it has
             one (so search-round spans land in the same ring as the
             counting spans they caused).
+        memo: share an existing score-memo dict across several discovery
+            services — the multi-tenant registry passes ONE dict to every
+            tenant's service.  Safe because memo keys are
+            ``(version_token, family)`` and tenant backends prefix their
+            tokens with the tenant id, so entries stay disjoint: one
+            tenant's writes move only its own token, and a shared-memo
+            refresh retains other tokens' entries instead of garbage-
+            collecting them.
 
     Usage::
 
@@ -192,7 +200,8 @@ class DiscoveryService:
                  ess: float = 1.0, max_moves: int = 200,
                  batch_scoring: bool = True, max_restarts: int = 64,
                  metrics: Optional[DiscoveryMetrics] = None,
-                 tracer=None):
+                 tracer=None,
+                 memo: Optional[Dict[Tuple[Tuple, Family], float]] = None):
         self.provider = as_count_provider(backend, db)
         self.schema = self.provider.schema
         self.lattice = build_lattice(self.schema, max_chain_length)
@@ -207,7 +216,9 @@ class DiscoveryService:
                        else getattr(self.provider, "tracer", None)
                        or NULL_TRACER)
         self._lock = threading.Lock()
-        self._memo: Dict[Tuple[Tuple, Family], float] = {}
+        self._shared_memo = memo is not None
+        self._memo: Dict[Tuple[Tuple, Family], float] = (
+            memo if memo is not None else {})
         self._deps: Dict[Family, FrozenSet[str]] = {}
         self._models: Optional[Dict[LatticePoint, BNModel]] = None
         self._token: Optional[Tuple] = None
@@ -324,9 +335,14 @@ class DiscoveryService:
 
     def reset_memo(self) -> None:
         """Drop every memoized family score (but no CT cache state) —
-        benchmarks use this to re-measure scoring work over warm counts."""
+        benchmarks use this to re-measure scoring work over warm counts.
+        On a shared memo this clears IN PLACE (every sharer's scores go,
+        including other tenants')."""
         with self._lock:
-            self._memo = {}
+            if self._shared_memo:
+                self._memo.clear()
+            else:
+                self._memo = {}
 
     def stats(self) -> dict:
         return self.metrics.snapshot()
@@ -347,12 +363,32 @@ class DiscoveryService:
                        changed: FrozenSet[str]) -> int:
         """Move scores whose dependencies are disjoint from ``changed``
         from the previous model's token to ``new_token``; drop everything
-        else (it will be re-scored lazily).  The memo is rebuilt into a
-        fresh dict and swapped atomically so concurrent readers only ever
-        see a complete mapping."""
+        else (it will be re-scored lazily).  A private memo is rebuilt
+        into a fresh dict and swapped atomically so concurrent readers
+        only ever see a complete mapping; a SHARED memo is edited in
+        place instead — other sharers' tokens (other tenants') are
+        retained rather than garbage-collected, so one tenant's write
+        never invalidates another's scores, and a reader racing the move
+        at worst misses a score transiently (costing one re-score)."""
         retained = 0
         with self._lock:
             old_token = self._token
+            if self._shared_memo:
+                if old_token == new_token:
+                    return 0
+                moves, drops = [], []
+                for (tok, fam), s in list(self._memo.items()):
+                    if tok != old_token:
+                        continue
+                    deps = self._deps.get(fam)
+                    if deps is not None and not (deps & changed):
+                        moves.append(((new_token, fam), s))
+                    drops.append((tok, fam))
+                for k in drops:
+                    self._memo.pop(k, None)
+                for k, s in moves:
+                    self._memo[k] = s
+                return len(moves)
             memo: Dict[Tuple[Tuple, Family], float] = {}
             for (tok, fam), s in self._memo.items():
                 if tok == new_token:

@@ -14,19 +14,29 @@ Layering::
 A single-database deployment talks to one :class:`CountingService`
 directly; a sharded deployment (:func:`~repro.core.database
 .shard_database`) puts one :class:`CountingRouter` in front of one service
-per shard.  See ``docs/serving.md`` for the full API walkthrough.
+per shard; a multi-tenant fleet (:class:`TenantRegistry`, tenancy.py)
+puts many logical databases behind ONE shared executor + byte-budgeted
+cache store, with per-tenant admission control and cross-tenant fused
+dispatch.  See ``docs/serving.md`` for the full API walkthrough.
 """
 
-from .batching import (execute_bucketed, execute_complete_bucketed,
-                       plan_input_arrays, plan_stack_key)
-from .metrics import BucketMetrics, RouterMetrics, ServiceMetrics
+from .batching import (execute_bucketed, execute_bucketed_multi,
+                       execute_complete_bucketed, plan_input_arrays,
+                       plan_stack_key)
+from .metrics import (BucketMetrics, RouterMetrics, ServiceMetrics,
+                      merge_stats_dicts)
 from .router import CountingRouter, NotRoutableError, RouterTicket
-from .service import CountingService, CountTicket, ServiceShutdown
+from .service import (CountingService, CountTicket, ServiceShutdown,
+                      TenantAdmissionError)
+from .tenancy import Tenant, TenantRegistry
 
 __all__ = [
     "CountingService", "CountTicket", "ServiceShutdown",
     "CountingRouter", "RouterTicket", "NotRoutableError",
+    "Tenant", "TenantRegistry", "TenantAdmissionError",
     "ServiceMetrics", "BucketMetrics", "RouterMetrics",
-    "execute_bucketed", "execute_complete_bucketed",
+    "merge_stats_dicts",
+    "execute_bucketed", "execute_bucketed_multi",
+    "execute_complete_bucketed",
     "plan_input_arrays", "plan_stack_key",
 ]

@@ -43,8 +43,9 @@ from ..core.variables import CtVar, LatticePoint
 from ..obs.trace import NULL_TRACER, NullTracer
 from .metrics import ServiceMetrics
 
-__all__ = ["TableMerger", "execute_bucketed", "execute_complete_bucketed",
-           "plan_input_arrays", "plan_stack_key"]
+__all__ = ["TableMerger", "execute_bucketed", "execute_bucketed_multi",
+           "execute_complete_bucketed", "plan_input_arrays",
+           "plan_stack_key"]
 
 
 class TableMerger:
@@ -201,6 +202,81 @@ def execute_bucketed(executor: Executor, db: RelationalDB,
             dt = time.perf_counter() - t0
             if metrics is not None:
                 metrics.observe_batch(sig, len(chunk), dt)
+            for i, tab in zip(chunk, tabs):
+                results[i] = tab
+    return results
+
+
+def execute_bucketed_multi(executor: Executor,
+                           dbs: Sequence[RelationalDB],
+                           plans: Sequence[ContractionPlan],
+                           stats_list: Optional[Sequence[
+                               Optional[CostStats]]] = None,
+                           max_batch_size: Optional[int] = None,
+                           metrics_list: Optional[Sequence[
+                               Optional[ServiceMetrics]]] = None,
+                           tracer: NullTracer = NULL_TRACER
+                           ) -> List[CtTable]:
+    """:func:`execute_bucketed` across MANY databases — the cross-tenant
+    dispatch path.  Item ``i`` is ``plans[i]`` against ``dbs[i]``; plans
+    from different databases that share a shape signature land in the
+    same micro-batch and (when their stack keys also match) the same
+    jitted dispatch via
+    :meth:`~repro.core.executors.Executor.positive_batch_multi`.
+
+    Args:
+        executor: the SHARED backend (its trace/staging caches are what
+            cross-tenant batching amortises).
+        dbs: one database per plan.
+        plans: compiled plans, positionally paired with ``dbs``.
+        stats_list: optional per-item :class:`~repro.core.contract
+            .CostStats` (each tenant engine's).
+        max_batch_size: cap per micro-batch (``None``/0 = one batch per
+            signature bucket).
+        metrics_list: optional per-item
+            :class:`~repro.serve.metrics.ServiceMetrics`; each distinct
+            instance in a micro-batch receives one ``observe_batch`` with
+            its own query count and its wall-time share of the dispatch.
+        tracer: optional tracer; each micro-batch becomes a
+            ``batch.dispatch`` span carrying the tenant fan-in.
+
+    Returns:
+        One :class:`~repro.core.ct.CtTable` per item, in input order.
+
+    Usage::
+
+        tabs = execute_bucketed_multi(executor, dbs, plans)
+    """
+    results: List[Optional[CtTable]] = [None] * len(plans)
+    for sig, idxs in group_by_signature(plans, key="shape").items():
+        step = max_batch_size if max_batch_size else len(idxs)
+        for s in range(0, len(idxs), max(step, 1)):
+            chunk = idxs[s:s + max(step, 1)]
+            c_dbs = [dbs[i] for i in chunk]
+            c_plans = [plans[i] for i in chunk]
+            c_stats = ([stats_list[i] for i in chunk]
+                       if stats_list is not None else None)
+            span = (tracer.span("batch.dispatch", sig=sig,
+                                queries=len(chunk),
+                                dbs=len({id(d) for d in c_dbs}))
+                    if tracer.enabled else None)
+            t0 = time.perf_counter()
+            if span is not None:
+                with span:
+                    tabs = executor.positive_batch_multi(c_dbs, c_plans,
+                                                         c_stats)
+            else:
+                tabs = executor.positive_batch_multi(c_dbs, c_plans, c_stats)
+            dt = time.perf_counter() - t0
+            if metrics_list is not None:
+                shares: Dict[int, Tuple[ServiceMetrics, int]] = {}
+                for i in chunk:
+                    m = metrics_list[i]
+                    if m is not None:
+                        _, n = shares.get(id(m), (m, 0))
+                        shares[id(m)] = (m, n + 1)
+                for m, n in shares.values():
+                    m.observe_batch(sig, n, dt * n / len(chunk))
             for i, tab in zip(chunk, tabs):
                 results[i] = tab
     return results

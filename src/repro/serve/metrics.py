@@ -46,6 +46,46 @@ from ..core.cache import CtCache
 from ..obs.hist import LatencyHistogram
 
 
+def merge_stats_dicts(snaps: Sequence[dict]) -> dict:
+    """Deep-merge JSON-able stats dicts: numeric leaves SUM, nested dicts
+    recurse, anything else (strings, lists, histogram summaries rendered
+    as lists, ``None``) keeps the first occurrence.  Bools are identity
+    flags, not counters, so they take first-wins too.
+
+    This replaces the old top-level-numeric-only aggregation in
+    :meth:`~repro.serve.router.CountingRouter.stats`, which silently
+    dropped nested sub-dicts — with per-tenant rollups
+    (``cache.info()["tenants"]``) nested one level down, flat aggregation
+    would have erased exactly the counters tenancy adds.
+
+    Args:
+        snaps: stats dicts of the same general shape (missing keys fine).
+
+    Returns:
+        A fresh merged dict; inputs are not modified.
+
+    Usage::
+
+        agg = merge_stats_dicts([svc.stats()["cache"] for svc in shards])
+    """
+    out: dict = {}
+    for snap in snaps:
+        for k, v in snap.items():
+            if isinstance(v, dict):
+                prev = out.get(k)
+                out[k] = merge_stats_dicts(
+                    [prev, v] if isinstance(prev, dict) else [v])
+            elif (isinstance(v, (int, float)) and not isinstance(v, bool)
+                  and (k not in out
+                       or (isinstance(out[k], (int, float))
+                           and not isinstance(out[k], bool)))):
+                base = out.get(k, 0)
+                out[k] = base + v
+            elif k not in out:
+                out[k] = v
+    return out
+
+
 @dataclass
 class BucketMetrics:
     """One shape-signature bucket's execution statistics (mutated only
@@ -120,6 +160,9 @@ class ServiceMetrics(_LockedMetrics):
     cache_hits: int = 0           # resolved from the CtCache without queueing
     coalesced: int = 0            # merged into an identical in-flight request
     enqueued: int = 0             # entered the request queue
+    admitted: int = 0             # passed the tenant admission gate
+    shed: int = 0                 # rejected by admission policy "shed"
+    throttled: int = 0            # forced drains by admission policy "queue"
     flushes: int = 0              # scheduler drains (any trigger)
     size_flushes: int = 0        # triggered by a bucket hitting max_batch_size
     wait_flushes: int = 0        # triggered by the max_wait deadline

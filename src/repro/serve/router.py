@@ -42,6 +42,7 @@ import jax.numpy as jnp
 
 from concurrent.futures import ThreadPoolExecutor
 
+from ..core.cache import DEFAULT_TENANT
 from ..core.contract import CostStats
 from ..core.ct import CtTable
 from ..core.database import NotRoutableError, ShardedDatabase
@@ -52,7 +53,7 @@ from ..core.mobius import complete_ct_many, positive_queries
 from ..core.variables import CtVar, LatticePoint
 from ..obs.trace import NullTracer, SpanContext, default_tracer
 from .batching import TableMerger
-from .metrics import RouterMetrics, ServiceMetrics
+from .metrics import RouterMetrics, ServiceMetrics, merge_stats_dicts
 from .service import CountingService, CountTicket
 
 __all__ = ["CountingRouter", "RouterTicket", "NotRoutableError"]
@@ -292,8 +293,10 @@ class CountingRouter:
                  dtype=jnp.float32,
                  rebalance_rows: Optional[int] = None,
                  metrics: Optional[RouterMetrics] = None,
-                 tracer: Optional[NullTracer] = None):
+                 tracer: Optional[NullTracer] = None,
+                 tenant: str = DEFAULT_TENANT):
         self.sdb = sdb
+        self.tenant = tenant
         self.cache_entries = cache_entries
         self.cache_result_bytes = cache_result_bytes
         self.rebalance_rows = rebalance_rows
@@ -324,7 +327,8 @@ class CountingRouter:
                             max_wait_s=max_wait_s,
                             max_in_flight=max_in_flight,
                             max_pending_bytes=max_pending_bytes,
-                            tracer=self.tracer)
+                            tracer=self.tracer,
+                            tenant=tenant)
         self._discovery = None             # lazily built DiscoveryService
         self.engines: List[CountingEngine] = []
         self.services: List[CountingService] = []
@@ -1111,14 +1115,14 @@ class CountingRouter:
         shard_snaps = [svc.stats() for svc in services]
         agg = ServiceMetrics.merged(
             [svc.metrics for svc in services]).snapshot()
-        cache_agg: dict = {}
-        for snap in shard_snaps:
-            for k, v in snap.get("cache", {}).items():
-                if isinstance(v, (int, float)) and not isinstance(v, bool):
-                    cache_agg[k] = cache_agg.get(k, 0) + v
-        agg["cache"] = cache_agg
+        # deep merge: numeric leaves sum recursively, so nested sub-dicts
+        # (per-tenant cache rollups) survive aggregation instead of being
+        # silently dropped by a flat top-level-numeric sweep
+        agg["cache"] = merge_stats_dicts(
+            [snap.get("cache", {}) for snap in shard_snaps])
         out = {"router": self.metrics.snapshot(), "aggregate": agg,
-               "shards": shard_snaps, "tracer": self.tracer.snapshot()}
+               "shards": shard_snaps, "tenant": self.tenant,
+               "tracer": self.tracer.snapshot()}
         if self._discovery is not None:
             out["discovery"] = self._discovery.stats()
         return out

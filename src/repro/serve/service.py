@@ -56,6 +56,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..core.cache import DEFAULT_TENANT
 from ..core.ct import CtTable
 from ..core.database import FactDelta
 from ..core.engine import CountingEngine, DeltaReport, OnDemandPositives
@@ -72,6 +73,13 @@ class ServiceShutdown(RuntimeError):
     """The service was shut down: raised by new submits after
     :meth:`CountingService.shutdown`, and propagated to every waiter whose
     query was still pending when a non-draining shutdown ran."""
+
+
+class TenantAdmissionError(RuntimeError):
+    """A submit was rejected by per-tenant admission control: the tenant
+    already has ``admission_max`` queries pending and its policy is
+    ``"shed"``.  The client should back off and retry; other tenants'
+    services are unaffected."""
 
 
 class _Pending:
@@ -240,9 +248,21 @@ class CountingService:
             executor, and cache (see :mod:`repro.obs.trace`); defaults to
             :func:`~repro.obs.trace.default_tracer` — the free no-op
             tracer unless the ``REPRO_TRACE`` env var enables one.
+        tenant: the logical database this service fronts (stamped on
+            stats snapshots and trace spans; the default keeps single-DB
+            deployments tenant-blind).
+        admission_max: per-tenant admission bound — the most queries this
+            tenant may have pending at once, ON TOP of the pool-level
+            ``max_in_flight``/byte backpressure (``None`` disables the
+            gate).
+        admission_policy: what a submit over the bound does — ``"queue"``
+            drains the tenant's own queue inline on the flooding thread
+            (bounded depth, no rejection), ``"shed"`` raises
+            :class:`TenantAdmissionError` (load shedding).
 
     Raises:
-        ValueError: ``max_batch_size < 1``.
+        ValueError: ``max_batch_size < 1`` or an unknown
+            ``admission_policy``.
 
     Usage::
 
@@ -258,10 +278,19 @@ class CountingService:
                  dispatcher: bool = False,
                  use_butterfly: bool = True,
                  metrics: Optional[ServiceMetrics] = None,
-                 tracer: Optional[NullTracer] = None):
+                 tracer: Optional[NullTracer] = None,
+                 tenant: str = DEFAULT_TENANT,
+                 admission_max: Optional[int] = None,
+                 admission_policy: str = "queue"):
         if max_batch_size < 1:
             raise ValueError("max_batch_size must be >= 1")
+        if admission_policy not in ("queue", "shed"):
+            raise ValueError(f"unknown admission_policy "
+                             f"{admission_policy!r} (queue|shed)")
         self.engine = engine
+        self.tenant = tenant
+        self.admission_max = admission_max
+        self.admission_policy = admission_policy
         self.max_batch_size = max_batch_size
         self.max_wait_s = max_wait_s
         self.max_in_flight = max_in_flight
@@ -401,8 +430,22 @@ class CountingService:
                 self.metrics.inc(coalesced=1)
                 if tr.enabled:
                     tr.event("service.coalesced", parent=trace_ctx,
-                             atoms=point.atoms)
+                             atoms=point.atoms, tenant=self.tenant)
                 return CountTicket(self, entry=entry)
+            # per-tenant admission gate: layered UNDER max_in_flight (which
+            # protects the pool) — this bound protects the pool FROM one
+            # tenant.  Coalesces and cache hits never consume a slot.
+            admission_over = (self.admission_max is not None
+                              and len(self._pending) >= self.admission_max)
+            if admission_over and self.admission_policy == "shed":
+                self.metrics.inc(shed=1)
+                if tr.enabled:
+                    tr.event("service.shed", parent=trace_ctx,
+                             atoms=point.atoms, tenant=self.tenant,
+                             bound=self.admission_max)
+                raise TenantAdmissionError(
+                    f"tenant {self.tenant!r}: admission bound of "
+                    f"{self.admission_max} pending queries exceeded")
             entry = _Pending(point, keep_t, plan, complete)
             entry.trace_ctx = trace_ctx
             entry.cache_result = sink is None
@@ -411,9 +454,19 @@ class CountingService:
             self._pending[req_key] = entry
             self._by_sig.setdefault(entry.sig, []).append(req_key)
             self._pending_bytes += self._estimate_bytes(plan)
-            self.metrics.inc(enqueued=1)
+            self.metrics.inc(enqueued=1, admitted=1)
             ticket = CountTicket(self, entry=entry)
-            to_execute = self._drain_triggered(entry)
+            if admission_over:
+                # "queue" policy: the flooding tenant pays for its own
+                # drain inline, holding its pending depth at the bound
+                # (overrides defer_drains, like backpressure does)
+                self.metrics.inc(throttled=1)
+                if tr.enabled:
+                    tr.event("service.flush", trigger="admission",
+                             tenant=self.tenant)
+                to_execute = self._drain_all()
+            else:
+                to_execute = self._drain_triggered(entry)
             self._wake.notify_all()      # dispatcher re-arms its deadline
         if to_execute:       # run OUTSIDE the lock: submits keep flowing
             self._execute(to_execute)
@@ -799,7 +852,8 @@ class CountingService:
                     if tr.enabled:
                         e.trace_ctx = tr.record(
                             "service.queue", e.enqueued_at, now,
-                            parent=e.trace_ctx, external=True)
+                            parent=e.trace_ctx, external=True,
+                            tenant=self.tenant)
                     self._deliver(e, tab)
         finally:
             self._settle_all([e for e, _ in delivered])
@@ -872,7 +926,8 @@ class CountingService:
                         # re-point the entry at it so its exec span nests
                         e.trace_ctx = tr.record(
                             "service.queue", e.enqueued_at, now,
-                            parent=e.trace_ctx, sig=e.sig)
+                            parent=e.trace_ctx, sig=e.sig,
+                            tenant=self.tenant)
                 positives = [e for e in entries if not e.complete]
                 completes = [e for e in entries if e.complete]
                 if positives:
@@ -995,6 +1050,7 @@ class CountingService:
             print(svc.stats()["qps"], svc.stats()["cache"]["hits"])
         """
         out = self.metrics.snapshot(self.engine.cache)
+        out["tenant"] = self.tenant
         out["tracer"] = self.tracer.snapshot()
         if self._discovery is not None:
             out["discovery"] = self._discovery.stats()

@@ -1,0 +1,310 @@
+"""Multi-tenant isolation property tests.
+
+* Cache: a flooding tenant can spend the shared budget's slack but can
+  NEVER evict a neighbour below its reserved floor.
+* Admission: a flood from tenant A is bounded (queue policy) or shed
+  (``TenantAdmissionError``) at A's own bound; B's queue is untouched.
+* Counts: B's positive counts, complete CTs (all four strategies), and
+  discovery output are bit-identical with and without A's flood and
+  writes — the noisy-neighbour test.
+* Dispatch: cross-tenant batched ``count_many`` equals per-tenant serial
+  execution bit-for-bit, and the fused multi-db staging path actually
+  engages.
+* Stats: per-tenant and aggregate snapshots cover every
+  ``ServiceMetrics`` field (deep merge, not top-level-numeric-only).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (Attribute, EntityType, Relationship, Schema,
+                        build_lattice, make_strategy, synth_db)
+from repro.core.strategies import STRATEGIES
+from repro.serve import (ServiceMetrics, TenantAdmissionError,
+                         TenantRegistry, merge_stats_dicts)
+
+att = Attribute
+
+
+def fleet_schema(n_rels: int = 5):
+    """Several same-shape relationships: every tenant's flood is
+    stack-compatible with every other's."""
+    ents = (EntityType("A", 10, (att("a0", 3), att("a1", 2))),
+            EntityType("B", 8, (att("b0", 3),)))
+    rels = tuple(Relationship(f"R{i}", "A", "B", (att(f"e{i}", 3),))
+                 for i in range(n_rels))
+    return Schema(ents, rels)
+
+
+def fleet_db(schema, seed, edges: int = 24):
+    return synth_db(schema, {r.name: edges for r in schema.relationships},
+                    seed=seed)
+
+
+def points(schema, max_len: int = 2):
+    return [p for p in build_lattice(schema, max_len) if p.atoms]
+
+
+def fresh_edges(db, rel, n: int = 2):
+    """``n`` (src, dst, attrs) edges NOT yet present in ``db``'s rel."""
+    tab = db.relations[rel]
+    have = tab.pair_set()
+    pairs = [(s, d)
+             for s in range(db.entities[tab.type.src].size)
+             for d in range(db.entities[tab.type.dst].size)
+             if (s, d) not in have][:n]
+    assert len(pairs) == n, "relation unexpectedly complete"
+    src = np.array([p[0] for p in pairs])
+    dst = np.array([p[1] for p in pairs])
+    attrs = {a.name: np.arange(n) % a.card for a in tab.type.attrs}
+    return src, dst, attrs
+
+
+def make_registry(schema, tenants, **tenant_kw):
+    """One registry, one db per (tenant_id, seed) pair, shared schema."""
+    reg = TenantRegistry(executor="dense")
+    for tid, seed in tenants:
+        reg.add_tenant(tid, fleet_db(schema, seed), **tenant_kw.get(tid, {}))
+    return reg
+
+
+# ------------------------------------------------------- fused dispatch --
+
+def test_cross_tenant_batched_equals_per_tenant_serial():
+    schema = fleet_schema()
+    pts = points(schema)
+    reg = make_registry(schema, [("a", 0), ("b", 1), ("c", 2)])
+    queries = [(tid, p, None) for tid in ("a", "b", "c") for p in pts]
+    tabs = reg.count_many(queries)
+    # the fused multi-db staging path must actually have engaged
+    staged = [k for k in reg.executor._batch_cache
+              if isinstance(k, tuple) and k and k[0] == "multi_inputs"]
+    assert staged, "cross-tenant dispatch never stacked"
+    # per-tenant serial reference on cold registries
+    for i, tid in enumerate(("a", "b", "c")):
+        ref_reg = make_registry(schema, [(tid, {"a": 0, "b": 1, "c": 2}[tid])])
+        svc = ref_reg.tenant(tid).service
+        for j, p in enumerate(pts):
+            ref = svc.count(p)
+            got = tabs[i * len(pts) + j]
+            assert got.vars == ref.vars
+            assert np.array_equal(np.asarray(got.counts),
+                                  np.asarray(ref.counts))
+
+
+@pytest.mark.parametrize("strat", sorted(STRATEGIES))
+def test_complete_parity_vs_strategy_oracle_under_flood(strat):
+    """B's complete CTs through the registry are bit-identical to the
+    bare strategy oracle, even while tenant A floods the shared pool."""
+    schema = fleet_schema(3)
+    pts = points(schema)
+    db_b = fleet_db(schema, seed=7)
+    oracle = make_strategy(strat)
+    oracle.prepare(db_b, pts)
+    reg = TenantRegistry(executor="dense")
+    reg.add_tenant("a", fleet_db(schema, seed=3))
+    reg.add_tenant("b", db_b)
+    # noisy neighbour: A floods through the fused path first
+    reg.count_many([("a", p, None) for p in pts] * 2)
+    for p in pts:
+        keep = p.all_ct_vars(schema, include_rind=True)
+        got = reg.count_complete("b", p, keep)
+        ref = oracle.family_ct(p, keep)
+        assert got.vars == ref.vars
+        assert np.array_equal(np.asarray(got.counts), np.asarray(ref.counts))
+
+
+# ------------------------------------------------------- cache isolation --
+
+def test_flood_cannot_evict_neighbour_below_reserved_floor():
+    schema = fleet_schema()
+    pts = points(schema)
+    reg = make_registry(schema, [("a", 0), ("b", 1)])
+    # warm B fully, then reserve everything it holds
+    for p in pts:
+        reg.count("b", p)
+    b_warm = reg.cache.tenants_info()["b"]["nbytes"]
+    assert b_warm > 0
+    reg.set_tenant_budget("b", reserved_bytes=b_warm)
+    # now choke the global budget so A's flood MUST evict to fit
+    reg.cache.budget_bytes = b_warm + b_warm // 2
+    for _ in range(3):
+        reg.count_many([("a", p, None) for p in pts])
+        reg.tenant("a").service.engine.cache.invalidate()  # re-miss next round
+    info = reg.cache.tenants_info()
+    assert reg.cache.evictions > 0, "flood produced no cache pressure"
+    assert info["b"]["nbytes"] >= b_warm, \
+        f'B evicted below its floor: {info["b"]["nbytes"]} < {b_warm}'
+    # and B is still served from its warm cache
+    hits_before = reg.tenant("b").service.metrics.snapshot()["cache_hits"]
+    reg.count("b", pts[0])
+    assert (reg.tenant("b").service.metrics.snapshot()["cache_hits"]
+            == hits_before + 1)
+
+
+def test_tenant_cap_evicts_own_lru_not_neighbours():
+    schema = fleet_schema()
+    pts = points(schema)
+    reg = make_registry(schema, [("a", 0), ("b", 1)])
+    for p in pts:
+        reg.count("b", p)
+    b_bytes = reg.cache.tenants_info()["b"]["nbytes"]
+    # cap A well below what its flood produces
+    reg.set_tenant_budget("a", cap_bytes=max(64, b_bytes // 4))
+    reg.count_many([("a", p, None) for p in pts])
+    info = reg.cache.tenants_info()
+    assert info["a"]["nbytes"] <= max(64, b_bytes // 4) or \
+        info["a"]["entries"] <= 1          # one oversize entry may remain
+    assert info["b"]["nbytes"] == b_bytes  # neighbour untouched
+
+
+# ---------------------------------------------------------- admission --
+
+def test_admission_shed_bounds_flooder_and_spares_neighbour():
+    schema = fleet_schema()
+    pts = points(schema)
+    assert len(pts) > 4
+    reg = make_registry(schema, [("a", 0), ("b", 1)],
+                        a={"admission_max": 3, "admission_policy": "shed"})
+    svc_a = reg.tenant("a").service
+    svc_b = reg.tenant("b").service
+    tickets = []
+    with svc_a.defer_drains(), svc_b.defer_drains():
+        for p in pts[:3]:
+            tickets.append(svc_a.submit(p))
+        with pytest.raises(TenantAdmissionError):
+            svc_a.submit(pts[3])
+        # B is unaffected by A hitting its bound
+        for p in pts:
+            tickets.append(svc_b.submit(p))
+    reg.flush_all()
+    for t in tickets:
+        assert t.result() is not None
+    sa = svc_a.stats()
+    assert sa["shed"] >= 1 and sa["admitted"] == 3
+    assert svc_b.stats()["shed"] == 0
+
+
+def test_admission_queue_policy_holds_depth_at_bound():
+    schema = fleet_schema()
+    pts = points(schema)
+    reg = make_registry(schema, [("a", 0)],
+                        a={"admission_max": 2, "admission_policy": "queue"})
+    svc = reg.tenant("a").service
+    tickets = []
+    with svc.defer_drains():               # admission still overrides this
+        for p in pts:
+            tickets.append(svc.submit(p))
+            assert svc.pending() <= 2
+    svc.flush()
+    assert svc.stats()["throttled"] > 0
+    # results still correct
+    ref = make_registry(schema, [("a", 0)]).tenant("a").service
+    for t, p in zip(tickets, pts):
+        assert np.array_equal(np.asarray(t.result().counts),
+                              np.asarray(ref.count(p).counts))
+
+
+# ------------------------------------------------- noisy-neighbour counts --
+
+def test_neighbour_counts_bit_identical_under_flood_and_writes():
+    schema = fleet_schema(3)
+    pts = points(schema)
+    quiet = make_registry(schema, [("b", 7)])
+    ref = [quiet.tenant("b").service.count(p) for p in pts]
+
+    noisy = make_registry(schema, [("a", 3), ("b", 7)])
+    noisy.count_many([("a", p, None) for p in pts])           # flood
+    # A writes — must not move B's versions or invalidate B's cache
+    src, dst, attrs = fresh_edges(noisy.tenant("a").db, "R0")
+    noisy.apply_delta("a", "R0", src, dst, attrs)
+    got = [noisy.count("b", p) for p in pts]
+    for g, r in zip(got, ref):
+        assert g.vars == r.vars
+        assert np.array_equal(np.asarray(g.counts), np.asarray(r.counts))
+    # B's cache entries survived A's write (still warm on the repeat)
+    hits0 = noisy.tenant("b").service.metrics.snapshot()["cache_hits"]
+    for p in pts:
+        noisy.count("b", p)
+    hits1 = noisy.tenant("b").service.metrics.snapshot()["cache_hits"]
+    assert hits1 - hits0 == len(pts)
+
+
+def test_discovery_shared_memo_is_tenant_disjoint():
+    schema = fleet_schema(3)
+    reg = make_registry(schema, [("a", 3), ("b", 7)])
+    res_b = reg.discovery("b").discover()
+    quiet = make_registry(schema, [("b", 7)])
+    res_quiet = quiet.discovery("b").discover()
+    assert res_b.score == pytest.approx(res_quiet.score, abs=0)
+    reg.discovery("a").discover()
+
+    def b_keys():
+        return {k for k in reg._score_memo
+                if k[0][:2] == ("tenant", "b")}
+
+    keys_before = b_keys()
+    assert keys_before, "B's scores not memoized under its tenant token"
+    # A's write moves ONLY A's token; B's memo entries survive verbatim
+    src, dst, attrs = fresh_edges(reg.tenant("a").db, "R0")
+    reg.apply_delta("a", "R0", src, dst, attrs)
+    reg.discovery("a").discover()
+    assert b_keys() == keys_before
+    res_b2 = reg.discovery("b").discover()
+    assert res_b2.score == pytest.approx(res_b.score, abs=0)
+
+
+# ------------------------------------------------------------- stats --
+
+def test_registry_stats_cover_every_service_metrics_field():
+    """Satellite bugfix proof: per-tenant AND aggregate snapshots are
+    deep-merged — every ServiceMetrics field appears in both (the old
+    top-level-numeric aggregation dropped nested dicts)."""
+    schema = fleet_schema(3)
+    pts = points(schema)
+    reg = make_registry(schema, [("a", 0), ("b", 1)])
+    reg.count_many([(tid, p, None) for tid in ("a", "b") for p in pts])
+    st = reg.stats()
+    for tid in ("a", "b"):
+        for f in dataclasses.fields(ServiceMetrics):
+            if not f.name.startswith("_"):
+                assert f.name in st["tenants"][tid], (tid, f.name)
+                assert f.name in st["aggregate"], f.name
+    # nested dicts merged, not dropped
+    assert "cache" in st["aggregate"]
+    assert st["aggregate"]["cache"]["hits"] == sum(
+        st["tenants"][t]["cache"]["hits"] for t in ("a", "b"))
+    assert st["aggregate"]["enqueued"] == sum(
+        st["tenants"][t]["enqueued"] for t in ("a", "b"))
+    # shared store rollup carries per-tenant residency
+    assert set(st["cache"]["tenants"]) >= {"a", "b"}
+
+
+def test_merge_stats_dicts_semantics():
+    a = {"n": 1, "nested": {"x": 2.5, "deep": {"k": 1}}, "name": "a",
+         "flag": True}
+    b = {"n": 2, "nested": {"x": 1.5, "deep": {"k": 3}, "only_b": 1},
+         "name": "b", "flag": False}
+    out = merge_stats_dicts([a, b])
+    assert out["n"] == 3
+    assert out["nested"]["x"] == 4.0
+    assert out["nested"]["deep"]["k"] == 4
+    assert out["nested"]["only_b"] == 1
+    assert out["name"] == "a"              # non-numeric: first wins
+    assert out["flag"] is True             # bools are not counters
+    assert merge_stats_dicts([]) == {}
+
+
+def test_default_tenant_shim_unchanged():
+    """A bare service is the degenerate single-tenant fleet: tenant
+    stamped "default", no admission gate, no tenant cache states."""
+    from repro.core import CountingEngine
+    from repro.serve import CountingService
+    schema = fleet_schema(2)
+    svc = CountingService(CountingEngine(fleet_db(schema, 0)))
+    st = svc.stats()
+    assert st["tenant"] == "default"
+    assert st["shed"] == 0 and st["throttled"] == 0
+    assert svc.count(points(schema)[0]) is not None
