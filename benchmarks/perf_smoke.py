@@ -72,6 +72,13 @@ MIN_SHARDED_RATIO = 0.9
 # must beat flush-and-recount on an insert-heavy write/read mix
 SMOKE_MUT_FLOOD = dict(n_rels=6, edges=100000, delta_edges=128, rounds=2)
 MIN_MUT_SPEEDUP = 2.0
+# the negative-phase mutation flood gates the butterfly delta path:
+# writes interleaved with COMPLETE-CT reads must beat flush-and-recount
+# (fused per-corner block deltas through one transform dispatch per
+# shape group vs re-running the whole Möbius join after every write)
+SMOKE_MUT_NEG_FLOOD = dict(n_rels=6, edges=100000, delta_edges=128,
+                           rounds=2)
+MIN_MUT_NEG_SPEEDUP = 2.0
 # the multi-tenant fleet gates the tenancy layer both ways: cross-tenant
 # batched dispatch must beat the (already within-tenant-batched)
 # per-tenant serial baseline, AND the tenant dimension must be free for
@@ -122,6 +129,12 @@ def neg_flood_config_tag() -> str:
 def mut_flood_config_tag() -> str:
     f = SMOKE_MUT_FLOOD
     return (f"mutflood{f['n_rels']}x{f['edges']}"
+            f"d{f['delta_edges']}r{f['rounds']}")
+
+
+def mut_neg_flood_config_tag() -> str:
+    f = SMOKE_MUT_NEG_FLOOD
+    return (f"mutnegflood{f['n_rels']}x{f['edges']}"
             f"d{f['delta_edges']}r{f['rounds']}")
 
 
@@ -356,6 +369,10 @@ def main() -> int:
     mut_baseline = prior_batched_speedup(
         history, mut_flood_config_tag(), bench="mutation_flood",
         field="speedup_vs_recount", mode="delta")
+    mut_neg_baseline = prior_batched_speedup(
+        history, mut_neg_flood_config_tag(),
+        bench="mutation_negative_flood",
+        field="speedup_vs_recount", mode="delta")
     tenant_baseline = prior_batched_speedup(
         history, tenant_config_tag(), bench="tenant_flood",
         field="speedup_vs_per_tenant", mode="cross_tenant")
@@ -373,6 +390,7 @@ def main() -> int:
         neg_flood=True, neg_flood_kw=dict(SMOKE_NEG_FLOOD),
         shards=SMOKE_SHARDS, shard_kw=dict(SMOKE_SHARD_KW),
         mut_flood=True, mut_flood_kw=dict(SMOKE_MUT_FLOOD),
+        mut_neg_flood=True, mut_neg_flood_kw=dict(SMOKE_MUT_NEG_FLOOD),
         tenant_flood=True, tenant_flood_kw=dict(SMOKE_TENANTS),
         discovery=True, discovery_kw=dict(SMOKE_DISCOVERY),
         bench_json=BENCH_JSON)
@@ -384,6 +402,8 @@ def main() -> int:
               MIN_NEG_BATCHED_SPEEDUP, neg_baseline),
              ("mutation_flood", "speedup_vs_recount",
               MIN_MUT_SPEEDUP, mut_baseline),
+             ("mutation_negative_flood", "speedup_vs_recount",
+              MIN_MUT_NEG_SPEEDUP, mut_neg_baseline),
              ("tenant_flood", "speedup_vs_per_tenant",
               MIN_TENANT_BATCHED_SPEEDUP, tenant_baseline))
     for bench, field, min_speedup, prior_best in gates:
@@ -493,6 +513,7 @@ def main() -> int:
         for bench, prior_best in (("flood", baseline),
                                   ("negflood", neg_baseline),
                                   ("mutflood", mut_baseline),
+                                  ("mutnegflood", mut_neg_baseline),
                                   ("tenants", tenant_baseline))
         for ex, s in prior_best.items()]
     parts += [

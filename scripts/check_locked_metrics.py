@@ -6,19 +6,29 @@ through ``metrics.inc(field=n)``, which takes the metrics lock — a bare
 ``metrics.requests += 1`` on a shared instance is a lost-update data
 race that only shows up as drifting counters under concurrency.
 
+The ct-cache counters (:class:`repro.core.cache.CtCache` hit/miss/
+eviction/``delta_updated`` tallies) are locked the same way: the cache
+is shared across serving threads, so mutations must go through the
+cache's own locked helpers (``count_delta_updates()`` etc.), never a
+bare ``cache.delta_updated += 1`` from outside.
+
 This check walks ``src/repro`` and fails on any bare augmented
-assignment to an attribute of a ``metrics``-named receiver::
+assignment to an attribute of a ``metrics``- or ``cache``-named
+receiver::
 
     self.metrics.requests += 1        # FAIL: racy lost update
     m.coalesced -= 1                  # FAIL: bare mutation
+    cache.delta_updated += 1          # FAIL: unlocked cache counter
     self.metrics.inc(requests=1)      # OK:  locked increment
+    cache.count_delta_updates()       # OK:  locked helper
     stats.ct_rows += tab.nnz_rows()   # OK:  CostStats is not locked
 
 The receiver rule is name-based (``metrics`` / ``*_metrics`` / ``m``
 bound to a metrics object can't be distinguished statically, so the
 check targets the conventional names actually used in the tree:
-``metrics`` and anything ending in ``metrics``).  ``repro/serve/
-metrics.py`` itself is exempt — the lock lives there.
+``metrics``/``cache`` and anything ending in them).  ``repro/serve/
+metrics.py`` is exempt from the metrics rule and ``repro/core/cache.py``
+from the cache rule — the locks live there.
 
 Exits 1 when any mutation is found.
 
@@ -39,32 +49,47 @@ SRC = ROOT / "src" / "repro"
 MUTATION_RE = re.compile(
     r"\b[A-Za-z_][A-Za-z0-9_.]*metrics\.[A-Za-z_][A-Za-z0-9_]*\s*[+-]=")
 
-# the lock implementation itself (and only it) may touch fields directly
-EXEMPT = {SRC / "serve" / "metrics.py"}
+# `<anything>cache.<field> +=/-=` — same convention for the shared
+# ct-cache's counters; `.count_delta_updates(` calls never match.
+CACHE_MUTATION_RE = re.compile(
+    r"\b[A-Za-z_][A-Za-z0-9_.]*cache\.[A-Za-z_][A-Za-z0-9_]*\s*[+-]=")
+
+# the lock implementations themselves (and only they) may touch fields
+# directly
+RULES = (
+    (MUTATION_RE, {SRC / "serve" / "metrics.py"},
+     "metrics mutation", "metrics.inc(field=n)"),
+    (CACHE_MUTATION_RE, {SRC / "core" / "cache.py"},
+     "cache-counter mutation", "the cache's locked helpers "
+     "(e.g. cache.count_delta_updates())"),
+)
 
 
 def check_file(path: Path) -> list:
     errors = []
+    rules = [(rx, kind, fix) for rx, exempt, kind, fix in RULES
+             if path not in exempt]
+    if not rules:
+        return errors
     for lineno, line in enumerate(path.read_text().splitlines(), 1):
         code = line.split("#", 1)[0]
-        m = MUTATION_RE.search(code)
-        if m:
-            errors.append(f"{path.relative_to(ROOT)}:{lineno}: bare "
-                          f"metrics mutation {m.group(0)!r} — use "
-                          f"metrics.inc(field=n) (locked)")
+        for rx, kind, fix in rules:
+            m = rx.search(code)
+            if m:
+                errors.append(f"{path.relative_to(ROOT)}:{lineno}: bare "
+                              f"{kind} {m.group(0)!r} — use {fix} "
+                              f"(locked)")
     return errors
 
 
 def main() -> int:
     errors = []
     for path in sorted(SRC.rglob("*.py")):
-        if path in EXEMPT:
-            continue
         errors.extend(check_file(path))
     for err in errors:
         print(err, file=sys.stderr)
     if errors:
-        print(f"\n{len(errors)} unlocked metrics mutation(s)",
+        print(f"\n{len(errors)} unlocked counter mutation(s)",
               file=sys.stderr)
         return 1
     print(f"locked-metrics check OK "

@@ -20,16 +20,20 @@ all of them:
 
 **Freshness.**  Since the store became mutable
 (:meth:`~repro.core.database.RelationalDB.insert_facts`), every entry also
-records the ``(version, relation-dependency set)`` it was computed under —
-``deps`` is the set of relationship names whose edge tables the cached
-value was derived from, ``version`` the ``db.version`` at insert time.
-Both default through pluggable hooks (``deps_fn``/``version_fn``, wired by
+records the ``(version, dependency set)`` it was computed under — ``deps``
+is a frozenset of *dependency tags*: relationship names (plain strings)
+for the edge tables the cached value was derived from, plus
+``("attr", etype, attr_name)`` tuples for the entity-attribute columns it
+read (and the ``("attr*", etype)`` wildcard for entries that cannot
+enumerate their attribute names precisely); ``version`` is ``db.version``
+at insert time.  Both default through pluggable hooks
+(``deps_fn``/``version_fn``, wired by
 :class:`~repro.core.engine.CountingEngine` so existing call sites need no
 changes).  :meth:`CtCache.invalidate` is then **fine-grained**: given a
-delta's relation set it drops only the entries whose dependency set
-intersects it (entries with unknown deps are dropped conservatively);
-entries over untouched relations — and relation-independent entries like
-entity histograms, ``deps == frozenset()`` — survive the write.
+delta's tag set it drops only the entries whose dependency set intersects
+it (entries with unknown deps are dropped conservatively); entries over
+untouched relations/attributes survive the write.  Strings never equal
+tuples, so relation sweeps and attribute sweeps cannot collide.
 
 **Tenancy.**  One physical store can back many logical databases.  Every
 entry belongs to a tenant (:data:`DEFAULT_TENANT` when unspecified, which
@@ -74,11 +78,16 @@ def _nbytes_of(value: Any) -> int:
     return 0
 
 
+#: A dependency tag: a relationship name (str) or an attribute tuple
+#: ``("attr", etype, name)`` / ``("attr*", etype)``.
+DepTag = Hashable
+
+
 class _Entry:
     __slots__ = ("value", "nbytes", "deps", "version", "tenant")
 
     def __init__(self, value: Any, nbytes: int,
-                 deps: Optional[FrozenSet[str]], version: Optional[int],
+                 deps: Optional[FrozenSet[DepTag]], version: Optional[int],
                  tenant: str):
         self.value, self.nbytes = value, nbytes
         self.deps, self.version = deps, version
@@ -119,17 +128,18 @@ class _TenantState:
 
 class CtCache:
     """Byte-budgeted LRU cache for ct-tables and message matrices, with
-    per-entry ``(version, relation-dependency set)`` freshness metadata
-    and per-tenant byte accounting.
+    per-entry ``(version, dependency-tag set)`` freshness metadata and
+    per-tenant byte accounting.
 
     Args:
         budget_bytes: LRU byte budget across all tenants (``None`` =
             unbounded).
         stats: optional :class:`~repro.core.contract.CostStats` whose
             ``cache_bytes``/``peak_bytes`` mirror the live footprint.
-        deps_fn: ``key -> frozenset of relationship names | None`` used to
-            stamp entries whose ``put`` did not pass ``deps`` explicitly
-            (``None`` = unknown, dropped conservatively on invalidation).
+        deps_fn: ``key -> frozenset of dependency tags | None`` (relation
+            names and/or attribute tuples) used to stamp entries whose
+            ``put`` did not pass ``deps`` explicitly (``None`` = unknown,
+            dropped conservatively on invalidation).
         version_fn: ``() -> int`` store version used to stamp entries
             whose ``put`` did not pass ``version``.
 
@@ -141,7 +151,7 @@ class CtCache:
     def __init__(self, budget_bytes: Optional[int] = None,
                  stats: Optional[CostStats] = None,
                  deps_fn: Optional[Callable[[Hashable],
-                                            Optional[FrozenSet[str]]]] = None,
+                                            Optional[FrozenSet[DepTag]]]] = None,
                  version_fn: Optional[Callable[[], int]] = None):
         self.budget_bytes = budget_bytes
         self.stats = stats
@@ -232,7 +242,7 @@ class CtCache:
 
     def put(self, key: Hashable, value: Any,
             nbytes: Optional[int] = None,
-            deps: Optional[FrozenSet[str]] = None,
+            deps: Optional[FrozenSet[DepTag]] = None,
             version: Optional[int] = None,
             tenant: str = DEFAULT_TENANT) -> Any:
         """Insert (or refresh) ``key``; returns ``value`` for chaining.
@@ -282,8 +292,19 @@ class CtCache:
             self._state(tenant).invalidated += 1
             return True
 
+    def count_delta_updates(self, n: int = 1,
+                            tenant: str = DEFAULT_TENANT) -> None:
+        """Record ``n`` entries refreshed in place by a delta.  This is the
+        ONLY sanctioned way to move the ``delta_updated`` counter — it takes
+        the store lock and keeps the global and per-tenant slices in step
+        (bare ``cache.delta_updated += 1`` mutations outside this module are
+        rejected by ``scripts/check_locked_metrics.py``)."""
+        with self._lock:
+            self.delta_updated += n
+            self._state(tenant).delta_updated += n
+
     def entry_meta(self, key: Hashable, tenant: str = DEFAULT_TENANT
-                   ) -> Optional[Tuple[Optional[FrozenSet[str]],
+                   ) -> Optional[Tuple[Optional[FrozenSet[DepTag]],
                                        Optional[int]]]:
         """The ``(deps, version)`` stamp of a resident entry (no LRU
         touch, no hit/miss accounting), or ``None`` when absent."""
@@ -462,7 +483,7 @@ class TenantCache:
         self._store = store
         self.tenant = tenant
         self.deps_fn: Optional[Callable[[Hashable],
-                                        Optional[FrozenSet[str]]]] = None
+                                        Optional[FrozenSet[DepTag]]]] = None
         self.version_fn: Optional[Callable[[], int]] = None
 
     # -- hook plumbing ------------------------------------------------------
@@ -498,9 +519,8 @@ class TenantCache:
     def nbytes(self) -> int:
         return self._st().nbytes
 
-    # -- counters (the tenant's slice; engine's delta walk does
-    # ``cache.delta_updated += 1``, so that one needs a setter that keeps
-    # the store total in step) ---------------------------------------------
+    # -- counters (the tenant's slice; writes go through the locked
+    # ``count_delta_updates`` below, which keeps the store total in step) ---
     @property
     def hits(self) -> int:
         return self._st().hits
@@ -525,12 +545,8 @@ class TenantCache:
     def delta_updated(self) -> int:
         return self._st().delta_updated
 
-    @delta_updated.setter
-    def delta_updated(self, value: int) -> None:
-        st = self._st()
-        with self._store._lock:
-            self._store.delta_updated += value - st.delta_updated
-            st.delta_updated = value
+    def count_delta_updates(self, n: int = 1) -> None:
+        self._store.count_delta_updates(n, tenant=self.tenant)
 
     # -- scoped ops ---------------------------------------------------------
     def __len__(self) -> int:
@@ -544,7 +560,7 @@ class TenantCache:
 
     def put(self, key: Hashable, value: Any,
             nbytes: Optional[int] = None,
-            deps: Optional[FrozenSet[str]] = None,
+            deps: Optional[FrozenSet[DepTag]] = None,
             version: Optional[int] = None) -> Any:
         if deps is None and self.deps_fn is not None:
             deps = self.deps_fn(key)

@@ -14,6 +14,10 @@ ct-tables are multilinear in each relationship's edge multiset, so a cached
 table is refreshed by counting just the delta edges; see
 :meth:`repro.core.engine.CountingEngine.apply_delta`) and for fine-grained
 cache invalidation (:meth:`repro.core.cache.CtCache.invalidate`).
+Entity-attribute writes go through :meth:`RelationalDB.update_attrs`, which
+returns an :class:`AttrDelta` carrying the exact ``(entity-type, attribute)``
+dependency tags (:meth:`AttrDelta.dep_tags`) the cache layers key their
+attribute dependency dimension on.
 
 The synthetic generator plants real statistical dependencies (attribute values
 correlated along edges) so that structure search has signal to find, and lets
@@ -120,12 +124,51 @@ class FactDelta:
                             version=db.version)
 
 
+@dataclass(frozen=True)
+class AttrDelta:
+    """One batch of entity-attribute writes, as applied.
+
+    ``rows`` are the entity ids whose attribute columns changed;
+    ``old``/``new`` hold the per-attribute value columns before and after
+    the write (aligned with ``rows``), so cache layers can reason about
+    exactly which ``(entity-type, attribute)`` pairs moved and rollback /
+    oracle tests can reconstruct either side.  Like :class:`FactDelta`,
+    ``old_version``/``new_version`` bracket the store's version bump so
+    stale deltas are rejected instead of silently misapplied.
+    """
+
+    etype: str
+    rows: np.ndarray                  # int32[k] entity ids
+    old: Dict[str, np.ndarray]        # attr name -> int32[k] previous values
+    new: Dict[str, np.ndarray]        # attr name -> int32[k] written values
+    old_version: int
+    new_version: int
+
+    @property
+    def num_rows(self) -> int:
+        return int(self.rows.shape[0])
+
+    @property
+    def attrs(self) -> Tuple[str, ...]:
+        return tuple(sorted(self.new))
+
+    def dep_tags(self) -> frozenset:
+        """Dependency tags this delta touches, in the cache's mixed
+        dependency vocabulary: one precise ``("attr", etype, name)`` tag
+        per written attribute plus the ``("attr*", etype)`` wildcard that
+        keys which cannot enumerate their attribute names depend on (see
+        :func:`repro.core.engine.key_deps`)."""
+        tags = {("attr", self.etype, name) for name in self.new}
+        tags.add(("attr*", self.etype))
+        return frozenset(tags)
+
+
 @dataclass
 class RelationalDB:
     schema: Schema
     entities: Dict[str, EntityTable]
     relations: Dict[str, RelationTable]
-    version: int = 0                  # bumped by every applied FactDelta
+    version: int = 0                  # bumped by every applied Fact/AttrDelta
 
     @property
     def total_rows(self) -> int:
@@ -248,6 +291,59 @@ class RelationalDB:
         old, self.version = self.version, self.version + 1
         return FactDelta(rel, "delete", removed_src, removed_dst,
                          removed_attrs, old, self.version)
+
+    def update_attrs(self, etype: str, rows,
+                     attrs: Mapping[str, np.ndarray]
+                     ) -> Optional[AttrDelta]:
+        """Overwrite attribute values for a batch of entities of type
+        ``etype``; bumps ``version`` and returns the applied
+        :class:`AttrDelta` (``None`` for an empty batch — no version bump).
+
+        Args:
+            etype: entity-type name.
+            rows: entity ids (row indices) to write; duplicates within the
+                batch are rejected (the old-value capture would be
+                ambiguous).
+            attrs: one aligned value column per attribute to write — a
+                subset of the type's attributes is fine, untouched columns
+                keep their values.
+
+        Raises:
+            KeyError: unknown entity type.
+            ValueError: empty ``attrs``, unknown attribute, misaligned or
+                out-of-range arrays, or duplicate rows in the batch.
+
+        Usage::
+
+            delta = db.update_attrs("user", [3, 7], {"age": [1, 2]})
+        """
+        tab = self.entities[etype]
+        rows = np.asarray(rows, dtype=np.int32)
+        attrs = {k: np.asarray(v, dtype=np.int32) for k, v in attrs.items()}
+        if rows.ndim != 1:
+            raise ValueError("rows must be a 1-D index array")
+        if rows.size == 0:
+            return None
+        if not attrs:
+            raise ValueError("update_attrs needs at least one attribute "
+                             "column")
+        if rows.min() < 0 or rows.max() >= tab.size:
+            raise ValueError(f"row index out of range for {etype!r}")
+        if np.unique(rows).size != rows.size:
+            raise ValueError(f"duplicate rows in update batch for {etype!r}")
+        cards = {a.name: a.card for a in tab.type.attrs}
+        for name, col in attrs.items():
+            if name not in cards:
+                raise ValueError(f"unknown attribute {name!r} for {etype!r}")
+            if col.shape != rows.shape:
+                raise ValueError(f"attr {name!r} not aligned with rows")
+            if col.min() < 0 or col.max() >= cards[name]:
+                raise ValueError(f"attr {name!r} value out of range")
+        old_vals = {name: tab.attrs[name][rows].copy() for name in attrs}
+        for name, col in attrs.items():
+            tab.attrs[name][rows] = col
+        old, self.version = self.version, self.version + 1
+        return AttrDelta(etype, rows, old_vals, attrs, old, self.version)
 
     def validate(self) -> None:
         self.schema.validate()
@@ -470,6 +566,26 @@ class ShardedDatabase:
             m = assign == s
             out.append(shard.delete_facts(rel, src[m], dst[m])
                        if m.any() else None)
+        return out
+
+    def update_attrs(self, etype: str, rows,
+                     attrs: Mapping[str, np.ndarray]
+                     ) -> List[Optional[AttrDelta]]:
+        """Apply one entity-attribute write batch across the shards.
+
+        Entity tables are SHARED objects replicated to every shard, so the
+        columns are mutated ONCE (through shard 0) and every shard's
+        version bumps; each shard gets an equivalent :class:`AttrDelta`
+        with its own version bracket (same convention as replicated
+        relationship writes)."""
+        first = self.shards[0].update_attrs(etype, rows, attrs)
+        if first is None:
+            return [None] * self.n_shards
+        out: List[Optional[AttrDelta]] = [first]
+        for shard in self.shards[1:]:
+            old, shard.version = shard.version, shard.version + 1
+            out.append(_dc_replace(first, old_version=old,
+                                   new_version=shard.version))
         return out
 
     def _apply_replicated(self, rel: str, op: str, src: np.ndarray,

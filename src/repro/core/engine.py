@@ -30,26 +30,36 @@ Möbius join, and differ only in WHEN joins run and WHAT is cached:
 Eviction is always safe: every policy recomputes on miss.
 
 **Mutations.**  The engine is version-aware: cache entries are stamped
-with the ``(db.version, relation-dependency set)`` they were computed
-under (:func:`key_deps` derives the dependency set from the key itself,
-so no call site changes), and :meth:`CountingEngine.apply_delta`
-reconciles the cache after a :class:`~repro.core.database.FactDelta` is
-applied to the store.  Reconciliation re-derives the paper's pre/post
-trade-off *over time*: positive artefacts (``"pos"``/``"full"`` tables,
-``"msg"`` matrices) are multilinear in each relationship's edge multiset,
-so a small delta **updates them in place** by counting just the delta
-edges (one sparse segment-sum sweep over ``delta.num_edges`` rows — the
-incremental-maintenance win of Karan et al.); above a cost threshold the
-entry is dropped instead and recomputed on next miss (post-counting the
-write).  Derived tables (``"fam"``/``"complete"``) are dropped; entries
-whose dependency set misses the delta's relation — including every
-``"hist"`` — are retained untouched.
+with the ``(db.version, dependency-tag set)`` they were computed under
+(:func:`key_deps` derives the tags — relation names plus
+``("attr", etype, name)`` attribute tuples — from the key itself, so no
+call site changes), and :meth:`CountingEngine.apply_delta` reconciles the
+cache after a :class:`~repro.core.database.FactDelta` or
+:class:`~repro.core.database.AttrDelta` is applied to the store.
+Reconciliation re-derives the paper's pre/post trade-off *over time*:
+positive artefacts (``"pos"``/``"full"`` tables, ``"msg"`` matrices) are
+multilinear in each relationship's edge multiset, so a small fact delta
+**updates them in place** by counting just the delta edges — batched,
+surviving same-executor entries run through ONE
+:meth:`~repro.core.executors.Executor.positive_batch` dispatch over the
+delta view.  Derived ``"fam"``/``"complete"`` tables are ALSO updated in
+place: the Möbius transform is linear, so the positive block deltas push
+through the butterfly (:func:`~repro.core.mobius.complete_ct_delta_many`,
+one fused dispatch per ``(shape, perm)`` group) and add onto the resident
+tables exactly.  Above the cost threshold the entry is dropped instead and
+recomputed on next miss (post-counting the write).  Entries whose
+dependency tags miss the delta — including every ``"hist"`` on a fact
+delta — are retained untouched.  Attribute deltas invalidate exactly the
+entries whose tags intersect the written ``(etype, attr)`` columns
+(positive counts are *not* linear in attribute values, so there is no
+in-place path) and retain everything else.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import FrozenSet, List, Optional, Sequence, Set, Tuple
+from typing import (Dict, FrozenSet, Hashable, List, Optional, Sequence, Set,
+                    Tuple)
 
 import jax.numpy as jnp
 
@@ -57,37 +67,57 @@ from ..obs.trace import NULL_TRACER
 from .cache import CtCache
 from .contract import CostStats
 from .ct import CtTable
-from .database import FactDelta, RelationalDB
+from .database import AttrDelta, FactDelta, RelationalDB
 from .executors import Executor, make_executor, project_columns
+from .mobius import complete_ct_delta_many
 from .plan import ContractionPlan, compile_plan_cached
 from .variables import Atom, CtVar, LatticePoint, Var, attr_var, edge_var
 
 
-def key_deps(key: Tuple) -> Optional[FrozenSet[str]]:
-    """The relationship names a cache entry was derived from, read off the
-    key itself (every namespace embeds its pattern):
+def _attr_tags(keep) -> Set[Tuple]:
+    """``("attr", etype, name)`` tags for the entity-attr axes of a keep
+    tuple (edge-attr and rind axes are covered by the relation name)."""
+    return {("attr", v.owner[0].etype, v.owner[1])
+            for v in keep if v.kind == "attr"}
 
-    * ``("pos", executor, atoms, keep)`` / ``("full", executor, atoms)``
-      / ``("fam", atoms, keep)`` — the atoms' relations;
-    * ``("msg", executor, atom, child, parent)`` — the atom's relation;
-    * ``("complete", rels)`` — the relation set;
-    * ``("hist", ...)`` — ``frozenset()`` (entity tables only; immune to
-      relationship-fact deltas);
+
+def key_deps(key: Tuple) -> Optional[FrozenSet[Hashable]]:
+    """The dependency tags a cache entry was derived from, read off the
+    key itself (every namespace embeds its pattern).  Tags mix relationship
+    names (edge-table dependencies) with ``("attr", etype, name)`` tuples
+    (entity-attribute-column dependencies) and the ``("attr*", etype)``
+    wildcard for entries that read every attribute of a type:
+
+    * ``("pos", executor, atoms, keep)`` — the atoms' relations + the kept
+      entity-attr columns;
+    * ``("full", executor, atoms)`` — the atoms' relations + the
+      ``("attr*", etype)`` wildcard per pattern variable (full attribute
+      resolution reads every column of each variable's type);
+    * ``("fam", atoms, keep)`` / ``("complete", atoms, keep)`` — the
+      atoms' relations + the kept entity-attr columns;
+    * ``("msg", executor, atom, child, parent)`` — the atom's relation +
+      ``("attr*", child_etype)`` (messages carry the child's full
+      attribute resolution);
+    * ``("hist", executor, var, keep)`` — the kept entity-attr columns
+      (no relation tags: histograms are immune to fact deltas; entity
+      table sizes are immutable);
     * anything else — ``None`` (unknown; invalidation drops it
       conservatively).
     """
     try:
         ns = key[0]
-        if ns in ("pos", "full"):
-            return frozenset(a.rel for a in key[2])
-        if ns == "fam":
-            return frozenset(a.rel for a in key[1])
+        if ns == "pos":
+            return frozenset({a.rel for a in key[2]} | _attr_tags(key[3]))
+        if ns == "full":
+            etypes = {v.etype for a in key[2] for v in (a.src, a.dst)}
+            return frozenset({a.rel for a in key[2]}
+                             | {("attr*", et) for et in etypes})
+        if ns in ("fam", "complete"):
+            return frozenset({a.rel for a in key[1]} | _attr_tags(key[2]))
         if ns == "msg":
-            return frozenset((key[2].rel,))
-        if ns == "complete":
-            return frozenset(key[1])
+            return frozenset({key[2].rel, ("attr*", key[3].etype)})
         if ns == "hist":
-            return frozenset()
+            return frozenset(_attr_tags(key[3]))
     except (TypeError, AttributeError, IndexError):
         pass
     return None
@@ -197,26 +227,47 @@ class CountingEngine:
         return self.executor.mobius_batch_fused
 
     # -- delta count maintenance --------------------------------------------
-    def apply_delta(self, delta: FactDelta,
+    def apply_delta(self, delta,
                     max_update_fraction: float = 0.25) -> DeltaReport:
         """Reconcile the cache after ``delta`` was applied to ``self.db``.
 
-        Walks the resident entries once and, per entry:
+        Accepts a :class:`~repro.core.database.FactDelta` (relationship
+        writes) or an :class:`~repro.core.database.AttrDelta`
+        (entity-attribute writes).  For a fact delta, walks the resident
+        entries once and, per entry:
 
-        * dependency set misses ``delta.rel`` → **retained** untouched
+        * dependency tags miss ``delta.rel`` → **retained** untouched
           (this is the fine-grained invalidation: a write to one relation
           leaves every other relation's artefacts hot);
         * positive artefact (``"pos"``/``"full"`` table, ``"msg"``
           matrix) and the delta is *small* (``delta.num_edges <=
           max_update_fraction *`` the relation's post-delta edge count) →
-          **updated in place**: the same contraction plan runs over a
-          delta view of the database (just the changed edges) and the
+          **updated in place**: the entry's own contraction plan runs over
+          a delta view of the database (just the changed edges) and the
           result is added/subtracted — exact, because positive counts are
           multilinear in each relationship's edge multiset and lattice
-          patterns use distinct relations;
+          patterns use distinct relations.  All surviving ``"pos"`` /
+          ``"full"`` entries go through ONE
+          :meth:`~repro.core.executors.Executor.positive_batch` dispatch
+          (grouped by plan signature internally) instead of one dispatch
+          per entry;
+        * derived ``"fam"``/``"complete"`` table and the delta is small →
+          **updated in place through the butterfly**: the Möbius transform
+          is linear, so the block deltas (delta-view contractions) push
+          through :func:`~repro.core.mobius.complete_ct_delta_many` — one
+          fused negative-phase dispatch per ``(shape, perm)`` group — and
+          add onto the resident tables, bit-exact vs recompute.  Entries
+          whose kept indicators sum ``delta.rel`` out are provably
+          unaffected and retained;
         * otherwise → **invalidated** (dropped; recomputed on next miss —
           the post-count fallback of the pre/post trade-off, applied to
           writes).
+
+        An attribute delta has no in-place path (counts are not linear in
+        attribute *values*): entries whose tags intersect the written
+        ``(etype, attr)`` columns are invalidated, everything else —
+        including every artefact over other types' attributes and all
+        purely relational entries — is retained.
 
         Deltas must be reconciled in application order, one per call:
         ``delta.new_version`` must equal the store's current version
@@ -224,7 +275,8 @@ class CountingEngine:
         the cross terms).
 
         Args:
-            delta: the applied :class:`~repro.core.database.FactDelta`.
+            delta: the applied :class:`~repro.core.database.FactDelta` or
+                :class:`~repro.core.database.AttrDelta`.
             max_update_fraction: in-place-update cost threshold, as a
                 fraction of the relation's current edge count.
 
@@ -246,6 +298,8 @@ class CountingEngine:
             raise ValueError(
                 f"delta version {delta.new_version} != store version "
                 f"{self.db.version}; reconcile deltas in application order")
+        if isinstance(delta, AttrDelta):
+            return self._apply_attr_delta(delta)
         rel = delta.rel
         report = DeltaReport(rel, delta.op, delta.num_edges,
                              version=self.db.version)
@@ -253,9 +307,16 @@ class CountingEngine:
         small = delta.num_edges <= max_update_fraction * max(rel_edges, 1)
         delta_db = delta.as_db(self.db) if small else None
         cache = self.cache
+        ex = self.executor
         with self.tracer.span("engine.apply_delta", rel=rel, op=delta.op,
                               num_edges=delta.num_edges,
                               small=small) as sp:
+            # one classification walk over a stable snapshot, then one
+            # batched dispatch per artefact family
+            pos_items: List[Tuple[Tuple, CtTable, ContractionPlan]] = []
+            msg_keys: List[Tuple] = []
+            fam_items: List[Tuple[Tuple, LatticePoint,
+                                  Tuple[CtVar, ...]]] = []
             for key in cache.keys_snapshot():
                 meta = cache.entry_meta(key)
                 if meta is None:           # concurrently evicted
@@ -264,49 +325,126 @@ class CountingEngine:
                 if deps is not None and rel not in deps:
                     report.retained += 1
                     continue
-                new_val = None
-                if small:
-                    new_val, nb = self._delta_update(key, delta_db,
+                bucket = self._classify_for_delta(key) if small else None
+                if bucket is None:
+                    if cache.discard(key):
+                        report.invalidated += 1
+                    continue
+                kind, payload = bucket
+                if kind == "pos":
+                    pos_items.append((key,) + payload)
+                elif kind == "msg":
+                    msg_keys.append(key)
+                else:
+                    fam_items.append((key,) + payload)
+
+            # (b) surviving positive tables: ONE batched dispatch over the
+            # delta view, grouped by plan signature inside positive_batch
+            if pos_items:
+                with self.stats.timer("positive"), ex.local_mode():
+                    dtabs = ex.positive_batch(
+                        delta_db, [p for _, _, p in pos_items], self.stats)
+                for (key, old, _), dtab in zip(pos_items, dtabs):
+                    new = old + dtab.scale(delta.sign)
+                    cache.put(key, new, nbytes=new.nbytes)
+                    cache.count_delta_updates()
+                    report.updated += 1
+
+            # message matrices: per-relationship segment-sums (a different
+            # primitive; at most a handful per relation survive the sweep)
+            for key in msg_keys:
+                new_val, nb = self._delta_update_msg(key, delta_db,
                                                      delta.sign)
                 if new_val is not None:
-                    cache.put(key, new_val, nbytes=nb)  # re-stamps version
-                    cache.delta_updated += 1
+                    cache.put(key, new_val, nbytes=nb)
+                    cache.count_delta_updates()
                     report.updated += 1
                 elif cache.discard(key):
                     report.invalidated += 1
+
+            # (a) derived tables: push the block deltas through the fused
+            # butterfly — one negative-phase dispatch per (shape, perm)
+            # group — and add onto the resident tables
+            if fam_items:
+                provider = _DeltaPositives(self, delta_db)
+                outs = complete_ct_delta_many(
+                    [(point, keep) for _, point, keep in fam_items], rel,
+                    provider, self.stats,
+                    mobius_fn=self.mobius_fn(),
+                    mobius_batch_fn=self.mobius_batch_fn(),
+                    mobius_fused_fn=self.mobius_fused_fn())
+                for (key, _, _), (status, dtab) in zip(fam_items, outs):
+                    if status == "zero":
+                        report.retained += 1
+                        continue
+                    old = cache.peek(key) if status == "delta" else None
+                    if old is None:
+                        if cache.discard(key):
+                            report.invalidated += 1
+                        continue
+                    new = old + dtab.scale(delta.sign)
+                    cache.put(key, new, nbytes=new.nbytes)
+                    cache.count_delta_updates()
+                    report.updated += 1
             sp.set(updated=report.updated, invalidated=report.invalidated,
                    retained=report.retained)
         return report
 
-    def _delta_update(self, key: Tuple, delta_db: RelationalDB,
-                      sign: int) -> Tuple[Optional[object], Optional[int]]:
-        """In-place refresh of one positive artefact: count the delta
-        edges with the entry's own plan and add/subtract.  Returns
-        ``(new value, nbytes)`` or ``(None, None)`` when the entry is not
-        a delta-updatable namespace."""
+    def _apply_attr_delta(self, delta: AttrDelta) -> DeltaReport:
+        """Reconcile after an entity-attribute write: drop exactly the
+        entries whose dependency tags intersect the written columns (or
+        whose deps are unknown), retain the rest."""
+        tags = delta.dep_tags()
+        report = DeltaReport(delta.etype, "update_attrs", delta.num_rows,
+                             version=self.db.version)
+        cache = self.cache
+        with self.tracer.span("engine.apply_delta", etype=delta.etype,
+                              op="update_attrs",
+                              num_rows=delta.num_rows) as sp:
+            for key in cache.keys_snapshot():
+                meta = cache.entry_meta(key)
+                if meta is None:
+                    continue
+                deps, _version = meta
+                if deps is not None and not (deps & tags):
+                    report.retained += 1
+                    continue
+                if cache.discard(key):
+                    report.invalidated += 1
+            sp.set(updated=0, invalidated=report.invalidated,
+                   retained=report.retained)
+        return report
+
+    def _classify_for_delta(self, key: Tuple):
+        """Sort one affected resident entry into its delta-update family:
+        ``("pos", (old, plan))`` for positive tables, ``("msg", ())`` for
+        message matrices, ``("fam", (point, keep))`` for derived tables —
+        or ``None`` when the entry cannot be delta-updated (unknown
+        namespace, other executor's artefact, unplannable key) and must be
+        dropped."""
         ns = key[0]
         ex = self.executor
         try:
             if ns == "pos" and key[1] == ex.name:
                 old = self.cache.peek(key)
+                if old is None:
+                    return None
                 plan = compile_plan_cached(self.db.schema,
                                            LatticePoint(key[2]),
                                            tuple(key[3]))
-            elif ns == "full" and key[1] == ex.name:
+                return "pos", (old, plan)
+            if ns == "full" and key[1] == ex.name:
                 old = self.cache.peek(key)
-                plan = self.plan(LatticePoint(key[2]), None)
-            elif ns == "msg" and key[1] == ex.name:
-                return self._delta_update_msg(key, delta_db, sign)
-            else:
-                return None, None
+                if old is None:
+                    return None
+                return "pos", (old, self.plan(LatticePoint(key[2]), None))
+            if ns == "msg" and key[1] == ex.name:
+                return "msg", ()
+            if ns in ("fam", "complete"):
+                return "fam", (LatticePoint(key[1]), tuple(key[2]))
         except (KeyError, ValueError, TypeError):
-            return None, None          # unplannable key: drop instead
-        if old is None:
-            return None, None
-        with self.stats.timer("positive"), ex.local_mode():
-            dtab = ex.positive(delta_db, plan, self.stats)
-        new = old + dtab.scale(sign)
-        return new, new.nbytes
+            pass
+        return None
 
     def _delta_update_msg(self, key: Tuple, delta_db: RelationalDB,
                           sign: int) -> Tuple[Optional[object],
@@ -333,6 +471,37 @@ class CountingEngine:
             return None, None          # layout drifted: drop instead
         new_m = m + sign * dm
         return (new_m, tuple(mvars)), int(new_m.nbytes)
+
+
+class _DeltaPositives:
+    """Positive provider over a delta view, for
+    :func:`~repro.core.mobius.complete_ct_delta_many`: contractions hit
+    the delta edges only (exact per-block deltas, by multilinearity) while
+    histograms serve FULL values through the engine's cache (the delta
+    view shares the entity tables, so full histograms are exactly the
+    unchanged factors of the delta's product form).  Results memoise
+    per-call only — delta-view positives must never land in the real
+    cache."""
+
+    def __init__(self, engine: CountingEngine, delta_db: RelationalDB):
+        self.engine = engine
+        self.delta_db = delta_db
+        self._memo: Dict[Tuple, CtTable] = {}
+
+    def positive(self, point: LatticePoint,
+                 keep: Tuple[CtVar, ...]) -> CtTable:
+        key = (point.atoms, tuple(keep))
+        hit = self._memo.get(key)
+        if hit is None:
+            eng = self.engine
+            plan = compile_plan_cached(eng.db.schema, point, tuple(keep))
+            with eng.stats.timer("positive"), eng.executor.local_mode():
+                hit = eng.executor.positive(self.delta_db, plan, eng.stats)
+            self._memo[key] = hit
+        return hit
+
+    def hist(self, var: Var, keep: Tuple[CtVar, ...]) -> CtTable:
+        return self.engine.hist(var, keep)
 
 
 class _Policy:

@@ -120,11 +120,13 @@ class Strategy:
 
     def _complete_full(self, point: LatticePoint) -> CtTable:
         """Complete (positive+negative) table over *all* axes of a point —
-        the PRECOUNT global ct.  Cached; recomputed if evicted."""
-        key = ("complete", frozenset(point.rels))
+        the PRECOUNT global ct.  Cached; recomputed if evicted.  Keyed by
+        ``(atoms, keep)`` so the delta path can reconstruct the exact
+        query and push butterfly deltas onto the resident table."""
+        keep = tuple(point.all_ct_vars(self.db.schema, include_rind=True))
+        key = ("complete", point.atoms, keep)
         hit = self.engine.cache.get(key)
         if hit is None:
-            keep = point.all_ct_vars(self.db.schema, include_rind=True)
             hit = self._timed_complete(point, keep)
             if key not in self._rows_counted:    # once per point, not per
                 self._rows_counted.add(key)      # eviction recompute

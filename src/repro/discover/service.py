@@ -43,7 +43,7 @@ import threading
 from dataclasses import dataclass, field
 from typing import Dict, FrozenSet, Iterable, Optional, Tuple, Union
 
-from ..core.database import FactDelta, RelationalDB
+from ..core.database import AttrDelta, FactDelta, RelationalDB
 from ..core.search import BNModel, Family, StructureSearch
 from ..core.variables import LatticePoint, build_lattice
 from ..obs.hist import CountHistogram, LatencyHistogram
@@ -160,7 +160,8 @@ class _MemoView:
             self._svc._memo[(self._token, key)] = value
 
 
-ChangedSpec = Union[str, FactDelta, Iterable[Union[str, FactDelta]]]
+ChangedSpec = Union[str, FactDelta, AttrDelta,
+                    Iterable[Union[str, FactDelta, AttrDelta]]]
 
 
 class DiscoveryService:
@@ -282,12 +283,17 @@ class DiscoveryService:
         """Selectively re-learn after committed writes.
 
         ``changed`` names the mutated relation(s) — a relation name, a
-        :class:`FactDelta`, or an iterable of either.  Scores of families
-        whose dependency sets are disjoint from ``changed`` are carried
-        forward to the new version token; every other family is re-scored
-        lazily as the hill-climb touches it — that selective re-counting
-        is where the savings live, since counting (not move enumeration)
-        is the search bottleneck.
+        :class:`FactDelta`, an :class:`~repro.core.database.AttrDelta`,
+        or an iterable of any mix.  Scores of families whose dependency
+        sets are disjoint from ``changed`` are carried forward to the new
+        version token; every other family is re-scored lazily as the
+        hill-climb touches it — that selective re-counting is where the
+        savings live, since counting (not move enumeration) is the search
+        bottleneck.  An :class:`AttrDelta` anywhere in ``changed``
+        disables carry-forward entirely (conservative full rescore):
+        family dependency sets record relation names, and almost every
+        family's sufficient statistics depend on entity attributes, so
+        no selective match is sound for attribute writes.
 
         With ``warm_start=False`` (default) the climb restarts from the
         empty graph over the warm memo, which makes the refreshed model
@@ -300,8 +306,9 @@ class DiscoveryService:
         an edge in one step, so the result may be a different (equally
         local) optimum than a full relearn.
         """
-        rels = self._changed_rels(changed)
-        with self.tracer.span("discover.refresh", changed=sorted(rels)):
+        rels, attr_write = self._split_changed(changed)
+        with self.tracer.span("discover.refresh", changed=sorted(rels),
+                              attr_write=attr_write):
             if self._models is None:      # nothing to refresh from
                 result = self.discover()
                 report = RefreshReport(changed=rels,
@@ -315,7 +322,8 @@ class DiscoveryService:
                 return report
 
             new_token = self.provider.version()
-            retained = self._carry_forward(new_token, rels)
+            retained = self._carry_forward(new_token,
+                                           None if attr_write else rels)
             init = self._models if warm_start else None
             models, token, scored, restarts = self._run_stable(init)
         with self._lock:
@@ -349,21 +357,38 @@ class DiscoveryService:
 
     # -- refresh plumbing -----------------------------------------------------
     @staticmethod
-    def _changed_rels(changed: ChangedSpec) -> FrozenSet[str]:
+    def _split_changed(changed: ChangedSpec
+                       ) -> Tuple[FrozenSet[str], bool]:
+        """Normalise a changed-spec into ``(relation names, any
+        attribute write?)``.  Attribute writes are reported as
+        ``attr:etype.name`` strings in the relation set (for the refresh
+        report) but carry-forward treats them as change-everything."""
         if isinstance(changed, str):
-            return frozenset((changed,))
+            return frozenset((changed,)), False
         if isinstance(changed, FactDelta):
-            return frozenset((changed.rel,))
-        rels = set()
+            return frozenset((changed.rel,)), False
+        if isinstance(changed, AttrDelta):
+            return frozenset(f"attr:{changed.etype}.{a}"
+                             for a in changed.attrs), True
+        rels, has_attr = set(), False
         for item in changed:
-            rels.add(item.rel if isinstance(item, FactDelta) else str(item))
-        return frozenset(rels)
+            if isinstance(item, AttrDelta):
+                has_attr = True
+                rels.update(f"attr:{item.etype}.{a}" for a in item.attrs)
+            elif isinstance(item, FactDelta):
+                rels.add(item.rel)
+            else:
+                rels.add(str(item))
+        return frozenset(rels), has_attr
 
     def _carry_forward(self, new_token: Tuple,
-                       changed: FrozenSet[str]) -> int:
+                       changed: Optional[FrozenSet[str]]) -> int:
         """Move scores whose dependencies are disjoint from ``changed``
         from the previous model's token to ``new_token``; drop everything
-        else (it will be re-scored lazily).  A private memo is rebuilt
+        else (it will be re-scored lazily).  ``changed=None`` means
+        *everything* changed (an attribute write): nothing is carried
+        forward, old-token entries are still dropped/rebuilt so the memo
+        does not leak.  A private memo is rebuilt
         into a fresh dict and swapped atomically so concurrent readers
         only ever see a complete mapping; a SHARED memo is edited in
         place instead — other sharers' tokens (other tenants') are
@@ -381,7 +406,8 @@ class DiscoveryService:
                     if tok != old_token:
                         continue
                     deps = self._deps.get(fam)
-                    if deps is not None and not (deps & changed):
+                    if (changed is not None and deps is not None
+                            and not (deps & changed)):
                         moves.append(((new_token, fam), s))
                     drops.append((tok, fam))
                 for k in drops:
@@ -395,7 +421,8 @@ class DiscoveryService:
                     memo[(tok, fam)] = s
                 elif tok == old_token:
                     deps = self._deps.get(fam)
-                    if deps is not None and not (deps & changed):
+                    if (changed is not None and deps is not None
+                            and not (deps & changed)):
                         memo[(new_token, fam)] = s
                         retained += 1
             self._memo = memo

@@ -162,6 +162,7 @@ class ServiceMetrics(_LockedMetrics):
     enqueued: int = 0             # entered the request queue
     admitted: int = 0             # passed the tenant admission gate
     shed: int = 0                 # rejected by admission policy "shed"
+    rate_limited: int = 0         # over the token-bucket rate (shed or slept)
     throttled: int = 0            # forced drains by admission policy "queue"
     flushes: int = 0              # scheduler drains (any trigger)
     size_flushes: int = 0        # triggered by a bucket hitting max_batch_size

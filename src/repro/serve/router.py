@@ -993,6 +993,52 @@ class CountingRouter:
         """Convenience for :meth:`apply_delta` with ``op="delete"``."""
         return self.apply_delta(rel, src, dst, op="delete", **kw)
 
+    def update_attrs(self, etype: str, rows, attrs,
+                     **kw) -> List[Optional[DeltaReport]]:
+        """Apply one entity-attribute write batch to the sharded store and
+        reconcile every shard's cache, fenced across ALL shard services —
+        the attribute analogue of :meth:`apply_delta`.
+
+        Entity tables are REPLICATED (shared arrays across shards), so the
+        write lands once and every shard's cache is reconciled against its
+        own :class:`~repro.core.database.AttrDelta` stamp: entries whose
+        dependency tags intersect the written ``(etype, attr)`` pairs are
+        invalidated, everything else stays resident.  The router's own
+        merged-result cache is epoch-invalidated.
+
+        Args:
+            etype: entity type name.
+            rows / attrs: the row ids and per-attribute new values (see
+                :meth:`~repro.core.database.RelationalDB.update_attrs`).
+            **kw: forwarded to the engines' :meth:`~repro.core.engine
+                .CountingEngine.apply_delta`.
+
+        Returns:
+            One :class:`~repro.core.engine.DeltaReport` (or ``None``) per
+            shard, aligned with the shard list at application time.
+
+        Usage::
+
+            router.update_attrs("user", rows, {"age": new_ages})
+        """
+        with self._mutate_lock:
+            sdb, services, engines, _ = self._snapshot()
+            with self._submit_gate:
+                with ExitStack() as fences:
+                    # entity tables are shared arrays: nothing may be
+                    # mid-batch while attribute columns move underneath
+                    for svc in services:
+                        fences.enter_context(svc.fence())
+                    for svc in services:
+                        svc.flush()        # re-entrant: fence locks held
+                    deltas = sdb.update_attrs(etype, rows, attrs)
+                    reports = [svc.apply_delta(d, **kw) if d is not None
+                               else None
+                               for svc, d in zip(services, deltas)]
+                self.invalidate()
+            self.metrics.inc(deltas=1)
+        return reports
+
     def rebalance(self, shard_id: int) -> int:
         """Split one shard online: re-partition its relationship tables
         onto a NEW shard (half its hash buckets move — see

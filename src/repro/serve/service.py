@@ -58,7 +58,6 @@ import numpy as np
 
 from ..core.cache import DEFAULT_TENANT
 from ..core.ct import CtTable
-from ..core.database import FactDelta
 from ..core.engine import CountingEngine, DeltaReport, OnDemandPositives
 from ..core.plan import ContractionPlan
 from ..core.variables import CtVar, LatticePoint
@@ -80,6 +79,43 @@ class TenantAdmissionError(RuntimeError):
     already has ``admission_max`` queries pending and its policy is
     ``"shed"``.  The client should back off and retry; other tenants'
     services are unaffected."""
+
+
+class _TokenBucket:
+    """Per-tenant token bucket: ``capacity`` tokens, refilled continuously
+    at ``capacity / window_s`` tokens per second.  One token buys one
+    *admitted* query (cache hits and coalesces are free — they cost the
+    pool nothing).  Thread-safe; the clock is injectable for tests."""
+
+    def __init__(self, capacity: int, window_s: float,
+                 clock: Callable[[], float] = time.monotonic):
+        if capacity < 1:
+            raise ValueError("rate_limit capacity must be >= 1")
+        if window_s <= 0:
+            raise ValueError("rate_limit window must be > 0 seconds")
+        self.capacity = float(capacity)
+        self.rate = capacity / float(window_s)
+        self.clock = clock
+        self._tokens = float(capacity)
+        self._stamp = clock()
+        self._lock = threading.Lock()
+
+    def acquire(self) -> float:
+        """Take one token if available.
+
+        Returns:
+            ``0.0`` on success, else the seconds until a token will have
+            accrued (no token is consumed on failure).
+        """
+        with self._lock:
+            now = self.clock()
+            self._tokens = min(self.capacity, self._tokens
+                               + (now - self._stamp) * self.rate)
+            self._stamp = now
+            if self._tokens >= 1.0:
+                self._tokens -= 1.0
+                return 0.0
+            return (1.0 - self._tokens) / self.rate
 
 
 class _Pending:
@@ -259,10 +295,17 @@ class CountingService:
             drains the tenant's own queue inline on the flooding thread
             (bounded depth, no rejection), ``"shed"`` raises
             :class:`TenantAdmissionError` (load shedding).
+        rate_limit: per-tenant sustained-rate bound as ``(n, window_s)`` —
+            a token bucket admitting at most ``n`` NEW queries per
+            ``window_s`` seconds with bursts up to ``n`` (``None``
+            disables it).  Cache hits and coalesces are free.  Over-rate
+            submits follow ``admission_policy``: ``"shed"`` raises
+            :class:`TenantAdmissionError`, ``"queue"`` sleeps the
+            flooding thread (off-lock) until a token accrues.
 
     Raises:
-        ValueError: ``max_batch_size < 1`` or an unknown
-            ``admission_policy``.
+        ValueError: ``max_batch_size < 1``, an unknown
+            ``admission_policy``, or a non-positive ``rate_limit``.
 
     Usage::
 
@@ -281,7 +324,8 @@ class CountingService:
                  tracer: Optional[NullTracer] = None,
                  tenant: str = DEFAULT_TENANT,
                  admission_max: Optional[int] = None,
-                 admission_policy: str = "queue"):
+                 admission_policy: str = "queue",
+                 rate_limit: Optional[Tuple[int, float]] = None):
         if max_batch_size < 1:
             raise ValueError("max_batch_size must be >= 1")
         if admission_policy not in ("queue", "shed"):
@@ -291,6 +335,9 @@ class CountingService:
         self.tenant = tenant
         self.admission_max = admission_max
         self.admission_policy = admission_policy
+        self.rate_limit = rate_limit
+        self._rate_bucket = (_TokenBucket(*rate_limit)
+                             if rate_limit is not None else None)
         self.max_batch_size = max_batch_size
         self.max_wait_s = max_wait_s
         self.max_in_flight = max_in_flight
@@ -408,69 +455,123 @@ class CountingService:
                  trace_ctx: Optional[SpanContext] = None) -> CountTicket:
         to_execute: List[_Pending] = []
         tr = self.tracer
-        with self._lock:
-            if self._shut_down:
-                raise ServiceShutdown("submit on a shut-down service")
-            self.metrics.inc(requests=1, complete_requests=int(complete))
-            if sink is None:
-                cache_key = (self._complete_key(point, keep_t) if complete
-                             else self._cache_key(point, keep_t))
-                hit = self.engine.cache.get(cache_key)
-                if hit is not None:
-                    self.metrics.inc(cache_hits=1)
-                    return CountTicket(self, result=hit)
-            req_key = ("complete" if complete else "pos",
-                       point.atoms, keep_t)
-            entry = self._pending.get(req_key)
-            if entry is not None:
-                if sink is not None:
-                    entry.sinks.append(sink)
+        counted = False          # the requests counter moves once, not per
+        while True:              # rate-limit retry
+            retry_in = 0.0
+            with self._lock:
+                if self._shut_down:
+                    raise ServiceShutdown("submit on a shut-down service")
+                if not counted:
+                    self.metrics.inc(requests=1,
+                                     complete_requests=int(complete))
+                    counted = True
+                if sink is None:
+                    cache_key = (self._complete_key(point, keep_t) if complete
+                                 else self._cache_key(point, keep_t))
+                    hit = self.engine.cache.get(cache_key)
+                    if hit is not None:
+                        self.metrics.inc(cache_hits=1)
+                        return CountTicket(self, result=hit)
+                req_key = ("complete" if complete else "pos",
+                           point.atoms, keep_t)
+                entry = self._pending.get(req_key)
+                if entry is not None:
+                    if sink is not None:
+                        entry.sinks.append(sink)
+                    else:
+                        entry.cache_result = True
+                    self.metrics.inc(coalesced=1)
+                    if tr.enabled:
+                        tr.event("service.coalesced", parent=trace_ctx,
+                                 atoms=point.atoms, tenant=self.tenant)
+                    return CountTicket(self, entry=entry)
+                # per-tenant rate gate: the token bucket bounds this
+                # tenant's SUSTAINED admission rate, on top of the depth
+                # bound below.  A failed acquire consumes nothing; the
+                # over-rate submit sheds or sleeps per admission_policy.
+                if self._rate_bucket is not None:
+                    retry_in = self._rate_bucket.acquire()
+                    if retry_in > 0.0:
+                        self.metrics.inc(rate_limited=1)
+                        if self.admission_policy == "shed":
+                            self.metrics.inc(shed=1)
+                            if tr.enabled:
+                                tr.event("service.shed", parent=trace_ctx,
+                                         atoms=point.atoms,
+                                         tenant=self.tenant,
+                                         rate_limit=self.rate_limit)
+                            raise TenantAdmissionError(
+                                f"tenant {self.tenant!r}: rate limit of "
+                                f"{self.rate_limit[0]} queries per "
+                                f"{self.rate_limit[1]}s exceeded")
+                        if tr.enabled:
+                            tr.event("service.rate_limited",
+                                     parent=trace_ctx, tenant=self.tenant,
+                                     retry_in=retry_in)
+                if retry_in > 0.0:
+                    # fall through to the off-lock sleep below, then retry
+                    # the whole gate sequence (the query may coalesce or
+                    # cache-hit by then — both free)
+                    pass
                 else:
-                    entry.cache_result = True
-                self.metrics.inc(coalesced=1)
-                if tr.enabled:
-                    tr.event("service.coalesced", parent=trace_ctx,
-                             atoms=point.atoms, tenant=self.tenant)
-                return CountTicket(self, entry=entry)
-            # per-tenant admission gate: layered UNDER max_in_flight (which
-            # protects the pool) — this bound protects the pool FROM one
-            # tenant.  Coalesces and cache hits never consume a slot.
-            admission_over = (self.admission_max is not None
-                              and len(self._pending) >= self.admission_max)
-            if admission_over and self.admission_policy == "shed":
-                self.metrics.inc(shed=1)
-                if tr.enabled:
-                    tr.event("service.shed", parent=trace_ctx,
-                             atoms=point.atoms, tenant=self.tenant,
-                             bound=self.admission_max)
-                raise TenantAdmissionError(
-                    f"tenant {self.tenant!r}: admission bound of "
-                    f"{self.admission_max} pending queries exceeded")
-            entry = _Pending(point, keep_t, plan, complete)
-            entry.trace_ctx = trace_ctx
-            entry.cache_result = sink is None
-            if sink is not None:
-                entry.sinks.append(sink)
-            self._pending[req_key] = entry
-            self._by_sig.setdefault(entry.sig, []).append(req_key)
-            self._pending_bytes += self._estimate_bytes(plan)
-            self.metrics.inc(enqueued=1, admitted=1)
-            ticket = CountTicket(self, entry=entry)
-            if admission_over:
-                # "queue" policy: the flooding tenant pays for its own
-                # drain inline, holding its pending depth at the bound
-                # (overrides defer_drains, like backpressure does)
-                self.metrics.inc(throttled=1)
-                if tr.enabled:
-                    tr.event("service.flush", trigger="admission",
-                             tenant=self.tenant)
-                to_execute = self._drain_all()
-            else:
-                to_execute = self._drain_triggered(entry)
-            self._wake.notify_all()      # dispatcher re-arms its deadline
+                    ticket, to_execute = self._admit(
+                        req_key, point, keep_t, plan, sink, complete,
+                        trace_ctx)
+            if retry_in == 0.0:
+                break
+            # "queue" policy, over rate: sleep OFF the lock (other tenants'
+            # submits keep flowing), then retry from the top
+            time.sleep(retry_in)
         if to_execute:       # run OUTSIDE the lock: submits keep flowing
             self._execute(to_execute)
         return ticket
+
+    def _admit(self, req_key: Tuple, point: LatticePoint,
+               keep_t: Tuple[CtVar, ...], plan: ContractionPlan,
+               sink: Optional[Sink], complete: bool,
+               trace_ctx: Optional[SpanContext]
+               ) -> Tuple[CountTicket, List[_Pending]]:
+        """Admission gate + queue insertion for one NEW query (queue lock
+        held by the caller).  Returns the ticket and whatever the dispatch
+        triggers say must now execute (outside the lock)."""
+        tr = self.tracer
+        # per-tenant admission gate: layered UNDER max_in_flight (which
+        # protects the pool) — this bound protects the pool FROM one
+        # tenant.  Coalesces and cache hits never consume a slot.
+        admission_over = (self.admission_max is not None
+                          and len(self._pending) >= self.admission_max)
+        if admission_over and self.admission_policy == "shed":
+            self.metrics.inc(shed=1)
+            if tr.enabled:
+                tr.event("service.shed", parent=trace_ctx,
+                         atoms=point.atoms, tenant=self.tenant,
+                         bound=self.admission_max)
+            raise TenantAdmissionError(
+                f"tenant {self.tenant!r}: admission bound of "
+                f"{self.admission_max} pending queries exceeded")
+        entry = _Pending(point, keep_t, plan, complete)
+        entry.trace_ctx = trace_ctx
+        entry.cache_result = sink is None
+        if sink is not None:
+            entry.sinks.append(sink)
+        self._pending[req_key] = entry
+        self._by_sig.setdefault(entry.sig, []).append(req_key)
+        self._pending_bytes += self._estimate_bytes(plan)
+        self.metrics.inc(enqueued=1, admitted=1)
+        ticket = CountTicket(self, entry=entry)
+        if admission_over:
+            # "queue" policy: the flooding tenant pays for its own
+            # drain inline, holding its pending depth at the bound
+            # (overrides defer_drains, like backpressure does)
+            self.metrics.inc(throttled=1)
+            if tr.enabled:
+                tr.event("service.flush", trigger="admission",
+                         tenant=self.tenant)
+            to_execute = self._drain_all()
+        else:
+            to_execute = self._drain_triggered(entry)
+        self._wake.notify_all()      # dispatcher re-arms its deadline
+        return ticket, to_execute
 
     def count(self, point: LatticePoint,
               keep: Optional[Sequence[CtVar]] = None) -> CtTable:
@@ -582,19 +683,20 @@ class CountingService:
         with self._lock, self._exec_lock:
             yield self
 
-    def apply_delta(self, delta: Optional[FactDelta] = None, *,
-                    mutate: Optional[Callable[[], Optional[FactDelta]]] = None,
+    def apply_delta(self, delta=None, *,
+                    mutate: Optional[Callable[[], object]] = None,
                     **kw) -> Optional[DeltaReport]:
         """Apply one store mutation and reconcile the engine's cache,
         fenced against in-flight buckets (the version bump never tears a
         running batch, and no submit can read a stale entry in between).
 
         Args:
-            delta: a :class:`~repro.core.database.FactDelta` already
-                applied to the engine's database — pass it when the
-                mutation itself happened elsewhere (e.g. the router
-                mutated a :class:`~repro.core.database.ShardedDatabase`
-                under this service's fence).
+            delta: a :class:`~repro.core.database.FactDelta` or
+                :class:`~repro.core.database.AttrDelta` already applied
+                to the engine's database — pass it when the mutation
+                itself happened elsewhere (e.g. the router mutated a
+                :class:`~repro.core.database.ShardedDatabase` under this
+                service's fence).
             mutate: alternatively, a thunk that performs the mutation and
                 returns the delta; it runs INSIDE the fence (this is what
                 :meth:`insert_facts` / :meth:`delete_facts` use).
@@ -644,6 +746,23 @@ class CountingService:
         """
         return self.apply_delta(
             mutate=lambda: self.engine.db.delete_facts(rel, src, dst), **kw)
+
+    def update_attrs(self, etype: str, rows, attrs,
+                     **kw) -> Optional[DeltaReport]:
+        """Fenced convenience: :meth:`~repro.core.database.RelationalDB
+        .update_attrs` (entity-attribute writes) + cache reconcile, as one
+        atomic step.  Entries whose dependency stamps intersect the
+        written ``(etype, attr)`` pairs are invalidated; everything else
+        is retained untouched (see :meth:`~repro.core.engine
+        .CountingEngine.apply_delta`).
+
+        Usage::
+
+            svc.update_attrs("user", rows, {"age": new_ages})
+        """
+        return self.apply_delta(
+            mutate=lambda: self.engine.db.update_attrs(etype, rows, attrs),
+            **kw)
 
     def prefetch(self, policy, queries: Sequence[Tuple[LatticePoint,
                                                        Tuple[CtVar, ...]]]

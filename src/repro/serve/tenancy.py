@@ -160,6 +160,7 @@ class TenantRegistry:
                    cache_cap_bytes: Optional[int] = None,
                    admission_max: Optional[int] = None,
                    admission_policy: str = "queue",
+                   rate_limit: Optional[Tuple[int, float]] = None,
                    **overrides) -> Tenant:
         """Register a logical database under ``tenant_id``.
 
@@ -179,6 +180,11 @@ class TenantRegistry:
             admission_policy: ``"queue"`` (flooder drains its own queue
                 inline) or ``"shed"`` (raise
                 :class:`~repro.serve.service.TenantAdmissionError`).
+            rate_limit: per-tenant token bucket ``(n, window_s)`` — at
+                most ``n`` newly admitted queries per ``window_s``
+                seconds, enforced per ``admission_policy`` (see
+                :class:`~repro.serve.service.CountingService`); ``None``
+                disables it.
             **overrides: per-tenant overrides of the registry's service
                 keywords (``max_in_flight``, ``max_pending_bytes``, ...).
 
@@ -217,6 +223,7 @@ class TenantRegistry:
                                   tracer=self.tracer, tenant=tenant_id,
                                   admission_max=admission_max,
                                   admission_policy=admission_policy,
+                                  rate_limit=rate_limit,
                                   **svc_kw)
             tenant = Tenant(tenant_id, db, engine=eng, service=svc)
         with self._lock:
@@ -280,6 +287,14 @@ class TenantRegistry:
         and tenant-prefixed version tokens buy)."""
         fe = self.tenant(tenant_id).frontend
         return fe.insert_facts(rel, src, dst, attrs, **kw)
+
+    def update_attrs(self, tenant_id: str, etype: str, rows, attrs, **kw):
+        """Write entity attributes into ONE tenant's database, fenced and
+        reconciled like :meth:`apply_delta` — entries of OTHER tenants
+        sharing the pool are untouched (their scoped cache views carry
+        different tenant tags)."""
+        fe = self.tenant(tenant_id).frontend
+        return fe.update_attrs(etype, rows, attrs, **kw)
 
     def discovery(self, tenant_id: str, **kwargs):
         """The tenant's model-discovery service, sharing the fleet-wide

@@ -33,6 +33,7 @@ from repro.core.engine import OnDemandPositives, key_deps
 from repro.core.executors import EXECUTORS
 from repro.core.oracle import oracle_ct
 from repro.core.strategies import STRATEGIES
+from repro.core.variables import LatticePoint
 from repro.serve import CountingRouter, CountingService
 from tests.test_serve import mixed_db
 
@@ -69,6 +70,19 @@ def random_delete(db, rel, k, rng):
         return None
     pick = rng.choice(tab.num_edges, size=k, replace=False)
     return db.delete_facts(rel, tab.src[pick].copy(), tab.dst[pick].copy())
+
+
+def random_attr_write(db, etype, k, rng):
+    """Overwrite ``k`` random rows of one random attribute of ``etype``."""
+    tab = db.entities[etype]
+    specs = [a for a in tab.type.attrs]
+    if not specs or tab.size == 0:
+        return None
+    a = specs[int(rng.integers(len(specs)))]
+    k = min(k, tab.size)
+    rows = rng.choice(tab.size, size=k, replace=False).astype(np.int32)
+    vals = rng.integers(0, a.card, size=k).astype(tab.attrs[a.name].dtype)
+    return db.update_attrs(etype, rows, {a.name: vals})
 
 
 # ------------------------------------------------------ versioned store ----
@@ -129,12 +143,14 @@ def test_delta_view_is_linear():
 
 @pytest.mark.parametrize("sname,ex", ALL_COMBOS)
 def test_interleaved_mutations_match_oracle(sname, ex):
-    """Random interleavings of inserts/deletes and family queries stay
-    oracle-exact for every strategy × executor (``sparse_sharded`` runs
-    on the in-process 1-device mesh, exercising its delta/local paths)."""
+    """Random interleavings of inserts/deletes/attribute writes and
+    family queries stay oracle-exact for every strategy × executor
+    (``sparse_sharded`` runs on the in-process 1-device mesh, exercising
+    its delta/local paths)."""
     db = mixed_db()
     lattice = build_lattice(db.schema, 2)
     rels = sorted(db.relations)
+    etypes = sorted(db.entities)
     points = lattice[:2] + lattice[-2:]
     rng = np.random.default_rng(hash((sname, ex)) % (2 ** 32))
     st = make_strategy(sname, executor=ex)
@@ -155,11 +171,18 @@ def test_interleaved_mutations_match_oracle(sname, ex):
                         f"keep={[str(v) for v in keep]}")
 
     check_all()                                  # warm the caches
-    for step in range(6):
-        rel = rels[int(rng.integers(len(rels)))]
-        if rng.random() < 0.5 and db.relations[rel].num_edges > 3:
+    for step in range(7):
+        roll = rng.random()
+        if roll < 0.25:
+            etype = etypes[int(rng.integers(len(etypes)))]
+            delta = random_attr_write(db, etype, int(rng.integers(1, 4)),
+                                      rng)
+        elif roll < 0.6 \
+                and db.relations[(rel := rels[int(rng.integers(len(rels)))])
+                                 ].num_edges > 3:
             delta = random_delete(db, rel, int(rng.integers(1, 4)), rng)
         else:
+            rel = rels[int(rng.integers(len(rels)))]
             delta = random_insert(db, rel, int(rng.integers(1, 4)), rng)
         if delta is not None:
             st.apply_delta(delta)
@@ -177,6 +200,94 @@ def test_stale_delta_application_rejected():
     random_insert(db, "R0", 2, rng)              # second, unreconciled write
     with pytest.raises(ValueError):
         st.apply_delta(d1)                       # out of order: cross terms
+
+
+def test_stale_attr_delta_application_rejected():
+    db = mixed_db()
+    rng = np.random.default_rng(21)
+    st = make_strategy("HYBRID", executor="sparse")
+    st.prepare(db, build_lattice(db.schema, 1))
+    d1 = random_attr_write(db, "A", 2, rng)
+    random_attr_write(db, "A", 2, rng)           # second, unreconciled write
+    with pytest.raises(ValueError):
+        st.apply_delta(d1)                       # out of order
+
+
+@pytest.mark.parametrize("sname", sorted(STRATEGIES))
+def test_small_delta_retains_or_updates_fam_and_complete(sname):
+    """The tentpole acceptance property: after a small fact delta, every
+    resident ``"fam"``/``"complete"`` entry is retained (zero-delta
+    relation) or updated IN PLACE through the butterfly delta — never
+    invalidated — and each is bit-exact against a flush-and-recount on a
+    fresh engine over the mutated store."""
+    db = mixed_db()
+    lattice = build_lattice(db.schema, 2)
+    rng = np.random.default_rng(hash(sname) % (2 ** 32))
+    st = make_strategy(sname, executor="sparse")
+    st.prepare(db, lattice)
+    for p in lattice:                            # warm the family memos
+        st.family_ct(p, tuple(p.all_ct_vars(db.schema, include_rind=True)))
+    cache = st.engine.cache
+    fam_keys = [k for k in cache.keys_snapshot()
+                if k[0] in ("fam", "complete")]
+    assert fam_keys
+    report = st.apply_delta(random_insert(db, "R0", 2, rng))
+    assert report.invalidated == 0, report
+    assert report.updated > 0
+    # every previously resident family entry is still resident ...
+    survivors = set(cache.keys_snapshot())
+    assert set(fam_keys) <= survivors
+    # ... and bit-exact vs a flush-and-recount on the mutated store
+    fresh = make_strategy(sname, executor="sparse")
+    fresh.prepare(db, lattice)
+    for key in fam_keys:
+        point = LatticePoint(key[1])
+        keep = tuple(key[2])
+        want = fresh.family_ct(point, keep) if key[0] == "fam" \
+            else fresh._complete_full(point)
+        got = cache.peek(key)
+        assert got is not None
+        np.testing.assert_allclose(np.asarray(got.counts),
+                                   np.asarray(want.counts), atol=1e-3,
+                                   err_msg=f"{sname} {key[0]} {point}")
+
+
+def test_attr_write_invalidates_only_dependent_entries():
+    """An attribute write sweeps exactly the entries whose dependency
+    stamps intersect the written ``(etype, attr)`` tags; everything else
+    stays resident and oracle-exact afterwards."""
+    db = mixed_db()
+    lattice = build_lattice(db.schema, 2)
+    st = make_strategy("HYBRID", executor="sparse")
+    st.prepare(db, lattice)
+    for p in lattice:
+        st.family_ct(p, tuple(p.all_ct_vars(db.schema, include_rind=True)))
+    cache = st.engine.cache
+    before = set(cache.keys_snapshot())
+    rows = np.array([0, 1], np.int32)
+    a_attr = db.entities["A"].type.attrs[0]
+    vals = ((db.entities["A"].attrs[a_attr.name][rows] + 1)
+            % a_attr.card).astype(db.entities["A"].attrs[a_attr.name].dtype)
+    delta = db.update_attrs("A", rows, {a_attr.name: vals})
+    tags = delta.dep_tags()
+    report = st.apply_delta(delta)
+    assert report.op == "update_attrs"
+    after = set(cache.keys_snapshot())
+    for key in before:
+        deps = key_deps(key)
+        if deps is not None and not (deps & tags):
+            assert key in after, key             # disjoint deps: retained
+        else:
+            assert key not in after, key         # dependent: invalidated
+    assert report.retained == sum(
+        1 for k in before
+        if (key_deps(k) is not None and not (key_deps(k)
+                                             & tags)))
+    for p in lattice:                            # recomputes are exact
+        keep = tuple(p.all_ct_vars(db.schema, include_rind=True))
+        np.testing.assert_allclose(
+            np.asarray(st.family_ct(p, keep).counts),
+            oracle_ct(db, p, keep), atol=1e-3, err_msg=str(p))
 
 
 # ----------------------------------------- fine-grained invalidation ----
@@ -219,9 +330,16 @@ def test_entries_are_version_and_deps_stamped():
         assert deps == key_deps(key)
         assert version == 0
         if key[0] == "hist":
-            assert deps == frozenset()
+            # real deps now: the kept attribute columns, never a relation
+            # (histograms stay immune to fact deltas)
+            assert not any(isinstance(d, str) for d in deps)
+            assert all(d[0] == "attr" for d in deps)
         elif key[0] == "full":
-            assert deps and deps <= set(db.relations)
+            # relation names + the ("attr*", etype) wildcard per pattern
+            # variable (full resolution reads every column of each type)
+            rels = {d for d in deps if isinstance(d, str)}
+            assert rels and rels <= set(db.relations)
+            assert all(t[0] == "attr*" for t in deps - rels)
     rng = np.random.default_rng(4)
     st.apply_delta(random_insert(db, "R0", 1, rng))
     updated = [k for k in cache.keys_snapshot()
